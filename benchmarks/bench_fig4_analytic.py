@@ -1,0 +1,30 @@
+"""Paper Fig. 4: BPS / #splits / memory / #GEMMs vs k, per MMU type.
+
+Closed forms from ``repro.core.analytic`` — exact reproduction of all
+four panels, emitted as CSV for the table in EXPERIMENTS.md.
+"""
+from repro.core.analytic import ALL_MMUS, DGEMM_MANTISSA_SPACE
+
+from .common import emit
+
+
+def run():
+    ks = [2 ** e for e in range(11, 21, 3)]
+    for mmu in ALL_MMUS:
+        for k in ks:
+            bps = mmu.bps(k)
+            s = mmu.num_splits(k, DGEMM_MANTISSA_SPACE)
+            mem = mmu.slice_bytes_per_element(k, DGEMM_MANTISSA_SPACE)
+            g = mmu.num_gemms(k, DGEMM_MANTISSA_SPACE)
+            emit(f"fig4/{mmu.name}/k={k}", 0.0,
+                 f"bps={bps};splits={s};bytes_per_elem={mem};gemms={g}")
+    # headline claims (asserted in tests): INT8 memory saving vs FP16
+    for k in ks:
+        fp16 = ALL_MMUS[0].slice_bytes_per_element(k, DGEMM_MANTISSA_SPACE)
+        int8 = ALL_MMUS[2].slice_bytes_per_element(k, DGEMM_MANTISSA_SPACE)
+        emit(f"fig4/int8_mem_saving/k={k}", 0.0,
+             f"saving={1 - int8 / fp16:.2%}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Paper Fig. 6: accuracy vs exponent-distribution width phi.
+
+INT8x{9,11,13} + DGEMM + naive-FP32, errors vs the double-double oracle
+(Eq. 7), for phi in {0.1, 1, 2, 4}. CPU x64 provides the real-FP64 DGEMM
+the paper compares against (TPU itself has no FP64 — DESIGN.md §2).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ozaki import (OzakiConfig, dgemm_f64, gemm_fp32_pass,
+                              ozaki_matmul)
+from repro.core.xmath import dd_matmul_np, rel_error_vs_dd
+
+from .common import emit, phi_matrix, time_fn
+
+
+def run(n: int = 96, k: int = 192):
+    rng = np.random.default_rng(0)
+    for phi in (0.1, 1.0, 2.0, 4.0):
+        a = jnp.asarray(phi_matrix(rng, n, k, phi))
+        b = jnp.asarray(phi_matrix(rng, k, n, phi))
+        hi, lo = dd_matmul_np(np.asarray(a), np.asarray(b))
+
+        def err(c):
+            return float(np.mean(rel_error_vs_dd(np.asarray(c), hi, lo)))
+
+        for s in (9, 11, 13):
+            cfg = OzakiConfig(num_splits=s)
+            us = time_fn(lambda aa=a, bb=b, c=cfg: ozaki_matmul(aa, bb, c))
+            emit(f"fig6/INT8x{s}/phi={phi}", us,
+                 f"mean_rel_err={err(ozaki_matmul(a, b, cfg)):.3e}")
+        emit(f"fig6/DGEMM/phi={phi}", time_fn(dgemm_f64, a, b),
+             f"mean_rel_err={err(dgemm_f64(a, b)):.3e}")
+        emit(f"fig6/FP32/phi={phi}", time_fn(gemm_fp32_pass, a, b),
+             f"mean_rel_err={err(gemm_fp32_pass(a, b)):.3e}")
+
+
+if __name__ == "__main__":
+    run()

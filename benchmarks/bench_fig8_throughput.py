@@ -1,0 +1,70 @@
+"""Paper Fig. 5/8/9: throughput, unit comparison, and time breakdown.
+
+CPU wall-clock comparisons are indicative only; the deployable numbers
+are the TPU v5e roofline models (int8 394 TOPS vs bf16 197 TFLOPS — the
+same 2x unit advantage the paper exploits on Tensor Cores; Fig. 5
+analogue) and the dry-run roofline table (EXPERIMENTS.md §Roofline).
+NVML power (Fig. 8 middle/bottom) is host-specific: reported as the
+analytic energy ratio = ops ratio x (pJ/int8-MAC / pJ/bf16-FMA) ~ 0.25,
+flagged as a hardware adaptation in DESIGN.md §2.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analytic import INT8_INT32, DGEMM_MANTISSA_SPACE
+from repro.core.ozaki import OzakiConfig, dgemm_f64, ozaki_matmul
+from repro.core.splitting import split_int
+from repro.launch.mesh import PEAK_BF16_FLOPS, PEAK_INT8_OPS
+
+from .common import emit, phi_matrix, time_fn
+
+
+def run(n: int = 256):
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(phi_matrix(rng, n, n, 1.0))
+    b = jnp.asarray(phi_matrix(rng, n, n, 1.0))
+    flop = 2.0 * n ** 3
+
+    # --- Fig. 5 analogue: unit throughput ratio on the target hardware
+    emit("fig5/tpu_v5e_unit_ratio", 0.0,
+         f"int8_over_bf16={PEAK_INT8_OPS / PEAK_BF16_FLOPS:.1f}x")
+
+    # --- Fig. 8 top: wall-clock throughput (CPU indicative)
+    for s in (9, 11, 13):
+        cfg = OzakiConfig(num_splits=s)
+        us = time_fn(lambda c=cfg: ozaki_matmul(a, b, c))
+        emit(f"fig8/INT8x{s}/n={n}", us, f"gflops={flop / us / 1e3:.2f}")
+    us = time_fn(dgemm_f64, a, b)
+    emit(f"fig8/DGEMM/n={n}", us, f"gflops={flop / us / 1e3:.2f}")
+
+    # --- Fig. 8 analytic: modeled TPU step time of INT8x9 vs bf16 GEMM
+    s = 9
+    gemms = s * (s + 1) // 2
+    t_int8 = gemms * flop / PEAK_INT8_OPS
+    t_bf16 = flop / PEAK_BF16_FLOPS
+    emit("fig8/model_v5e_int8x9_vs_bf16", 0.0,
+         f"slowdown_vs_bf16={t_int8 / t_bf16:.1f}x;"
+         f"note=TPU_has_no_fp64_alternative")
+    emit("fig8/power_model", 0.0,
+         "energy_ratio_int8x9_vs_fp64_emulation=n/a_on_host;"
+         "analytic=0.25pJ_per_MAC_ratio")
+
+    # --- Fig. 9: time breakdown (split / GEMM / accumulate)
+    cfg = OzakiConfig(num_splits=9)
+    w = cfg.width_for(n)
+    t_split = time_fn(lambda: split_int(a, 9, w))
+    t_total = time_fn(lambda: ozaki_matmul(a, b, cfg))
+    from repro.core.ozaki import _gemm_xla
+    sa = split_int(a, 9, w)
+    sb = split_int(jnp.asarray(b).T, 9, w)
+    t_one_gemm = time_fn(lambda: _gemm_xla(sa.slices[0], sb.slices[0]))
+    t_gemms = t_one_gemm * cfg.num_gemms
+    t_accum = max(t_total - 2 * t_split - t_gemms, 0.0)
+    emit("fig9/split(1,2)", 2 * t_split,
+         f"frac={2 * t_split / t_total:.2f}")
+    emit("fig9/int8_gemm(6)", t_gemms, f"frac={t_gemms / t_total:.2f}")
+    emit("fig9/accumulate(7)", t_accum, f"frac={t_accum / t_total:.2f}")
+
+
+if __name__ == "__main__":
+    run()

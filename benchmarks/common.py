@@ -1,0 +1,32 @@
+"""Shared benchmark utilities: timing, CSV emission, input generators."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time in microseconds (results block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def phi_matrix(rng, m, k, phi) -> np.ndarray:
+    """Paper Eq. (6) input generator."""
+    return (rng.uniform(-0.5, 0.5, (m, k))
+            * np.exp(phi * rng.standard_normal((m, k))))

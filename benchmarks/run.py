@@ -1,0 +1,25 @@
+"""Benchmark aggregator: one section per paper figure/table.
+
+``PYTHONPATH=src python -m benchmarks.run`` prints
+``name,us_per_call,derived`` CSV rows for every benchmark; section
+mapping lives in DESIGN.md §5 and EXPERIMENTS.md.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)   # FP64 oracle + DGEMM baseline
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import (bench_fig4_analytic, bench_fig6_accuracy,
+                   bench_fig7_zerocancel, bench_fig8_throughput,
+                   bench_quantum_sim)
+    bench_fig4_analytic.run()
+    bench_fig6_accuracy.run()
+    bench_fig7_zerocancel.run()
+    bench_fig8_throughput.run()
+    bench_quantum_sim.run()
+
+
+if __name__ == "__main__":
+    main()

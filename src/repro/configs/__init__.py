@@ -1,0 +1,41 @@
+"""Config registry: ``--arch <id>`` resolves through ``get_config``."""
+from __future__ import annotations
+
+import importlib
+
+from .base import (ArchConfig, MoEConfig, SSMConfig, ShapeConfig, SHAPES,
+                   LONG_CONTEXT_ARCHS, cell_is_skipped)
+
+# arch id (CLI) -> module name
+ARCH_MODULES = {
+    "llama3.2-3b": "llama3_2_3b",
+    "minitron-8b": "minitron_8b",
+    "gemma2-9b": "gemma2_9b",
+    "chatglm3-6b": "chatglm3_6b",
+    "internvl2-76b": "internvl2_76b",
+    "zamba2-7b": "zamba2_7b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "musicgen-medium": "musicgen_medium",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "ozimmu-gemm": "ozimmu_gemm",
+}
+
+ALL_ARCHS = tuple(a for a in ARCH_MODULES if a != "ozimmu-gemm")
+
+
+def get_config(arch: str, **overrides):
+    """Load ``CONFIG`` for an arch id; ``overrides`` replace fields."""
+    if arch not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCH_MODULES)}")
+    mod = importlib.import_module(f".{ARCH_MODULES[arch]}", __name__)
+    cfg = mod.CONFIG
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+__all__ = ["ArchConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "SHAPES",
+           "LONG_CONTEXT_ARCHS", "cell_is_skipped", "ARCH_MODULES",
+           "ALL_ARCHS", "get_config"]

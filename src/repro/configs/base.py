@@ -1,0 +1,223 @@
+"""Architecture / shape / run configuration system.
+
+Every assigned architecture is a frozen ``ArchConfig`` in its own module
+(``src/repro/configs/<id>.py``) selectable by ``--arch <id>`` in the
+launchers.  ``reduced()`` derives the CPU smoke-test version of the same
+family (small widths/depths, tiny vocab, few experts).
+
+The paper's contribution enters through ``matmul_precision``:
+
+  * ``"bf16"``       — plain MXU bf16 matmuls (the TPU-native baseline).
+  * ``"int8_quant"`` — inference-style per-channel int8 quantization
+                       (what the IMMUs were built for; lossy).
+  * ``"ozaki_fp64"`` — the paper: FP64-accurate matmul from int8 MXU ops
+                       (error-free Ozaki splitting, df32 accumulation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int            # per-expert hidden width
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    load_balance_coef: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int                # N in Mamba papers
+    d_conv: int = 4
+    expand: int = 2
+    variant: str = "mamba1"     # "mamba1" | "mamba2"
+    headdim: int = 64           # mamba2 SSD head size
+    chunk: int = 256            # mamba2 SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int              # 0 => attention-free
+    num_kv_heads: int
+    d_ff: int                   # dense FFN hidden (0 for moe/ssm-only)
+    vocab_size: int
+    head_dim: int = 0           # 0 => d_model // num_heads
+
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+
+    # --- attention pattern ---------------------------------------------
+    sliding_window: int = 0         # >0: width of local-attention layers
+    local_global_period: int = 0    # gemma2: every p-th layer is global
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    rope_style: str = "standard"    # standard | partial2d (chatglm) | none
+    rope_theta: float = 10000.0
+    # hybrid (zamba2): a SHARED attention block applied every p mamba blocks
+    hybrid_attn_period: int = 0
+
+    # --- modality frontend stubs (per assignment spec) ------------------
+    frontend: str = "none"          # none | vision | audio
+    num_patches: int = 256          # vision stub: patch embeddings per image
+    num_codebooks: int = 1          # audio stub: EnCodec codebooks summed
+
+    # --- numerics / the paper's knob ------------------------------------
+    matmul_precision: str = "bf16"  # bf16 | int8_quant | ozaki_fp64
+    ozaki_splits: int = 9
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    accum_dtype: str = "float32"    # matmul partial sums; bf16 halves the
+                                    # TP all-reduce payload (§Perf cell C)
+    moment_dtype: str = "float32"   # bf16 moments fit the 235B single-pod
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+
+    # --- training / memory policy ----------------------------------------
+    remat: bool = True              # activation checkpointing per block
+    fsdp_params: bool = False       # additionally shard params over "data"
+    scan_layers: bool = True
+    train_grad_accum: int = 8       # microbatching (clamped to local batch)
+
+    # ----------------------------------------------------------------------
+    def __post_init__(self):
+        if self.num_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.family in ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+        assert self.matmul_precision in ("bf16", "int8_quant", "ozaki_fp64")
+
+    @property
+    def attention_free(self) -> bool:
+        return self.num_heads == 0
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(1, self.num_kv_heads)
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (for 6ND MODEL_FLOPS)."""
+        c, d = self, self.d_model
+        n = c.vocab_size * d * (1 if c.tie_embeddings else 2)
+        per_layer = 0
+        if c.family == "hybrid":
+            # zamba2: mamba2 stack + ONE shared attention+mlp block
+            per_layer = _mamba_params(c, variant="mamba2")
+            n += c.num_layers * per_layer
+            n += _attn_params(c) + 3 * d * c.d_ff          # shared block
+            n += c.num_layers * 2 * d                      # norms
+            return n
+        if c.family == "ssm":
+            per_layer = _mamba_params(c, variant=c.ssm.variant)
+        else:
+            per_layer = _attn_params(c)
+            if c.moe is not None:
+                per_layer += d * c.moe.num_experts           # router
+                per_layer += c.moe.num_experts * 3 * d * c.moe.d_ff_expert
+            else:
+                per_layer += 3 * d * c.d_ff                  # gate/up/down
+        per_layer += 2 * d                                   # 2 RMSNorms
+        n += c.num_layers * per_layer + d                    # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top_k of num_experts)."""
+        c, d = self, self.d_model
+        if c.moe is None:
+            return self.param_count()
+        n = self.param_count()
+        moe_all = c.num_layers * c.moe.num_experts * 3 * d * c.moe.d_ff_expert
+        moe_act = c.num_layers * c.moe.top_k * 3 * d * c.moe.d_ff_expert
+        return n - moe_all + moe_act
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        kw = dataclasses.asdict(self)
+        if self.moe is not None:
+            kw["moe"] = MoEConfig(num_experts=8, top_k=2, d_ff_expert=64)
+        if self.ssm is not None:
+            kw["ssm"] = SSMConfig(d_state=8, d_conv=4, expand=2,
+                                  variant=self.ssm.variant, headdim=16,
+                                  chunk=32)
+        kw.update(
+            name=self.name + "-reduced",
+            num_layers=2 if self.family != "hybrid" else 4,
+            d_model=64,
+            num_heads=0 if self.attention_free else 4,
+            num_kv_heads=0 if self.attention_free else 2,
+            head_dim=0 if self.attention_free else 16,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=256,
+            sliding_window=16 if self.sliding_window else 0,
+            hybrid_attn_period=2 if self.hybrid_attn_period else 0,
+            num_patches=4,
+            remat=False,
+            # CPU backend cannot *execute* batched bf16->f32 dots (compile
+            # is fine); smoke tests run f32, full configs stay bf16.
+            compute_dtype="float32",
+        )
+        if isinstance(kw.get("moe"), dict):
+            kw["moe"] = MoEConfig(**kw["moe"])
+        if isinstance(kw.get("ssm"), dict):
+            kw["ssm"] = SSMConfig(**kw["ssm"])
+        return ArchConfig(**kw)
+
+
+def _attn_params(c: ArchConfig) -> int:
+    if c.attention_free:
+        return 0
+    d, hd = c.d_model, c.head_dim
+    return (d * c.num_heads * hd          # q
+            + 2 * d * c.num_kv_heads * hd  # k, v
+            + c.num_heads * hd * d)        # o
+
+
+def _mamba_params(c: ArchConfig, variant: str) -> int:
+    d = c.d_model
+    di = c.ssm.expand * d
+    n = 2 * d * di                # in_proj (x, z)
+    n += di * c.ssm.d_conv        # depthwise conv
+    if variant == "mamba1":
+        n += di * (c.ssm.d_state * 2 + 1)   # B, C, dt projections (x-dep)
+        n += di * c.ssm.d_state             # A
+        n += di * 2                          # dt bias, D
+    else:                          # mamba2 (SSD): scalar A per head
+        nh = di // c.ssm.headdim
+        n += d * (2 * c.ssm.d_state + nh)   # B, C, dt
+        n += nh * 2                          # A, D
+    n += di * d                    # out_proj
+    return n
+
+
+# ----------------------------------------------------------------------------
+# Input shapes (assigned): seq_len x global_batch, with the step they lower
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+# Pure full-attention archs skip long_500k (quadratic attention; the skip is
+# recorded in DESIGN.md §6 and EXPERIMENTS.md §Dry-run).
+LONG_CONTEXT_ARCHS = ("zamba2-7b", "falcon-mamba-7b")
+
+
+def cell_is_skipped(arch_name: str, shape_name: str) -> bool:
+    return shape_name == "long_500k" and arch_name not in LONG_CONTEXT_ARCHS

@@ -1,0 +1,13 @@
+"""chatglm3-6b — RoPE 2d (partial rotary), GQA [arXiv:2406.12793; hf].
+
+28L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=65024.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="chatglm3-6b", family="dense",
+    num_layers=28, d_model=4096, num_heads=32, num_kv_heads=2,
+    head_dim=128, d_ff=13696, vocab_size=65024,
+    rope_style="partial2d",
+    fsdp_params=True,
+)

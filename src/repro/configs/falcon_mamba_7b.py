@@ -1,0 +1,16 @@
+"""falcon-mamba-7b — attention-free Mamba1 [arXiv:2410.05355; unverified].
+
+64L d_model=4096 d_ff=0 vocab=65024, ssm_state=16.
+Runs long_500k (O(1) recurrent state). The Ozaki precision policy applies
+to the in/out projections only — the selective scan is not a GEMM
+(DESIGN.md SArch-applicability).
+"""
+from .base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="falcon-mamba-7b", family="ssm",
+    num_layers=64, d_model=4096, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=65024,
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, variant="mamba1"),
+    fsdp_params=True,
+)

@@ -1,0 +1,18 @@
+"""gemma2-9b — local+global alternating attention, logit softcaps
+[arXiv:2408.00118; hf].
+
+42L d_model=3584 16H (GQA kv=8) d_ff=14336 vocab=256000.
+Every 2nd layer is global full attention; local layers use a 4096 sliding
+window. Attention logits capped at 50, final logits at 30.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma2-9b", family="dense",
+    num_layers=42, d_model=3584, num_heads=16, num_kv_heads=8,
+    head_dim=256, d_ff=14336, vocab_size=256000,
+    sliding_window=4096, local_global_period=2,
+    attn_logit_softcap=50.0, final_logit_softcap=30.0,
+    tie_embeddings=True,
+    fsdp_params=True,
+)

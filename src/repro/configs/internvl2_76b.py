@@ -1,0 +1,19 @@
+"""internvl2-76b — InternViT + (Llama3-70B-class) LLM [arXiv:2404.16821].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+The InternViT frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed patch embeddings (batch, num_patches, d_model) that
+the backbone consumes alongside token embeddings.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-76b", family="vlm",
+    num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+    head_dim=128, d_ff=28672, vocab_size=128256,
+    frontend="vision", num_patches=256,
+    rope_theta=500000.0,
+    fsdp_params=True,
+    moment_dtype="bfloat16",   # dense 70B on one pod: halve Adam state
+    train_grad_accum=16,       # 1-row microbatches (80x134MB saves -> 5.4GB)
+)

@@ -1,0 +1,15 @@
+"""musicgen-medium — decoder-only over EnCodec tokens [arXiv:2306.05284; hf].
+
+48L d_model=1536 24H (kv=24, MHA) d_ff=6144 vocab=2048.
+The EnCodec frontend is a STUB: inputs are the discrete codebook token ids
+(batch, seq, num_codebooks); the model sums one embedding per codebook
+(MusicGen delay-pattern flattening assumed upstream).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-medium", family="audio",
+    num_layers=48, d_model=1536, num_heads=24, num_kv_heads=24,
+    head_dim=64, d_ff=6144, vocab_size=2048,
+    frontend="audio", num_codebooks=4,
+)

@@ -1,0 +1,21 @@
+"""ozimmu — the paper-native workload: one FP64-accurate GEMM.
+
+Not an assigned LM architecture; this config drives the paper's own
+benchmarks (Fig. 5-9) and the paper-representative dry-run/hillclimb cell:
+a distributed Ozaki DGEMM C = A.B with k sharded across the mesh.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmConfig:
+    name: str = "ozimmu-gemm"
+    m: int = 16384
+    n: int = 16384
+    k: int = 16384
+    num_splits: int = 9
+    fuse_diagonals: bool = True
+    concat_k: bool = False
+
+
+CONFIG = GemmConfig()

@@ -1,0 +1,17 @@
+"""qwen3-moe-235b-a22b — 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B; hf].
+
+94L d_model=4096 64H (GQA kv=4) d_ff=1536(expert) vocab=151936.
+FSDP-style parameter sharding over the data axis is required to fit.
+"""
+from .base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    num_layers=94, d_model=4096, num_heads=64, num_kv_heads=4,
+    head_dim=128, d_ff=0, vocab_size=151936,
+    moe=MoEConfig(num_experts=128, top_k=8, d_ff_expert=1536),
+    fsdp_params=True,
+    param_dtype="bfloat16",   # pure-bf16 Adam: the only  layout that
+    moment_dtype="bfloat16",  # fits 940GB of state on one 256-chip pod
+    train_grad_accum=16,       # 1-row microbatches: remat saves 94x33MB
+)

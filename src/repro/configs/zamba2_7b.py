@@ -1,0 +1,20 @@
+"""zamba2-7b — Mamba2 backbone + SHARED attention block [arXiv:2411.15242].
+
+81L d_model=3584 32H (kv=32, MHA) d_ff=14336 vocab=32000, ssm_state=64.
+One shared attention+MLP block is applied every ``hybrid_attn_period``
+Mamba2 blocks (weights shared across applications, distinct KV caches).
+Runs long_500k: SSM state is O(1); the shared-attention KV at 500k is
+sharded over the model axis.
+"""
+from .base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b", family="hybrid",
+    num_layers=81, d_model=3584, num_heads=32, num_kv_heads=32,
+    head_dim=112, d_ff=14336, vocab_size=32000,
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, variant="mamba2",
+                  headdim=64, chunk=256),
+    hybrid_attn_period=6,
+    fsdp_params=True,
+    train_grad_accum=16,
+)

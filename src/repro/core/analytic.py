@@ -1,0 +1,81 @@
+"""Closed-form cost model of the Ozaki scheme — paper Fig. 4 / Table 2.
+
+Four quantities as functions of the reduction size k and the MMU type:
+  * alpha / BPS        (Eq. 4, 5)
+  * number of splits to keep a target mantissa-space length
+  * working-memory bytes per input element for the slices
+  * number of slice GEMMs (s(s+1)/2)
+
+These are used by ``benchmarks/bench_fig4_analytic.py`` and by the
+framework's own planner (choosing s and the MMU-type knobs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class MMUSpec:
+    """{input}-{accumulator} matrix multiplication unit (paper Table 2)."""
+
+    name: str
+    ell_in: int          # input mantissa bits (excl. sign)
+    ell_acc: int         # accumulator mantissa bits
+    in_bytes: float      # storage bytes per input element
+    is_integer: bool
+
+    def alpha(self, k: int) -> int:
+        a = int(math.floor((self.ell_acc - math.log2(k)) / 2))
+        return max(a, 0)
+
+    def bps(self, k: int) -> int:
+        """Bits-per-slice actually carried (Eq. 5)."""
+        return max(1, min(self.alpha(k), self.ell_in))
+
+    def num_splits(self, k: int, mantissa_space: int) -> int:
+        """Splits needed so num_splits * BPS >= mantissa_space."""
+        return math.ceil(mantissa_space / self.bps(k))
+
+    def slice_bytes_per_element(self, k: int, mantissa_space: int) -> float:
+        """Working memory for the slices, per input element.
+
+        Integer units store one shared exponent per row *per matrix* —
+        amortized to ~0 per element; float units re-store an exponent in
+        every element of every slice (that is the paper's 50-75% saving).
+        """
+        return self.num_splits(k, mantissa_space) * self.in_bytes
+
+    def num_gemms(self, k: int, mantissa_space: int) -> int:
+        s = self.num_splits(k, mantissa_space)
+        return s * (s + 1) // 2
+
+    def waste_bits(self, k: int) -> int:
+        """Mantissa bits of a slice that carry no information (Sec. 3.2.1)."""
+        return max(0, self.ell_in - self.alpha(k))
+
+
+FP16_FP32 = MMUSpec("FP16-FP32", ell_in=11, ell_acc=24, in_bytes=2.0,
+                    is_integer=False)
+INT4_INT32 = MMUSpec("INT4-INT32", ell_in=3, ell_acc=31, in_bytes=0.5,
+                     is_integer=True)
+INT8_INT32 = MMUSpec("INT8-INT32", ell_in=7, ell_acc=31, in_bytes=1.0,
+                     is_integer=True)
+INT12_INT32 = MMUSpec("INT12-INT32", ell_in=11, ell_acc=31, in_bytes=1.5,
+                      is_integer=True)
+
+ALL_MMUS = (FP16_FP32, INT4_INT32, INT8_INT32, INT12_INT32)
+
+# FP64 mantissa space the paper's DGEMM-replacement mode must carry.
+DGEMM_MANTISSA_SPACE = 70
+
+
+def ozaki_flops(m: int, n: int, k: int, s: int) -> float:
+    """Integer MAC ops in the slice GEMMs (2mnk per GEMM equivalents)."""
+    return 2.0 * m * n * k * (s * (s + 1) // 2)
+
+
+def ozaki_hp_accum_ops(m: int, n: int, s: int, fused_diagonals: bool) -> float:
+    """High-precision accumulation element-ops (line 7 of Alg. 3)."""
+    groups = s if fused_diagonals else s * (s + 1) // 2
+    return float(m * n * groups)

@@ -1,0 +1,261 @@
+"""Ozaki-scheme GEMM on integer matrix units — Algorithm 3 of the paper.
+
+``ozaki_matmul`` computes an FP64-accurate ``C = A @ B`` using only int8
+matrix multiplications with int32 accumulation (the TPU MXU int8 path) plus
+a high-precision scaled accumulation of the slice products.
+
+Accumulation modes:
+  * ``accum="f64"``  — the paper's mode (CPU validation; x64 required).
+  * ``accum="df32"`` — double-float32 accumulation, deployable on TPU
+    (no FP64 hardware exists there); carries 48 mantissa bits.
+
+Scheduling modes (see DESIGN.md §4):
+  * paper-faithful: each slice pair (i, j) with i + j <= s + 1 is a
+    separate int8 GEMM followed by a scaled high-precision accumulation —
+    s(s+1)/2 GEMMs and as many accumulations (Alg. 3 verbatim).
+  * ``fuse_diagonals`` (O1): pairs on an anti-diagonal share their scale,
+    so their int32 products are summed exactly in int32 first; the number
+    of high-precision accumulations drops to s. Requires slack bits in
+    alpha (handled by ``compute_alpha(..., fuse_terms=...)``).
+  * ``concat_k`` (O2): realizes each anti-diagonal sum as ONE int8 GEMM
+    over a k-concatenated operand pair — fewer, larger MXU launches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .splitting import (SplitResult, compute_alpha, slice_width, split_int,
+                        split_int_dw)
+from .xmath import DW, dw_add, dw_normalize, fast_two_sum
+
+
+@dataclasses.dataclass(frozen=True)
+class OzakiConfig:
+    """Configuration for one Ozaki GEMM.
+
+    num_splits: s in the paper (INT8x{s}).
+    accum: "f64" | "df32".
+    backend: "xla" (lax.dot_general) | "pallas" (MXU kernel).
+    fuse_diagonals: O1 — exact int32 pre-accumulation per anti-diagonal.
+    concat_k: O2 — one GEMM per anti-diagonal via k-concatenation.
+    full_pairs: compute all s*s pairs (paper computes i+j <= s+1 only).
+    ell_acc / ell_in: accumulator / input mantissa widths (Table 2).
+    interpret: run Pallas kernels in interpret mode (CPU validation).
+    """
+
+    num_splits: int = 9
+    accum: str = "f64"
+    backend: str = "xla"
+    fuse_diagonals: bool = True
+    concat_k: bool = False
+    full_pairs: bool = False
+    ell_acc: int = 31
+    ell_in: int = 7
+    interpret: bool = True
+
+    def width_for(self, k: int) -> int:
+        fuse_terms = self.max_fuse_terms if (self.fuse_diagonals or
+                                             self.concat_k) else 1
+        return slice_width(k, ell_acc=self.ell_acc, ell_in=self.ell_in,
+                           fuse_terms=fuse_terms)
+
+    @property
+    def max_fuse_terms(self) -> int:
+        # longest anti-diagonal: i+j = s+1 has s pairs (full: s as well)
+        return self.num_splits
+
+    def diagonals(self) -> Sequence[tuple[int, Sequence[tuple[int, int]]]]:
+        """0-based (t, [(p, q)...]) groups with t = p + q ascending."""
+        s = self.num_splits
+        t_max = 2 * s - 2 if self.full_pairs else s - 1
+        out = []
+        for t in range(t_max + 1):
+            pairs = [(p, t - p) for p in range(max(0, t - s + 1),
+                                               min(s - 1, t) + 1)]
+            out.append((t, pairs))
+        return out
+
+    @property
+    def num_gemms(self) -> int:
+        return sum(len(p) for _, p in self.diagonals())
+
+
+# ----------------------------------------------------------------------------
+# int8 GEMM backends: (m,k) int8 x (n,k) int8 -> (m,n) int32, contract on k
+# ----------------------------------------------------------------------------
+
+def _gemm_xla(a8: jax.Array, bt8: jax.Array) -> jax.Array:
+    return jax.lax.dot_general(
+        a8, bt8, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def _get_gemm(cfg: OzakiConfig) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    if cfg.backend == "pallas":
+        from repro.kernels import int8_gemm
+        return functools.partial(int8_gemm.int8_matmul_nt,
+                                 interpret=cfg.interpret)
+    return _gemm_xla
+
+
+# ----------------------------------------------------------------------------
+# int32 -> df32 exact conversion (no int64 anywhere: TPU/x32 safe)
+# ----------------------------------------------------------------------------
+
+def int32_to_dw(p: jax.Array) -> DW:
+    low = jnp.bitwise_and(p, jnp.int32(0xFFFF))        # [0, 65535]
+    high = p - low                                      # multiple of 2^16
+    hi_f = high.astype(jnp.float32)                     # <= 15 sig bits: exact
+    lo_f = low.astype(jnp.float32)                      # <= 16 sig bits: exact
+    return dw_normalize(hi_f, lo_f)
+
+
+# ----------------------------------------------------------------------------
+# Core driver
+# ----------------------------------------------------------------------------
+
+def _pair_products(sa: SplitResult, sb: SplitResult, cfg: OzakiConfig,
+                   gemm) -> list[tuple[int, jax.Array]]:
+    """Return [(t, P_t int32)] per anti-diagonal, smallest scale first."""
+    out = []
+    for t, pairs in cfg.diagonals():
+        if cfg.concat_k:
+            a_cat = jnp.concatenate([sa.slices[p] for p, _ in pairs], axis=1)
+            b_cat = jnp.concatenate([sb.slices[q] for _, q in pairs], axis=1)
+            p_t = gemm(a_cat, b_cat)
+        elif cfg.fuse_diagonals:
+            p_t = gemm(sa.slices[pairs[0][0]], sb.slices[pairs[0][1]])
+            for p, q in pairs[1:]:
+                p_t = p_t + gemm(sa.slices[p], sb.slices[q])
+        else:
+            # paper-faithful: keep pair products separate (caller scales each)
+            for p, q in pairs:
+                out.append((t, gemm(sa.slices[p], sb.slices[q])))
+            continue
+        out.append((t, p_t))
+    return out
+
+
+def _accum_f64(products, sa, sb, w, shape):
+    c = jnp.zeros(shape, jnp.float64)
+    e_base = sa.exp[:, None].astype(jnp.int32) + sb.exp[None, :].astype(jnp.int32)
+    for t, p_t in sorted(products, key=lambda tp: -tp[0]):  # small terms first
+        c = c + jnp.ldexp(p_t.astype(jnp.float64), e_base - (t + 2) * w)
+    return c
+
+
+def _accum_df32(products, sa, sb, w, shape) -> DW:
+    acc = DW(jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32))
+    for t, p_t in sorted(products, key=lambda tp: -tp[0]):
+        scale = jnp.float32(2.0 ** (-(t + 2) * w))      # exact power of two
+        term = int32_to_dw(p_t)
+        acc = dw_add(acc, DW(term.hi * scale, term.lo * scale))
+    e_base = sa.exp[:, None] + sb.exp[None, :]
+    hi = jnp.ldexp(acc.hi, e_base)
+    lo = jnp.ldexp(acc.lo, e_base)
+    return DW(hi, lo)
+
+
+def ozaki_matmul(a: jax.Array, b: jax.Array,
+                 cfg: OzakiConfig = OzakiConfig()) -> jax.Array:
+    """FP64-accurate C = A @ B via int8 GEMMs. A: (m, k) f64, B: (k, n) f64."""
+    if a.dtype != jnp.float64:
+        raise TypeError("ozaki_matmul takes float64; use ozaki_matmul_dw for "
+                        "the TPU df32 path")
+    k = a.shape[1]
+    w = cfg.width_for(k)
+    sa = split_int(a, cfg.num_splits, w)
+    sb = split_int(b.T, cfg.num_splits, w)
+    gemm = _get_gemm(cfg)
+    products = _pair_products(sa, sb, cfg, gemm)
+    if cfg.accum == "f64":
+        return _accum_f64(products, sa, sb, w, (a.shape[0], b.shape[1]))
+    dw = _accum_df32(products, sa, sb, w, (a.shape[0], b.shape[1]))
+    return dw.hi.astype(jnp.float64) + dw.lo.astype(jnp.float64)
+
+
+def ozaki_matmul_dw(a: DW, b_t: DW, cfg: OzakiConfig = OzakiConfig()) -> DW:
+    """TPU-native path: df32 in, df32 out. ``b_t`` is B TRANSPOSED (n, k).
+
+    Runs entirely in {int8, int32, f32}: deployable on hardware with no
+    FP64 units. The number of splits should satisfy
+    (num_splits + 1) * w <= 120 so all scales stay in f32 normal range.
+    """
+    k = a.shape[1]
+    w = cfg.width_for(k)
+    if (cfg.num_splits + 1) * w > 120:
+        raise ValueError("split schedule underflows f32 scale range")
+    sa = split_int_dw(a, cfg.num_splits, w)
+    sb = split_int_dw(b_t, cfg.num_splits, w)
+    gemm = _get_gemm(cfg)
+    products = _pair_products(sa, sb, cfg, gemm)
+    return _accum_df32(products, sa, sb, w, (a.shape[0], b_t.shape[0]))
+
+
+# ----------------------------------------------------------------------------
+# Complex GEMM (quantum-circuit simulation support, Sec. 4.4)
+# ----------------------------------------------------------------------------
+
+def ozaki_matmul_complex(a: jax.Array, b: jax.Array,
+                         cfg: OzakiConfig = OzakiConfig(),
+                         algo: str = "4mul") -> jax.Array:
+    """complex128 C = A @ B with real/imag separated at split time.
+
+    ``algo="4mul"``: Cr = ArBr - AiBi, Ci = ArBi + AiBr (paper's approach —
+    each of the 4 real matrices is split exactly once, products reused).
+    ``algo="3mul"``: Karatsuba, one fewer real GEMM group at slightly wider
+    exponent range (beyond-paper option).
+    """
+    ar, ai = jnp.real(a), jnp.imag(a)
+    br, bi = jnp.real(b), jnp.imag(b)
+    k = a.shape[1]
+    w = cfg.width_for(k)
+    gemm = _get_gemm(cfg)
+
+    def real_mm(x_split, y_split, shape):
+        products = _pair_products(x_split, y_split, cfg, gemm)
+        if cfg.accum == "f64":
+            return _accum_f64(products, x_split, y_split, w, shape)
+        dw = _accum_df32(products, x_split, y_split, w, shape)
+        return dw.hi.astype(jnp.float64) + dw.lo.astype(jnp.float64)
+
+    shape = (a.shape[0], b.shape[1])
+    if algo == "3mul":
+        s_ar = split_int(ar, cfg.num_splits, w)
+        s_ai = split_int(ai, cfg.num_splits, w)
+        s_as = split_int(ar + ai, cfg.num_splits, w)
+        s_br = split_int(br.T, cfg.num_splits, w)
+        s_bi = split_int(bi.T, cfg.num_splits, w)
+        s_bs = split_int((br + bi).T, cfg.num_splits, w)
+        p1 = real_mm(s_ar, s_br, shape)
+        p2 = real_mm(s_ai, s_bi, shape)
+        p3 = real_mm(s_as, s_bs, shape)
+        return jax.lax.complex(p1 - p2, p3 - p1 - p2)
+
+    s_ar = split_int(ar, cfg.num_splits, w)
+    s_ai = split_int(ai, cfg.num_splits, w)
+    s_br = split_int(br.T, cfg.num_splits, w)
+    s_bi = split_int(bi.T, cfg.num_splits, w)
+    c_r = real_mm(s_ar, s_br, shape) - real_mm(s_ai, s_bi, shape)
+    c_i = real_mm(s_ar, s_bi, shape) + real_mm(s_ai, s_br, shape)
+    return jax.lax.complex(c_r, c_i)
+
+
+# ----------------------------------------------------------------------------
+# Reference paths for comparison (the paper's baselines)
+# ----------------------------------------------------------------------------
+
+def dgemm_f64(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain FP64 GEMM (cuBLAS-DGEMM stand-in on CPU)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float64)
+
+
+def gemm_fp32_pass(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Naive single-f32 GEMM of f64 data — the accuracy anti-baseline."""
+    return jnp.dot(a.astype(jnp.float32),
+                   b.astype(jnp.float32)).astype(jnp.float64)

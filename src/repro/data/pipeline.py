@@ -1,0 +1,97 @@
+"""Deterministic data pipeline: synthetic LM tokens + memmap corpus.
+
+Determinism contract (used by the fault-tolerance tests): batch contents
+are a pure function of (seed, step, arch shape) — a restarted job that
+resumes from step N sees byte-identical batches from step N on, for any
+host count. Per-host sharding slices the global batch by process index.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+    num_codebooks: int = 0       # audio archs: tokens (b, s, nq)
+    num_patches: int = 0         # vlm archs: extra patch embeddings
+    d_model: int = 0             # for patch embedding stub width
+    memmap_path: Optional[str] = None
+
+
+class TokenSource:
+    """Synthetic Zipf-ish token stream, or a memmapped corpus window."""
+
+    def __init__(self, dc: DataConfig):
+        self.dc = dc
+        self._mm = None
+        if dc.memmap_path:
+            self._mm = np.memmap(dc.memmap_path, dtype=np.int32, mode="r")
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.dc.seed, step]))
+
+    def batch_at(self, step: int, *, host_index: int = 0,
+                 host_count: int = 1) -> dict:
+        dc = self.dc
+        assert dc.global_batch % host_count == 0
+        local_b = dc.global_batch // host_count
+        rng = self._rng(step)
+        shape = (dc.global_batch, dc.seq_len)
+        if dc.num_codebooks:
+            shape = shape + (dc.num_codebooks,)
+        if self._mm is not None:
+            max_start = len(self._mm) - dc.seq_len - 1
+            starts = rng.integers(0, max_start, size=dc.global_batch)
+            tokens = np.stack([
+                np.asarray(self._mm[s:s + dc.seq_len]) for s in starts])
+            tokens = tokens % dc.vocab_size
+            if dc.num_codebooks:
+                tokens = np.repeat(tokens[..., None], dc.num_codebooks, -1)
+        else:
+            # Zipf-distributed ids (realistic logit scale), deterministic
+            z = rng.zipf(1.3, size=shape).astype(np.int64)
+            tokens = (z % dc.vocab_size).astype(np.int32)
+        lo = host_index * local_b
+        batch = {"tokens": tokens[lo:lo + local_b].astype(np.int32)}
+        if dc.num_patches:
+            emb = rng.standard_normal(
+                (dc.global_batch, dc.num_patches, dc.d_model),
+                dtype=np.float32)
+            batch["patch_embeds"] = emb[lo:lo + local_b]
+            batch["tokens"] = batch["tokens"][:, :dc.seq_len - dc.num_patches]
+        return batch
+
+    def iterate(self, start_step: int = 0, *, host_index: int = 0,
+                host_count: int = 1) -> Iterator[dict]:
+        step = start_step
+        while True:
+            yield self.batch_at(step, host_index=host_index,
+                                host_count=host_count)
+            step += 1
+
+
+def make_data(cfg, seq_len: int, global_batch: int, seed: int = 1234,
+              memmap_path: Optional[str] = None) -> TokenSource:
+    """TokenSource matching an ArchConfig's input contract."""
+    return TokenSource(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq_len,
+        global_batch=global_batch, seed=seed,
+        num_codebooks=cfg.num_codebooks if cfg.frontend == "audio" else 0,
+        num_patches=cfg.num_patches if cfg.frontend == "vision" else 0,
+        d_model=cfg.d_model, memmap_path=memmap_path))
+
+
+def write_corpus(path: str, num_tokens: int, vocab: int,
+                 seed: int = 7) -> None:
+    """Materialize a synthetic corpus for the memmap loader."""
+    rng = np.random.default_rng(seed)
+    arr = (rng.zipf(1.3, size=num_tokens) % vocab).astype(np.int32)
+    arr.tofile(path)

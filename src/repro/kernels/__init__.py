@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the Ozaki scheme's compute hot-spots.
+
+The paper's hot path is (a) the int8 slice GEMMs (its cuBLAS GemmEx call)
+and (b) the high-precision accumulation + the splitting stage it profiles
+in Fig. 9. One kernel each:
+
+  int8_gemm.py    — MXU int8xint8->int32 tiled GEMM (NT layout)
+  ozaki_split.py  — fused one-pass SplitInt (s slices per HBM read)
+  ozaki_accum.py  — fused int32->df32 scaled compensated accumulation
+
+ops.py re-exports jit'd wrappers; ref.py holds the pure-jnp oracles.
+"""
+from . import int8_gemm, ozaki_accum, ozaki_split, ref
+from .ops import accum_scaled_dw, fused_split_dw, int8_matmul_nt
+
+__all__ = ["int8_gemm", "ozaki_accum", "ozaki_split", "ref",
+           "accum_scaled_dw", "fused_split_dw", "int8_matmul_nt"]

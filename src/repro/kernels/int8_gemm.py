@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: int8 x int8 -> int32 GEMM on the MXU (NT layout).
+
+Computes ``C[m, n] = sum_k A[m, k] * B[n, k]`` — both operands contract on
+their last axis, which is exactly how the Ozaki scheme stores B slices
+(column-split of B == row-split of B^T), and is the MXU-friendly layout:
+no transposition between HBM and VMEM.
+
+Tiling: grid (m/bm, n/bn, k/bk), k innermost so each output block stays
+resident in VMEM while the k loop streams A/B tiles through the MXU,
+accumulating in int32. Block shapes default to MXU-aligned 256x256x512:
+  A tile 256x512 int8 = 128 KiB, B tile 256x512 int8 = 128 KiB,
+  C tile 256x256 int32 = 256 KiB  ->  ~0.5 MiB VMEM of ~16 MiB.
+
+Validated on CPU in interpret mode against ``ref.int8_matmul_nt_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    prod = jax.lax.dot_general(
+        a_ref[...], b_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    o_ref[...] += prod
+
+
+def _pad_to(x: jax.Array, mult: tuple[int, int]) -> jax.Array:
+    pm = (-x.shape[0]) % mult[0]
+    pk = (-x.shape[1]) % mult[1]
+    if pm == 0 and pk == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pk)))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def int8_matmul_nt(a: jax.Array, b_t: jax.Array, *, bm: int = 256,
+                   bn: int = 256, bk: int = 512,
+                   interpret: bool = True) -> jax.Array:
+    """C = A @ B_t.T with int32 accumulation. a: (m, k) int8, b_t: (n, k)."""
+    assert a.dtype == jnp.int8 and b_t.dtype == jnp.int8
+    m, k = a.shape
+    n, k2 = b_t.shape
+    assert k == k2, (a.shape, b_t.shape)
+    bm_, bn_, bk_ = min(bm, _ceil_align(m)), min(bn, _ceil_align(n)), \
+        min(bk, _ceil_align(k, 128))
+    a_p = _pad_to(a, (bm_, bk_))
+    b_p = _pad_to(b_t, (bn_, bk_))
+    mp, kp = a_p.shape
+    np_, _ = b_p.shape
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn_, bk_), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def _ceil_align(x: int, align: int = 8) -> int:
+    """Smallest multiple of ``align`` >= x (shrinks blocks for tiny inputs)."""
+    return -(-x // align) * align

@@ -1,0 +1,17 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``interpret`` defaults to True (CPU validation). On a real TPU deployment
+set ``repro.kernels.ops.INTERPRET = False`` (or pass interpret=False) so
+``pl.pallas_call`` lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from .int8_gemm import int8_matmul_nt
+from .ozaki_accum import accum_scaled_dw
+from .ozaki_split import fused_split_dw
+
+INTERPRET = jax.default_backend() != "tpu"
+
+__all__ = ["int8_matmul_nt", "fused_split_dw", "accum_scaled_dw", "INTERPRET"]

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused scaled accumulation of int32 slice products.
+
+Line 7 of Algorithm 3: ``C += C_tmp ⊙ (2^{-(i+j)α} · e_A · e_B^T)`` with C
+held in double-float32 (the TPU has no FP64 unit). Fusing the int32→df32
+conversion, the power-of-two scaling, and the compensated add into one
+VMEM pass halves the HBM traffic of the accumulation stage — which the
+paper's Fig. 9 identifies as the second-largest cost of the whole scheme.
+
+The exponent application is deferred: products are accumulated against the
+scalar ``2^{-(t+2)w}`` only; the per-element ``e_A + e_B`` is applied once
+by the caller at the end (see ``core.ozaki._accum_df32``). This keeps the
+kernel's scale a compile-time scalar.
+
+In/out aliasing: C_hi / C_lo are donated and updated in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.xmath import two_sum
+
+
+def _accum_kernel(scale: float, p_ref, chi_ref, clo_ref, ohi_ref, olo_ref):
+    p = p_ref[...]
+    # exact int32 -> df32 (16-bit split; no int64 anywhere)
+    low = jnp.bitwise_and(p, jnp.int32(0xFFFF))
+    high = p - low
+    t_hi = high.astype(jnp.float32) * jnp.float32(scale)
+    t_lo = low.astype(jnp.float32) * jnp.float32(scale)
+    # compensated (c_hi, c_lo) += (t_hi, t_lo)
+    c_hi = chi_ref[...]
+    c_lo = clo_ref[...]
+    s_hi, e_hi = two_sum(c_hi, t_hi)
+    s_lo, e_lo = two_sum(c_lo, t_lo)
+    c = e_hi + s_lo
+    v_hi = s_hi + c
+    v_lo = c - (v_hi - s_hi)
+    w = e_lo + v_lo
+    n_hi = v_hi + w
+    n_lo = w - (n_hi - v_hi)
+    ohi_ref[...] = n_hi
+    olo_ref[...] = n_lo
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "interpret"))
+def accum_scaled_dw(p: jax.Array, c_hi: jax.Array, c_lo: jax.Array, *,
+                    scale: float, bm: int = 256, bn: int = 256,
+                    interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """(c_hi, c_lo) += df32(p) * scale, elementwise, fused in VMEM."""
+    m, n = p.shape
+    bm_ = min(bm, -(-m // 8) * 8)
+    bn_ = min(bn, -(-n // 128) * 128)
+    pm, pn = (-m) % bm_, (-n) % bn_
+    if pm or pn:
+        p = jnp.pad(p, ((0, pm), (0, pn)))
+        c_hi = jnp.pad(c_hi, ((0, pm), (0, pn)))
+        c_lo = jnp.pad(c_lo, ((0, pm), (0, pn)))
+    mp, np_ = p.shape
+    spec = pl.BlockSpec((bm_, bn_), lambda i, j: (i, j))
+    o_hi, o_lo = pl.pallas_call(
+        functools.partial(_accum_kernel, scale),
+        grid=(mp // bm_, np_ // bn_),
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+                   jax.ShapeDtypeStruct((mp, np_), jnp.float32)],
+        input_output_aliases={1: 0, 2: 1},
+        interpret=interpret,
+    )(p, c_hi, c_lo)
+    return o_hi[:m, :n], o_lo[:m, :n]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function mirrors its kernel's contract exactly; kernel tests sweep
+shapes/dtypes and assert_allclose (exact equality for the integer paths)
+against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.splitting import split_int_dw
+from repro.core.xmath import DW, dw_add
+
+
+def int8_matmul_nt_ref(a: jax.Array, b_t: jax.Array) -> jax.Array:
+    """C[m,n] = sum_k A[m,k] * B_t[n,k], exact int32."""
+    return jax.lax.dot_general(
+        a, b_t, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def fused_split_dw_ref(hi: jax.Array, lo: jax.Array, exp: jax.Array, *,
+                       num_splits: int, w: int) -> jax.Array:
+    """Slices via the sequential core implementation (same exponents)."""
+    res = split_int_dw(DW(hi, lo), num_splits, w)
+    # core recomputes exponents; caller passes the same row_exponents(hi)
+    del exp
+    return res.slices
+
+
+def accum_scaled_dw_ref(p: jax.Array, c_hi: jax.Array, c_lo: jax.Array, *,
+                        scale: float) -> tuple[jax.Array, jax.Array]:
+    low = jnp.bitwise_and(p, jnp.int32(0xFFFF))
+    high = p - low
+    t_hi = high.astype(jnp.float32) * jnp.float32(scale)
+    t_lo = low.astype(jnp.float32) * jnp.float32(scale)
+    out = dw_add(DW(c_hi, c_lo), DW(t_hi, t_lo))
+    return out.hi, out.lo

@@ -1,0 +1,546 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements of this module — jax
+locks the device count at first initialization, and the production meshes
+need 512 placeholder host devices (2 pods x 16 x 16).
+
+Per cell this driver:
+  1. builds the full ArchConfig and the production mesh;
+  2. constructs abstract (ShapeDtypeStruct) params / optimizer / batch /
+     decode-state trees with NamedShardings from the ShardingPlan;
+  3. ``jit(step).lower(...).compile()`` — success proves the sharding
+     config is coherent (no mismatched specs, no unsupported collective);
+  4. records ``memory_analysis()`` (fits-in-HBM proof),
+     ``cost_analysis()`` (XLA's one-pass numbers), and the while-aware
+     HLO analysis (FLOPs / HBM traffic / collective bytes — the roofline
+     terms) into ``experiments/dryrun/<cell>.json``.
+
+CLI::
+
+    python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+    python -m repro.launch.dryrun --all          # every cell, both meshes
+    python -m repro.launch.dryrun --arch ozimmu-gemm --shape gemm_16k
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ALL_ARCHS, SHAPES, cell_is_skipped, get_config)
+from repro.launch import hlo_analysis
+from repro.launch.mesh import (HBM_PER_CHIP, HBM_BW, ICI_LINK_BW,
+                               PEAK_BF16_FLOPS, PEAK_INT8_OPS,
+                               make_production_mesh)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+GEMM_SHAPES = {"gemm_8k": 8192, "gemm_16k": 16384, "gemm_32k": 32768}
+
+
+# ----------------------------------------------------------------------------
+# abstract trees
+# ----------------------------------------------------------------------------
+
+def _fit_sharding(shape, ns):
+    """Drop spec entries whose mesh-axis product doesn't divide the dim
+    (e.g. a batch of 1 under a 16-way data axis in the long_500k cells) —
+    jit rejects such explicit out_shardings."""
+    spec = list(ns.spec) + [None] * (len(shape) - len(ns.spec))
+    changed = False
+    for i, (dim, entry) in enumerate(zip(shape, spec)):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        shards = 1
+        for a in axes:
+            shards *= ns.mesh.shape[a]
+        if dim % shards:
+            spec[i] = None
+            changed = True
+    if not changed:
+        return ns
+    return NamedSharding(ns.mesh, P(*spec))
+
+
+def _sds(tree, shardings):
+    return jax.tree.map(
+        lambda t, s: jax.ShapeDtypeStruct(
+            t.shape, t.dtype, sharding=_fit_sharding(t.shape, s)),
+        tree, shardings)
+
+
+def abstract_cell(cfg, shape_name: str, mesh, rules_overrides=None,
+                  grad_accum: int = 8):
+    """(step_fn, abstract_args, donate) for one cell."""
+    from repro.models import init_model
+    from repro.models.transformer import (decode_step, forward_train,
+                                          init_decode_state, prefill)
+    from repro.parallel.sharding import make_plan, wrap_with_sharding
+    from repro.train.optimizer import AdamWState, OptimizerConfig, adamw_init
+    from repro.train.trainer import train_step
+
+    shape = SHAPES[shape_name]
+    kind = shape.kind
+    axes_box = {}
+
+    def params_only(k):
+        p, a = init_model(cfg, k)
+        axes_box["axes"] = a
+        return p
+
+    p_shapes = jax.eval_shape(params_only, jax.random.key(0))
+    plan = make_plan(cfg, axes_box["axes"], mesh, kind=kind,
+                     overrides=rules_overrides)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), plan.param_specs,
+                        is_leaf=lambda s: isinstance(s, P))
+    params = _sds(p_shapes, p_sh)
+
+    b, s = shape.global_batch, shape.seq_len
+    rep = NamedSharding(mesh, P())
+    bspec = plan.batch_specs
+    wrap = functools.partial(wrap_with_sharding, mesh=mesh,
+                             rules=plan.rules)
+
+    def tok_sds(bb, ss, lead_accum=0):
+        shp = (bb, ss, cfg.num_codebooks) if cfg.frontend == "audio" \
+            else (bb, ss)
+        spec = bspec["tokens"]
+        if lead_accum:
+            shp = (lead_accum,) + shp
+            spec = P(None, *spec)
+        return jax.ShapeDtypeStruct(
+            shp, jnp.int32,
+            sharding=_fit_sharding(shp, NamedSharding(mesh, spec)))
+
+    if kind == "train":
+        batch_shards = 1
+        for ax in plan.rules.get("batch", ()):
+            batch_shards *= mesh.shape[ax]
+        local_b = max(1, b // batch_shards)
+        ga = max(1, min(grad_accum or cfg.train_grad_accum, local_b))
+        lead = ga if ga > 1 else 0
+        text_len = s - cfg.num_patches if cfg.frontend == "vision" else s
+        batch = {"tokens": tok_sds(b // ga if lead else b, text_len, lead)}
+        if cfg.frontend == "vision":
+            pe_shape = (b // ga if lead else b, cfg.num_patches,
+                        cfg.d_model)
+            pe_spec = bspec["patch_embeds"]
+            if lead:
+                pe_shape = (ga,) + pe_shape
+                pe_spec = P(None, *pe_spec)
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                pe_shape, jnp.float32,
+                sharding=NamedSharding(mesh, pe_spec))
+        opt_shapes = jax.eval_shape(
+            functools.partial(adamw_init,
+                              moment_dtype=jnp.dtype(cfg.moment_dtype)),
+            p_shapes)
+        opt = AdamWState(
+            jax.ShapeDtypeStruct((), jnp.int32, sharding=rep),
+            _sds(opt_shapes.mu, p_sh), _sds(opt_shapes.nu, p_sh))
+        oc = OptimizerConfig()
+        fn = wrap(functools.partial(train_step, cfg, oc, grad_accum=ga))
+        out_sh = (jax.tree.map(lambda x: x.sharding, params),
+                  jax.tree.map(lambda x: x.sharding, opt), None)
+        return fn, (params, opt, batch), (0, 1), out_sh
+
+    # inference state
+    state_shapes = jax.eval_shape(
+        functools.partial(init_decode_state, cfg, b, s), )
+    st_sh = jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), plan.state_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    state = _sds(state_shapes, st_sh)
+
+    state_sh = jax.tree.map(lambda x: x.sharding, state)
+    if kind == "prefill":
+        text_len = s - cfg.num_patches if cfg.frontend == "vision" else s
+        batch = {"tokens": tok_sds(b, text_len)}
+        if cfg.frontend == "vision":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_patches, cfg.d_model), jnp.float32,
+                sharding=NamedSharding(mesh, bspec["patch_embeds"]))
+        fn = wrap(functools.partial(prefill, cfg))
+        return fn, (params, batch, state), (2,), (state_sh, None)
+
+    # decode: one new token against a seq_len cache
+    tok = tok_sds(b, 1)
+    fn = wrap(functools.partial(decode_step, cfg))
+    return fn, (params, state, tok), (1,), (None, state_sh)
+
+
+def abstract_gemm_cell(shape_name: str, mesh, num_splits: int = 9,
+                       schedule: str = "psum", fuse: bool = True):
+    """The paper-native cell: distributed Ozaki DGEMM, df32 TPU path.
+
+    2D distribution: m sharded over "data", k over "model" (the paper's
+    single-GPU GEMM scaled onto the pod grid). ``schedule`` / ``fuse`` /
+    ``num_splits`` are the §Perf hillclimb knobs.
+    """
+    from repro.core.ozaki import OzakiConfig
+    from repro.core.xmath import DW
+    from repro.parallel.ozaki_shard import distributed_ozaki_matmul
+    n = GEMM_SHAPES[shape_name]
+    cfg = OzakiConfig(num_splits=num_splits, accum="df32",
+                      fuse_diagonals=fuse)
+    fn = functools.partial(distributed_ozaki_matmul, mesh=mesh, cfg=cfg,
+                           axis="model", m_axis="data", schedule=schedule)
+    a = jax.ShapeDtypeStruct((n, n), jnp.float32, sharding=NamedSharding(
+        mesh, P("data", "model")))
+    b = jax.ShapeDtypeStruct((n, n), jnp.float32, sharding=NamedSharding(
+        mesh, P("model", None)))
+    col = "model" if schedule in ("reduce_scatter", "rs_stream") else None
+    ns = NamedSharding(mesh, P("data", col))
+    return fn, (a, b), (), DW(ns, ns)
+
+
+# ----------------------------------------------------------------------------
+# roofline terms
+# ----------------------------------------------------------------------------
+
+def roofline_record(stats: hlo_analysis.HLOStats, *, n_chips: int,
+                    model_flops_global: float,
+                    ideal_bytes_per_chip: float = 0.0) -> dict:
+    """The three roofline terms + how close the step is to ITS OWN bound.
+
+    ``roofline_fraction`` = (the step's unavoidable time: useful-FLOPs
+    at peak vs minimal data movement at full HBM bw, whichever is larger)
+    / (the modeled step time = max of the three terms). 1.0 means the
+    compiled program moves/computes nothing it doesn't have to.
+    """
+    int_fl = stats.int_flops
+    float_fl = stats.total_flops - int_fl
+    t_compute = float_fl / PEAK_BF16_FLOPS + int_fl / PEAK_INT8_OPS
+    t_memory = stats.hbm_bytes / HBM_BW
+    t_collective = stats.collective_link_bytes / ICI_LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+    model_flops_chip = model_flops_global / n_chips
+    t_ideal = max(model_flops_chip / PEAK_BF16_FLOPS,
+                  ideal_bytes_per_chip / HBM_BW)
+    bound = max(terms.values())
+    return {
+        "hlo_flops_per_chip": stats.total_flops,
+        "hlo_int_flops_per_chip": int_fl,
+        "hbm_bytes_per_chip": stats.hbm_bytes,
+        "ideal_bytes_per_chip": ideal_bytes_per_chip,
+        "collective_bytes": stats.collective_bytes,
+        "collective_counts": stats.collective_counts,
+        "collective_link_bytes_per_chip": stats.collective_link_bytes,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "model_flops_global": model_flops_global,
+        "model_flops_per_chip": model_flops_chip,
+        "useful_flops_ratio": (model_flops_chip / stats.total_flops
+                               if stats.total_flops else 0.0),
+        "bytes_efficiency": (ideal_bytes_per_chip / stats.hbm_bytes
+                             if stats.hbm_bytes else 0.0),
+        "roofline_fraction": (t_ideal / bound) if bound else 0.0,
+        "step_time_bound_s": bound,
+    }
+
+
+def _tree_bytes(tree) -> float:
+    """Global bytes across a tree of arrays/ShapeDtypeStructs."""
+    leaves = [l for l in jax.tree.leaves(tree)
+              if hasattr(l, "shape") and hasattr(l, "dtype")]
+    total = 0.0
+    for l in leaves:
+        n = 1
+        for d in l.shape:
+            n *= d
+        total += n * jnp.dtype(l.dtype).itemsize
+    return total
+
+
+def _tree_bytes_per_chip(tree) -> float:
+    """PER-CHIP bytes honoring each leaf's actual sharding: a leaf only
+    sharded over "model" (16-way) costs each chip 16x more than naive
+    global/256 — the minimal-traffic model must reflect that."""
+    total = 0.0
+    for l in jax.tree.leaves(tree):
+        if not (hasattr(l, "shape") and hasattr(l, "dtype")):
+            continue
+        n = 1
+        for d in l.shape:
+            n *= d
+        bytes_ = n * jnp.dtype(l.dtype).itemsize
+        sh = getattr(l, "sharding", None)
+        shards = 1
+        if sh is not None and hasattr(sh, "spec"):
+            for dim, entry in enumerate(list(sh.spec)):
+                if entry is None:
+                    continue
+                names = entry if isinstance(entry, tuple) else (entry,)
+                k = 1
+                for nm in names:
+                    k *= sh.mesh.shape[nm]
+                if l.shape[dim] % k == 0:
+                    shards *= k
+        total += bytes_ / shards
+    return total
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """6·N_active·D (train) / 2·N_active·D (inference forward)."""
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+# ----------------------------------------------------------------------------
+# one cell
+# ----------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             precision: str | None = None, rules: dict | None = None,
+             grad_accum: int = 8, tag: str = "", out_dir: str = OUT_DIR,
+             fold_causal: bool = False,
+             param_dtype: str | None = None,
+             accum_dtype: str | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "mesh_axes": list(mesh.axis_names),
+        "n_chips": n_chips, "tag": tag,
+        "precision": precision or "bf16",
+        "rules_overrides": rules or {},
+        "grad_accum": grad_accum,
+    }
+    if arch == "ozimmu-gemm":
+        gemm_opts = rules or {}
+        s = int(gemm_opts.get("splits", 9))
+        fn, args, donate, out_sh = abstract_gemm_cell(
+            shape_name, mesh, num_splits=s,
+            schedule=gemm_opts.get("schedule", "psum"),
+            fuse=bool(gemm_opts.get("fuse", True)))
+        n = GEMM_SHAPES[shape_name]
+        mf = 2.0 * n * n * n       # the FP64 GEMM being emulated
+        record["model_flops_note"] = "2mnk of the emulated DGEMM"
+        record["gemm_opts"] = dict(gemm_opts) | {"splits": s}
+        # minimal movement: read both inputs, write C (+ int8 slices once)
+        ideal_bytes = (_tree_bytes(args) + 2 * s * n * n) / n_chips
+    else:
+        overrides = {k: tuple(v) for k, v in (rules or {}).items()}
+        if shape_name == "long_500k" and "kv_heads" not in overrides:
+            # batch=1 leaves the data axis idle; park the KV heads there
+            # (2D-sharded cache: heads x sequence)
+            overrides["kv_heads"] = ("data",)
+            overrides["batch"] = ()
+        cfg = get_config(arch)
+        if precision:
+            cfg = dataclasses.replace(cfg, matmul_precision=precision)
+        if param_dtype:
+            cfg = dataclasses.replace(cfg, param_dtype=param_dtype)
+            record["param_dtype"] = param_dtype
+        if accum_dtype:
+            cfg = dataclasses.replace(cfg, accum_dtype=accum_dtype)
+            record["accum_dtype"] = accum_dtype
+        if fold_causal:
+            record["fold_causal"] = True
+            import repro.models.attention as attn_mod
+            import repro.models.transformer as tr_mod
+            _orig = attn_mod.chunked_attention
+            patched = functools.partial(_orig, fold_causal=True)
+            attn_mod.chunked_attention = patched
+            tr_mod.chunked_attention = patched   # transformer's binding
+        ga = grad_accum if SHAPES[shape_name].kind == "train" else 1
+        record["grad_accum"] = ga
+        fn, args, donate, out_sh = abstract_cell(
+            cfg, shape_name, mesh, rules_overrides=overrides or None,
+            grad_accum=ga)
+        mf = model_flops(cfg, shape_name)
+        # minimal data movement: every jit argument once (params, opt
+        # state, batch, caches) + grads written once for train steps —
+        # per chip, honoring each leaf's real sharding
+        ideal_bytes = _tree_bytes_per_chip(args)
+        if SHAPES[shape_name].kind == "train":
+            ideal_bytes += _tree_bytes_per_chip(args[0])   # grad write
+
+    lowered = jax.jit(fn, donate_argnums=donate,
+                      out_shardings=out_sh).lower(*args)
+    record["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t1, 1)
+
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+    }
+    peak = mem["argument_bytes"] + mem["temp_bytes"] + \
+        mem["output_bytes"] - mem["alias_bytes"]
+    mem["peak_bytes_per_chip"] = peak
+    mem["fits_16GiB"] = bool(peak <= HBM_PER_CHIP)
+    record["memory"] = mem
+
+    ca = compiled.cost_analysis() or {}
+    record["xla_cost_analysis"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+    }
+
+    stats = hlo_analysis.analyze(compiled.as_text())
+    record["roofline"] = roofline_record(stats, n_chips=n_chips,
+                                         model_flops_global=mf,
+                                         ideal_bytes_per_chip=ideal_bytes)
+    record["dot_flops_by_dtype"] = stats.dot_flops
+    record["ok"] = True
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell_name(record)), "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def cell_name(record: dict) -> str:
+    tag = f"_{record['tag']}" if record.get("tag") else ""
+    pods = "2pod" if record["n_chips"] == 512 else "1pod"
+    return f"{record['arch']}_{record['shape']}_{pods}{tag}.json"
+
+
+# ----------------------------------------------------------------------------
+# sweep driver (subprocess per cell: isolates OOM/hangs)
+# ----------------------------------------------------------------------------
+
+def all_cells(include_gemm: bool = True):
+    cells = []
+    for mp in (False, True):        # all single-pod first: roofline table
+        for arch in ALL_ARCHS:
+            for shape in SHAPES:
+                if cell_is_skipped(arch, shape):
+                    continue
+                cells.append((arch, shape, mp))
+        if include_gemm:
+            for shape in GEMM_SHAPES:
+                cells.append(("ozimmu-gemm", shape, mp))
+    return cells
+
+
+def sweep(args):
+    cells = all_cells()
+    done = failed = 0
+    for arch, shape, mp in cells:
+        rec = {"arch": arch, "shape": shape, "tag": args.tag,
+               "n_chips": 512 if mp else 256}
+        path = os.path.join(args.out, cell_name(rec))
+        if os.path.exists(path) and not args.force:
+            with open(path) as f:
+                if json.load(f).get("ok"):
+                    done += 1
+                    continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", args.out,
+               "--grad-accum", str(args.grad_accum)]
+        if mp:
+            cmd.append("--multi-pod")
+        if args.tag:
+            cmd += ["--tag", args.tag]
+        print(f"[dryrun] {arch} {shape} {'2pod' if mp else '1pod'} ...",
+              flush=True)
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            if r.returncode == 0:
+                done += 1
+                print("  ok", flush=True)
+            else:
+                failed += 1
+                err = (r.stderr or r.stdout).strip().splitlines()
+                tail = "\n".join(err[-15:])
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape, "ok": False,
+                               "tag": args.tag,
+                               "n_chips": 512 if mp else 256,
+                               "error": tail}, f, indent=1)
+                print(f"  FAILED:\n{tail}\n", flush=True)
+        except subprocess.TimeoutExpired:
+            failed += 1
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "ok": False,
+                           "tag": args.tag, "n_chips": 512 if mp else 256,
+                           "error": "timeout"}, f, indent=1)
+            print("  TIMEOUT", flush=True)
+    print(f"[dryrun] complete: {done} ok, {failed} failed "
+          f"of {len(cells)}")
+    return failed
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--precision", default=None,
+                    choices=[None, "bf16", "int8_quant", "ozaki_fp64"])
+    ap.add_argument("--rules", default=None,
+                    help='JSON dict: logical axis -> [mesh axes]')
+    ap.add_argument("--grad-accum", type=int, default=0,
+                    help="0: use the arch config's train_grad_accum")
+    ap.add_argument("--fold-causal", action="store_true")
+    ap.add_argument("--param-dtype", default=None,
+                    choices=[None, "float32", "bfloat16"])
+    ap.add_argument("--accum-dtype", default=None,
+                    choices=[None, "float32", "bfloat16"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    if args.all:
+        sys.exit(1 if sweep(args) else 0)
+
+    rules = json.loads(args.rules) if args.rules else None
+    try:
+        rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                       precision=args.precision, rules=rules,
+                       grad_accum=args.grad_accum, tag=args.tag,
+                       out_dir=args.out, fold_causal=args.fold_causal,
+                       param_dtype=args.param_dtype,
+                       accum_dtype=args.accum_dtype)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+    r = rec["roofline"]
+    print(json.dumps({
+        "cell": cell_name(rec),
+        "compile_s": rec["compile_s"],
+        "peak_GiB": round(rec["memory"]["peak_bytes_per_chip"] / 2**30, 2),
+        "fits": rec["memory"]["fits_16GiB"],
+        "t_compute_ms": round(r["t_compute_s"] * 1e3, 3),
+        "t_memory_ms": round(r["t_memory_s"] * 1e3, 3),
+        "t_collective_ms": round(r["t_collective_s"] * 1e3, 3),
+        "dominant": r["dominant"],
+        "useful_ratio": round(r["useful_flops_ratio"], 3),
+        "roofline_fraction": round(r["roofline_fraction"], 3),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,422 @@
+"""Post-optimization HLO analyzer: FLOPs, HBM traffic, collective bytes.
+
+Why not ``compiled.cost_analysis()``: XLA's cost analysis visits a while
+body ONCE — a 94-layer scanned model under-reports by 94x (verified
+empirically; see EXPERIMENTS.md §Dry-run notes). This parser walks the
+call graph from ENTRY, multiplies through ``while`` trip counts (scan
+loops carry ``compare(iter, constant), direction=LT`` conditions), and
+accumulates:
+
+  * dot FLOPs, split by operand dtype (bf16/f32 vs int8 — they hit
+    different peak numbers on the MXU);
+  * a fusion-level HBM traffic model: every top-level op moves
+    (operand bytes + result bytes), matching XLA's "one read per input,
+    one write per output" fusion contract (fusion *bodies* are walked
+    for FLOPs/collectives but add no extra traffic);
+  * per-kind collective bytes and ring-model link bytes per chip.
+
+Optimized HLO operands are *names only* (``dot(%a, %b)``), so each
+computation keeps a symbol table name -> result type built from the
+defining lines (parameters included).
+
+The compiled module is already SPMD-partitioned, so every shape is
+per-device — exactly what the roofline terms need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_OPCODE_RE = re.compile(r"\b([a-z][a-z0-9\-]*)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_CALLED_LIST_RE = re.compile(
+    r"(calls|to_apply|body|condition|branch_computations)="
+    r"(\{[^}]*\}|%?[\w.\-]+)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CONST_RE = re.compile(r"=\s*s(?:32|64)\[\]\s*constant\((\d+)\)")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_NO_TRAFFIC = {"parameter", "get-tuple-element", "tuple", "constant",
+               "bitcast", "copy-done", "after-all", "partition-id",
+               "replica-id", "iota", "reshape"}
+
+# Ops XLA:TPU fuses into element-per-element kernels. CPU-compiled HLO
+# keeps softmax-style chains as MANY small fusions; counting each would
+# model a 5-10x HBM pessimism the TPU backend doesn't have, so chains of
+# single-consumer fusable ops are merged into "super fusions" and charged
+# only at their boundaries (one read per external input, one write per
+# externally-used output).
+_FUSABLE = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+            "exponential", "exponential-minus-one", "tanh", "negate",
+            "abs", "power", "rsqrt", "sqrt", "log", "log-plus-one",
+            "select", "compare", "and", "or", "not", "xor", "convert",
+            "broadcast", "clamp", "floor", "ceil", "round-nearest-even",
+            "sign", "reduce", "transpose", "slice", "pad", "copy",
+            "reverse", "rem", "shift-right-logical", "shift-left",
+            "shift-right-arithmetic", "is-finite", "atan2", "expm1",
+            "log1p", "cosine", "sine", "reduce-window"}
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems_dt(text: str) -> Optional[tuple[str, list[int]]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result: str       # result type text (before the opcode token)
+    args: str         # inside the call parens (operand names)
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: list
+    constants: dict   # op name -> int (s32 scalar constants)
+    types: dict       # op name -> result type text
+    root_opcode: str = ""
+
+
+def parse_computations(hlo: str) -> tuple[dict, Optional[str]]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        m = _COMP_RE.match(line)
+        if m:
+            cur = Computation(m.group(2), bool(m.group(1)), [], {}, {})
+            comps[cur.name] = cur
+            if cur.is_entry:
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip().startswith("}"):
+            cur = None
+            continue
+        s = line.strip()
+        if not s.startswith(("%", "ROOT")):
+            continue
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        is_root = s.startswith("ROOT")
+        name = s[:eq].replace("ROOT", "").strip().lstrip("%")
+        rest = s[eq + 3:]
+        om = _OPCODE_RE.search(rest)
+        if not om:
+            continue
+        opcode = om.group(1)
+        result = rest[:om.start()]
+        depth = 0
+        args_end = om.end() - 1
+        for i in range(om.end() - 1, len(rest)):
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    args_end = i
+                    break
+        args = rest[om.end():args_end]
+        cur.ops.append(Op(name, opcode, result, args, s))
+        cur.types[name] = result
+        if is_root:
+            cur.root_opcode = opcode
+        cm = _CONST_RE.search(s)
+        if cm:
+            cur.constants[name] = int(cm.group(1))
+    return comps, entry
+
+
+def _called_comps(line: str) -> list[tuple[str, str]]:
+    out = []
+    for m in _CALLED_LIST_RE.finditer(line):
+        kind, val = m.group(1), m.group(2)
+        if val.startswith("{"):
+            for name in val.strip("{}").split(","):
+                out.append((kind, name.strip().lstrip("%")))
+        else:
+            out.append((kind, val.lstrip("%")))
+    return out
+
+
+def _while_trip_count(cond: Computation) -> int:
+    for op in cond.ops:
+        if op.opcode == "compare" and "direction=LT" in op.line:
+            for a in _NAME_RE.findall(op.args):
+                if a in cond.constants:
+                    return cond.constants[a]
+    if cond.constants:
+        return max(cond.constants.values())
+    return 1
+
+
+def _operand_types(op: Op, comp: Computation) -> list[str]:
+    return [comp.types.get(a, "") for a in _NAME_RE.findall(op.args)]
+
+
+def _dot_flops(op: Op, comp: Computation) -> tuple[float, str]:
+    res = _shape_elems_dt(op.result)
+    operands = _operand_types(op, comp)
+    lhs = _shape_elems_dt(operands[0]) if operands else None
+    if res is None or lhs is None:
+        return 0.0, "f32"
+    lhs_dt, lhs_dims = lhs
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    k = 1
+    if cm and cm.group(1):
+        for idx in cm.group(1).split(","):
+            k *= lhs_dims[int(idx)]
+    n_out = 1
+    for d in res[1]:
+        n_out *= d
+    return 2.0 * n_out * k, lhs_dt
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m2 = _GROUPS_LIST_RE.search(line)
+    return len(m2.group(1).split(",")) if m2 else 1
+
+
+def _collective_stats(op: Op) -> tuple[str, float, int]:
+    """(kind, payload bytes = FULL reduced/gathered tensor, group size)."""
+    kind = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+    gsize = _group_size(op.line)
+    res = _shape_bytes(op.result)
+    if kind == "reduce-scatter":
+        payload = res * gsize            # operand = result x group
+    else:
+        payload = res                    # AR/AG/A2A/CP: result-sized
+    return kind, payload, gsize
+
+
+def _link_bytes(kind: str, payload: float, gsize: int) -> float:
+    """Ring-model per-chip link traffic for one collective."""
+    if gsize <= 1:
+        return 0.0
+    f = (gsize - 1) / gsize
+    if kind == "all-reduce":
+        return 2.0 * f * payload
+    if kind in ("all-gather", "reduce-scatter", "all-to-all"):
+        return f * payload
+    if kind == "collective-permute":
+        return payload
+    return 0.0
+
+
+@dataclasses.dataclass
+class HLOStats:
+    dot_flops: dict                  # operand dtype -> flops (per chip)
+    hbm_bytes: float                 # traffic model (per chip)
+    collective_bytes: dict           # kind -> payload bytes
+    collective_link_bytes: float     # ring-model per-chip link bytes
+    collective_counts: dict          # kind -> dynamic op count
+
+    @property
+    def total_flops(self) -> float:
+        return float(sum(self.dot_flops.values()))
+
+    @property
+    def int_flops(self) -> float:
+        return float(sum(v for k, v in self.dot_flops.items()
+                         if k in ("s8", "u8", "s4", "u4", "s16")))
+
+
+def analyze(hlo: str) -> HLOStats:
+    comps, entry = parse_computations(hlo)
+    if entry is None:
+        entry = next((n for n in comps if "main" in n), None) or \
+            next(iter(comps))
+
+    flops = defaultdict(float)
+    coll_bytes = defaultdict(float)
+    coll_counts = defaultdict(float)
+    totals = {"hbm": 0.0, "link": 0.0}
+    stack: list[str] = []
+
+    def _is_fusable(op: Op) -> bool:
+        if op.opcode in _FUSABLE:
+            return True
+        if op.opcode == "fusion":
+            called = dict(_called_comps(op.line))
+            body = comps.get(called.get("calls", ""))
+            has_dus = body is not None and any(
+                o.opcode in ("dynamic-update-slice", "scatter")
+                for o in body.ops)
+            return not has_dus
+        return False
+
+    def _comp_traffic(comp: Computation) -> float:
+        """HBM bytes per execution of one computation's top-level ops.
+
+        Single-consumer chains of fusable ops are merged (union-find)
+        and charged at the super-fusion boundary only. In-place patterns
+        (DUS/gather/scatter/dynamic-slice and DUS fusions) move only the
+        touched slice.
+        """
+        ops_by_name = {o.name: o for o in comp.ops}
+        consumers: dict = defaultdict(list)
+        for op in comp.ops:
+            if op.opcode in ("parameter", "constant"):
+                continue
+            for a in _NAME_RE.findall(op.args):
+                if a in ops_by_name:
+                    consumers[a].append(op.name)
+
+        parent = {o.name: o.name for o in comp.ops}
+
+        def find(x):
+            while parent[x] != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+
+        def union(a, b):
+            parent[find(a)] = find(b)
+
+        transparent = {"get-tuple-element", "bitcast", "reshape", "tuple"}
+        for op in comp.ops:
+            if not _is_fusable(op):
+                continue
+            for a in _NAME_RE.findall(op.args):
+                prod = ops_by_name.get(a)
+                if prod is None:
+                    continue
+                if not (_is_fusable(prod) or prod.opcode in transparent):
+                    continue
+                # single consumer: classic fusion. multiple consumers:
+                # the TPU backend duplicates the producer into each
+                # fusable consumer, so the value never hits HBM as long
+                # as EVERY consumer is fusable.
+                if len(consumers[a]) == 1 or all(
+                        _is_fusable(ops_by_name[c]) or
+                        ops_by_name[c].opcode in transparent
+                        for c in consumers[a]):
+                    union(op.name, a)
+
+        total = 0.0
+        for op in comp.ops:
+            oc = op.opcode
+            if oc in _NO_TRAFFIC or oc.endswith("-done") or \
+                    oc in ("while", "conditional", "call"):
+                continue
+            operands = [_shape_bytes(t) for t in _operand_types(op, comp)]
+            res = _shape_bytes(op.result)
+            g = find(op.name)
+            # reads: operands produced OUTSIDE this op's group
+            ext_read = 0.0
+            for a, ob in zip(_NAME_RE.findall(op.args), operands):
+                prod = ops_by_name.get(a)
+                if prod is not None and prod.opcode not in (
+                        "parameter", "constant") and find(a) == g:
+                    continue                      # fused internal edge
+                ext_read += min(ob, res) if _is_fusable(op) or \
+                    oc == "fusion" else ob
+            # writes: results consumed outside the group (or root)
+            used_outside = (not consumers[op.name]) or any(
+                find(cname) != g for cname in consumers[op.name])
+            ext_write = res if used_outside else 0.0
+
+            if oc == "dynamic-update-slice":
+                upd = operands[1] if len(operands) > 1 else 0.0
+                total += 2.0 * upd
+                continue
+            if oc in ("dynamic-slice", "gather"):
+                total += (res if used_outside else 0.0) + res
+                continue
+            if oc == "scatter":
+                upd = operands[2] if len(operands) > 2 else res
+                total += 3.0 * upd
+                continue
+            if oc == "fusion":
+                called = dict(_called_comps(op.line))
+                body = comps.get(called.get("calls", ""))
+                has_dus = body is not None and any(
+                    o.opcode in ("dynamic-update-slice", "scatter")
+                    for o in body.ops)
+                if has_dus:
+                    smaller = [o for o in operands if o < res]
+                    total += 2.0 * (max(smaller) if smaller else 0.0)
+                    continue
+            total += ext_read + ext_write
+        return total
+
+    comp_traffic_cache: dict = {}
+
+    def walk(comp_name: str, mult: float, traffic: bool):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in stack:
+            return
+        stack.append(comp_name)
+        if traffic:
+            if comp_name not in comp_traffic_cache:
+                comp_traffic_cache[comp_name] = _comp_traffic(comp)
+            totals["hbm"] += mult * comp_traffic_cache[comp_name]
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                called = dict(_called_comps(op.line))
+                cond = called.get("condition")
+                body = called.get("body")
+                trips = _while_trip_count(comps[cond]) \
+                    if cond in comps else 1
+                if body in comps:
+                    walk(body, mult * trips, traffic)
+                continue
+            for attr, cn in _called_comps(op.line):
+                if cn not in comps:
+                    continue
+                if attr == "calls":                 # fusion body
+                    walk(cn, mult, False)
+                elif attr in ("branch_computations", "to_apply"):
+                    walk(cn, mult, traffic)
+            if oc == "dot":
+                fl, dt = _dot_flops(op, comp)
+                flops[dt] += mult * fl
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in COLLECTIVE_KINDS and not oc.endswith("-done"):
+                kind, payload, gsize = _collective_stats(op)
+                coll_bytes[kind] += mult * payload
+                coll_counts[kind] += mult
+                totals["link"] += mult * _link_bytes(kind, payload, gsize)
+        stack.pop()
+
+    walk(entry, 1.0, True)
+    return HLOStats(dict(flops), totals["hbm"], dict(coll_bytes),
+                    totals["link"], dict(coll_counts))

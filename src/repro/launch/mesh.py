@@ -1,0 +1,38 @@
+"""Mesh construction (functions, not module constants — importing this
+module never touches jax device state).
+
+Production target: TPU v5e pods, 256 chips each, 16x16 ICI torus.
+Single-pod mesh (16, 16) = ("data", "model"); multi-pod adds a leading
+"pod" axis over DCN: (2, 16, 16) = ("pod", "data", "model").
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def _auto(n: int):
+    return (AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_local_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over however many (CPU) devices the test session has."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=_auto(3))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+# TPU v5e hardware constants (per chip) — the roofline denominators.
+PEAK_BF16_FLOPS = 197e12        # bf16 MXU
+PEAK_INT8_OPS = 394e12          # int8 MXU (the paper's 2x IMMU advantage)
+HBM_BW = 819e9                  # bytes/s
+ICI_LINK_BW = 50e9              # bytes/s per link
+HBM_PER_CHIP = 16 * 2**30       # 16 GiB

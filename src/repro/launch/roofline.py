@@ -1,0 +1,132 @@
+"""Roofline table emitter: reads experiments/dryrun/*.json, writes the
+§Dry-run and §Roofline markdown tables for EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--out experiments]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ALL_ARCHS, SHAPES, cell_is_skipped
+
+NOTES = {
+    "compute": "compute-bound: raise useful-FLOPs ratio (causal folding, "
+               "less padding/remat waste)",
+    "memory": "memory-bound: cut activation/cache materializations "
+              "(bf16 end-to-end, fused attention, fewer saves)",
+    "collective": "collective-bound: re-balance sharding rules (less TP, "
+                  "more DP/FSDP; overlap or compress collectives)",
+}
+
+
+def load_cells(dry_dir: str) -> dict:
+    cells = {}
+    for path in glob.glob(os.path.join(dry_dir, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        key = (r["arch"], r["shape"], r.get("n_chips", 256),
+               r.get("tag", ""))
+        cells[key] = r
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def dryrun_table(cells: dict, tag: str = "") -> str:
+    rows = ["| arch | shape | mesh | compile | peak HBM/chip | fits 16GiB "
+            "| collective schedule (ring bytes/chip) |",
+            "|---|---|---|---|---|---|---|"]
+    order = list(ALL_ARCHS) + ["ozimmu-gemm"]
+    for arch in order:
+        for shape in (list(SHAPES) if arch != "ozimmu-gemm" else
+                      ["gemm_8k", "gemm_16k", "gemm_32k"]):
+            if arch != "ozimmu-gemm" and cell_is_skipped(arch, shape):
+                rows.append(f"| {arch} | {shape} | — | — | — | — | "
+                            f"SKIPPED: quadratic full attention at 500k "
+                            f"(DESIGN.md §6) |")
+                continue
+            for chips in (256, 512):
+                r = cells.get((arch, shape, chips, tag))
+                if r is None:
+                    continue
+                if not r.get("ok"):
+                    rows.append(f"| {arch} | {shape} | {r.get('mesh')} | "
+                                f"FAILED | — | — | {r.get('error', '')[:60]} |")
+                    continue
+                m = r["memory"]
+                rf = r["roofline"]
+                colls = ", ".join(
+                    f"{k.replace('collective-', 'c')}:"
+                    f"{v / 1e9:.1f}GB(x{int(r['roofline']['collective_counts'].get(k, 0))})"
+                    for k, v in sorted(rf["collective_bytes"].items())
+                    if v > 1e6) or "none"
+                rows.append(
+                    f"| {arch} | {shape} | {r['mesh']} | "
+                    f"{r['compile_s']:.0f}s | "
+                    f"{m['peak_bytes_per_chip'] / 2**30:.1f}GiB | "
+                    f"{'yes' if m['fits_16GiB'] else 'NO*'} | {colls} |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells: dict, tag: str = "") -> str:
+    rows = ["| arch | shape | t_compute | t_memory | t_collective | "
+            "dominant | MODEL/HLO flops | roofline frac | next move |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    order = list(ALL_ARCHS) + ["ozimmu-gemm"]
+    for arch in order:
+        for shape in (list(SHAPES) if arch != "ozimmu-gemm" else
+                      ["gemm_8k", "gemm_16k", "gemm_32k"]):
+            r = cells.get((arch, shape, 256, tag))
+            if r is None or not r.get("ok"):
+                continue
+            rf = r["roofline"]
+            rows.append(
+                f"| {arch} | {shape} | {fmt_s(rf['t_compute_s'])} | "
+                f"{fmt_s(rf['t_memory_s'])} | "
+                f"{fmt_s(rf['t_collective_s'])} | {rf['dominant']} | "
+                f"{rf['useful_flops_ratio']:.3f} | "
+                f"{rf['roofline_fraction']:.3f} | "
+                f"{NOTES[rf['dominant']]} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(cells: dict) -> list:
+    """worst roofline fraction / most collective-bound / paper-native."""
+    lm = [(k, r) for k, r in cells.items()
+          if r.get("ok") and k[2] == 256 and k[0] != "ozimmu-gemm"
+          and not k[3]]
+    worst = min(lm, key=lambda kr: kr[1]["roofline"]["roofline_fraction"])
+    coll = max(lm, key=lambda kr: kr[1]["roofline"]["t_collective_s"] /
+               max(kr[1]["roofline"]["step_time_bound_s"], 1e-12))
+    return [worst[0], coll[0], ("ozimmu-gemm", "gemm_16k", 256, "")]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "experiments",
+        "dryrun"))
+    args = ap.parse_args()
+    cells = load_cells(args.dry_dir)
+    print("## §Dry-run\n")
+    print(dryrun_table(cells))
+    print("\n## §Roofline (single-pod 16x16)\n")
+    print(roofline_table(cells))
+    print("\n## hillclimb candidates\n")
+    for c in pick_hillclimb(cells):
+        r = cells[c]["roofline"]
+        print(f"- {c[0]} {c[1]}: dominant={r['dominant']} "
+              f"frac={r['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Serving launcher: continuous-batching engine demo on a reduced config.
+
+Submits a stream of randomized requests, drains the engine, and verifies
+one request against the sequential reference generator.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
+        --requests 6 --slots 3
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_model
+from repro.serving.engine import (Request, ServingEngine,
+                                  generate_sequential)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    if cfg.frontend == "audio":
+        raise SystemExit("serve demo targets text archs; see tests for "
+                         "audio decode coverage")
+    params, _ = init_model(cfg, jax.random.key(args.seed))
+    rng = np.random.default_rng(args.seed)
+
+    engine = ServingEngine(cfg, params, num_slots=args.slots,
+                           max_len=args.max_len)
+    reqs = []
+    for rid in range(args.requests):
+        plen = int(rng.integers(4, 12))
+        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        req = Request(rid, prompt, max_new_tokens=args.max_new)
+        reqs.append(req)
+        engine.submit(req)
+
+    t0 = time.time()
+    finished = engine.run_until_done()
+    dt = time.time() - t0
+    total_tokens = sum(len(r.generated) for r in finished)
+    print(f"[serve] {len(finished)} requests, {total_tokens} tokens in "
+          f"{dt:.2f}s ({total_tokens / dt:.1f} tok/s) with "
+          f"{engine._steps} batched decode ticks")
+
+    ref = generate_sequential(cfg, params, reqs[0].prompt,
+                              reqs[0].max_new_tokens,
+                              max_len=args.max_len)
+    got = next(r for r in finished if r.rid == 0).generated
+    assert got == ref, (got, ref)
+    print("[serve] continuous-batching output == sequential reference ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""LM substrate: layers, attention, MoE, SSM, and model assembly."""
+from .attention import KVCache, chunked_attention, decode_attention
+from .layers import ParamBuilder, policy_matmul, rms_norm
+from .transformer import (DecodeState, decode_step, forward_train,
+                          init_decode_state, init_model, prefill)
+
+__all__ = ["KVCache", "chunked_attention", "decode_attention",
+           "ParamBuilder", "policy_matmul", "rms_norm", "DecodeState",
+           "decode_step", "forward_train", "init_decode_state",
+           "init_model", "prefill"]

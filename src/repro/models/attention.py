@@ -1,0 +1,282 @@
+"""Attention: chunked (flash-style) training/prefill path + decode path.
+
+Layout choice (DESIGN.md §7): everything runs in the *query-head* layout
+(b, s, h, d) with KV broadcast to query heads by a static gather
+(``kv_index = arange(h) // group``). Tensor parallelism then shards the
+``h`` dim over the "model" mesh axis — under that sharding the gather
+reads only the local heads' KV, logits/softmax/AV stay local, and no
+attention collective is emitted. Archs whose 24 heads don't divide the
+16-way axis compile with GSPMD padding (25% attention-only overhead,
+recorded in the roofline table; the grouped-KV alternative pads 2-8x).
+
+The chunked path tiles BOTH query and key/value: an outer ``lax.map``
+over query blocks, an inner ``lax.scan`` over KV blocks with an online
+softmax. Per-layer live memory is O(q_block x kv_block) logits — the
+32k-prefill fit depends on this. ``window`` may be a *traced* scalar so
+gemma2's local/global alternation works inside a layer scan.
+
+Baseline computes the full rectangular block grid with masking (2x the
+causal-optimal FLOPs at long seq); ``fold_causal=True`` recovers the
+triangle: query blocks are processed in pairs (i, n-1-i), every pair
+visiting exactly n+1 KV blocks — uniform static work per scan step,
+triangle FLOPs total (§Perf optimization O6).
+
+Decode path: one query position against a full KV cache, which is
+sequence-sharded over "model" (flash-decoding): each chip scores its
+cache shard, and softmax over the sharded axis lowers to two small
+all-reduces (max + denominator).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """Decode cache for one attention block application.
+
+    k, v: (batch, max_len, kv_heads, head_dim)
+    """
+
+    k: jax.Array
+    v: jax.Array
+
+
+def broadcast_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """(b, s, hkv, d) -> (b, s, h, d) by the static head map."""
+    hkv = k.shape[2]
+    if hkv == num_heads:
+        return k
+    idx = jnp.arange(num_heads) // (num_heads // hkv)
+    return jnp.take(k, idx, axis=2)
+
+
+def _bias_block(q_pos, k_pos, *, causal: bool, window, valid_len):
+    """(q_blk, k_blk) additive f32 bias from absolute positions.
+
+    window / valid_len may be traced scalars (0 / huge => inactive).
+    """
+    rel = q_pos[:, None] - k_pos[None, :]
+    ok = k_pos[None, :] < valid_len
+    if causal:
+        ok &= rel >= 0
+    win = jnp.asarray(window)
+    ok &= (win <= 0) | (rel < win)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window=0,
+                      softcap: float = 0.0, q_block: int = 1024,
+                      kv_block: int = 512,
+                      fold_causal: bool = False) -> jax.Array:
+    """q: (b, sq, h, d); k, v: (b, skv, hkv, d) -> (b, sq, h, d)."""
+    h = q.shape[2]
+    k = constrain(broadcast_kv(k, h), ("batch", None, "heads", None))
+    v = constrain(broadcast_kv(v, h), ("batch", None, "heads", None))
+    if fold_causal and causal:
+        return _folded_causal_attention(q, k, v, window=window,
+                                        softcap=softcap, q_block=q_block,
+                                        kv_block=kv_block)
+    b, sq, h, d = q.shape
+    _, skv, _, _ = k.shape
+    qb = min(q_block, sq)
+    kb = min(kv_block, skv)
+    nqb, nkb = -(-sq // qb), -(-skv // kb)
+    qpad, kpad = nqb * qb - sq, nkb * kb - skv
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    scale = d ** -0.5
+    qs = (q.astype(jnp.float32) * scale).reshape(b, nqb, qb, h, d)
+    qs = qs.swapaxes(0, 1)                        # (nqb, b, qb, h, d)
+    ks = k.reshape(b, nkb, kb, h, d).swapaxes(0, 1).astype(jnp.float32)
+    vs = v.reshape(b, nkb, kb, h, d).swapaxes(0, 1).astype(jnp.float32)
+
+    def one_q_block(inp):
+        qi, qf = inp                              # scalar idx, (b,qb,h,d)
+        q_pos = qi * qb + jnp.arange(qb)
+
+        def body(carry, kin):
+            acc, m, l = carry
+            kb_arr, vb_arr, ki = kin
+            k_pos = ki * kb + jnp.arange(kb)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb_arr)
+            s = constrain(s, ("batch", "heads", None, None))
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            bias = _bias_block(q_pos, k_pos, causal=causal, window=window,
+                               valid_len=skv)
+            s = s + bias[None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vb_arr)
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, h, qb, d), jnp.float32)
+        m0 = jnp.full((b, h, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, qb), jnp.float32)
+        (acc, _, l), _ = jax.lax.scan(
+            body, (acc0, m0, l0), (ks, vs, jnp.arange(nkb)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.swapaxes(1, 2).astype(q.dtype)  # (b, qb, h, d)
+
+    outs = jax.lax.map(one_q_block, (jnp.arange(nqb), qs))
+    out = outs.swapaxes(0, 1).reshape(b, nqb * qb, h, d)
+    return out[:, :sq]
+
+
+def _folded_causal_attention(q, k, v, *, window, softcap, q_block,
+                             kv_block):
+    """Causal attention at triangle FLOPs with static shapes (§Perf O6).
+
+    Query blocks are paired (i, n-1-i). A pair needs KV blocks
+    [0..i] + [0..n-1-i] — exactly n+1 block visits for every pair, so an
+    inner scan of fixed length n+1 does uniform work with no masking
+    waste beyond the diagonal blocks. k/v arrive pre-broadcast to query
+    heads.
+    """
+    b, sq, h, d = q.shape
+    _, skv, _, _ = k.shape
+    blk = min(q_block, kv_block, sq, skv)
+    n = -(-sq // blk)
+    pad = n * blk - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if n % 2:                                     # odd: plain path
+        return chunked_attention(q[:, :sq], k[:, :skv], v[:, :skv],
+                                 causal=True, window=window,
+                                 softcap=softcap, q_block=blk,
+                                 kv_block=blk, fold_causal=False)
+    scale = d ** -0.5
+    qs = (q.astype(jnp.float32) * scale).reshape(b, n, blk, h, d)
+    qs = qs.swapaxes(0, 1)
+    ks = k.reshape(b, n, blk, h, d).swapaxes(0, 1).astype(jnp.float32)
+    vs = v.reshape(b, n, blk, h, d).swapaxes(0, 1).astype(jnp.float32)
+
+    def one_pair(pair_idx):
+        i = pair_idx                              # first member
+        j = n - 1 - pair_idx                      # second member
+        qa = jax.lax.dynamic_index_in_dim(qs, i, 0, False)
+        qb_ = jax.lax.dynamic_index_in_dim(qs, j, 0, False)
+
+        def body(carry, t):
+            (acc_a, m_a, l_a), (acc_b, m_b, l_b) = carry
+            serve_a = t <= i
+            kv_idx = jnp.where(serve_a, t, t - i - 1)
+            kb_arr = jax.lax.dynamic_index_in_dim(ks, kv_idx, 0, False)
+            vb_arr = jax.lax.dynamic_index_in_dim(vs, kv_idx, 0, False)
+            qf = jnp.where(serve_a, qa, qb_)
+            q_idx = jnp.where(serve_a, i, j)
+            q_pos = q_idx * blk + jnp.arange(blk)
+            k_pos = kv_idx * blk + jnp.arange(blk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb_arr)
+            s = constrain(s, ("batch", "heads", None, None))
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            s = s + _bias_block(q_pos, k_pos, causal=True, window=window,
+                                valid_len=skv)[None, None]
+            m, l, acc = (jnp.where(serve_a, m_a, m_b),
+                         jnp.where(serve_a, l_a, l_b),
+                         jnp.where(serve_a, acc_a, acc_b))
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vb_arr)
+            a_state = (jnp.where(serve_a, acc_new, acc_a),
+                       jnp.where(serve_a, m_new, m_a),
+                       jnp.where(serve_a, l_new, l_a))
+            b_state = (jnp.where(serve_a, acc_b, acc_new),
+                       jnp.where(serve_a, m_b, m_new),
+                       jnp.where(serve_a, l_b, l_new))
+            return (a_state, b_state), None
+
+        z = lambda: (jnp.zeros((b, h, blk, d), jnp.float32),
+                     jnp.full((b, h, blk), NEG_INF, jnp.float32),
+                     jnp.zeros((b, h, blk), jnp.float32))
+        ((acc_a, _, l_a), (acc_b, _, l_b)), _ = jax.lax.scan(
+            body, (z(), z()), jnp.arange(n + 1))
+        oa = (acc_a / jnp.maximum(l_a[..., None], 1e-30)).swapaxes(1, 2)
+        ob = (acc_b / jnp.maximum(l_b[..., None], 1e-30)).swapaxes(1, 2)
+        return oa.astype(q.dtype), ob.astype(q.dtype)
+
+    outs_a, outs_b = jax.lax.map(one_pair, jnp.arange(n // 2))
+    out = jnp.concatenate([outs_a, outs_b[::-1]], axis=0)  # (n, b, blk,..)
+    out = out.swapaxes(0, 1).reshape(b, n * blk, h, d)
+    return out[:, :sq]
+
+
+def decode_attention(q: jax.Array, cache: KVCache, kv_len, *,
+                     window=0, softcap: float = 0.0) -> jax.Array:
+    """One-token attention. q: (b, 1, h, d); cache holds (b, L, hkv, d).
+
+    Flash-decoding under GSPMD: the cache is sequence-sharded, logits are
+    constrained to the same sharding, and the softmax max/denominator
+    reduce over the shard axis as two tiny all-reduces.
+
+    ``kv_len``: valid cache length; scalar or (b,) per-slot cursors.
+    The einsum keeps the cache dtype (bf16) with f32 accumulation — no
+    f32 materialization of the cache.
+    """
+    b, _, h, d = q.shape
+    _, max_len, hkv, _ = cache.k.shape
+    g = h // hkv
+    qf = (q.astype(jnp.float32) * d ** -0.5).reshape(b, hkv, g, d)
+    # q must NOT stay head-sharded here: with the cache sequence-sharded,
+    # a head-sharded q forces a cache-sized all-to-all (observed 195 GB
+    # on the 500k cells). Replicate the tiny q instead.
+    qf = constrain(qf, ("batch", None, None, None))
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf.astype(cache.k.dtype), cache.k,
+                   preferred_element_type=jnp.float32)
+    s = constrain(s, ("batch", "kv_heads", None, "kv_seq"))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kv_len = jnp.reshape(jnp.broadcast_to(jnp.asarray(kv_len), (b,)), (b, 1))
+    pos = jnp.arange(max_len)[None, :]
+    ok = pos < kv_len                                # (b, L)
+    win = jnp.asarray(window)
+    ok &= (win <= 0) | (pos >= kv_len - win)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(cache.v.dtype), cache.v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def cache_update(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                 pos) -> KVCache:
+    """Write one position (b, 1, hkv, d) at ``pos`` (scalar or (b,)).
+
+    One-hot select, not dynamic-update-slice: the cache is SHARDED along
+    the sequence dim, and a DUS at a traced index there makes GSPMD
+    all-gather the whole cache (observed 131 GiB peak on the 500k
+    cells). The select is elementwise -> fully sharded; XLA fuses it
+    into an in-place masked write of the donated buffer.
+    """
+    b, max_len = cache.k.shape[:2]
+    pos = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    oh = (jnp.arange(max_len)[None, :] == pos[:, None])[..., None, None]
+    k = jnp.where(oh, k_new.astype(cache.k.dtype), cache.k)
+    v = jnp.where(oh, v_new.astype(cache.v.dtype), cache.v)
+    return KVCache(k, v)
+
+
+def init_cache(batch: int, max_len: int, kv_heads: int, head_dim: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    z = jnp.zeros((batch, max_len, kv_heads, head_dim), dtype)
+    return KVCache(z, z)

@@ -1,0 +1,202 @@
+"""Shared model layers with the Ozaki matmul-precision policy.
+
+Every dense projection in the LM substrate goes through ``policy_matmul``,
+which dispatches on ``ArchConfig.matmul_precision``:
+
+  * ``bf16``       — cast to bf16, MXU matmul, f32 accumulation
+                     (``preferred_element_type``): the TPU-native baseline.
+  * ``int8_quant`` — per-channel symmetric int8 quantization of x and w,
+                     int8 x int8 -> int32 MXU matmul, rescale. Lossy; this
+                     is the inference mode the IMMUs were built for.
+  * ``ozaki_fp64`` — the paper: error-free Ozaki splitting into int8
+                     slices, exact int32 slice GEMMs, df32 accumulation.
+                     FP64-accurate on hardware with no FP64 unit.
+
+Parameters are created together with their *logical axis names*; the
+parallel layer maps those to mesh axes (``repro.parallel.sharding``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any        # nested dict of jnp arrays
+Axes = Any          # matching nested dict of tuples of logical axis names
+
+
+# ----------------------------------------------------------------------------
+# Parameter creation with logical axes
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ParamBuilder:
+    """Collects (params, axes) trees; init functions thread one through."""
+
+    key: jax.Array
+    dtype: Any = jnp.float32
+    params: dict = dataclasses.field(default_factory=dict)
+    axes: dict = dataclasses.field(default_factory=dict)
+
+    def _next_key(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def dense(self, name: str, shape: tuple[int, ...], axes: tuple[str, ...],
+              scale: Optional[float] = None):
+        fan_in = shape[0]
+        scale = (1.0 / fan_in) ** 0.5 if scale is None else scale
+        self.params[name] = (jax.random.normal(self._next_key(), shape,
+                                               self.dtype) * scale)
+        self.axes[name] = axes
+
+    def zeros(self, name: str, shape: tuple[int, ...], axes: tuple[str, ...]):
+        self.params[name] = jnp.zeros(shape, self.dtype)
+        self.axes[name] = axes
+
+    def ones(self, name: str, shape: tuple[int, ...], axes: tuple[str, ...]):
+        self.params[name] = jnp.ones(shape, self.dtype)
+        self.axes[name] = axes
+
+    def value(self, name: str, arr: jax.Array, axes: tuple[str, ...]):
+        self.params[name] = arr.astype(self.dtype)
+        self.axes[name] = axes
+
+    def child(self, name: str) -> "ParamBuilder":
+        sub = ParamBuilder(self._next_key(), self.dtype)
+        self.params[name] = sub.params
+        self.axes[name] = sub.axes
+        return sub
+
+    def build(self):
+        return self.params, self.axes
+
+
+# ----------------------------------------------------------------------------
+# Precision-policy matmul
+# ----------------------------------------------------------------------------
+
+def _matmul_bf16(x, w, compute_dtype, accum_dtype=jnp.float32):
+    return jax.lax.dot_general(
+        x.astype(compute_dtype), w.astype(compute_dtype),
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=accum_dtype)
+
+
+def _matmul_int8_quant(x, w):
+    """Per-channel symmetric int8 quantization, int32 MXU accumulation."""
+    xs = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-30
+    ws = jnp.max(jnp.abs(w), axis=0, keepdims=True) / 127.0 + 1e-30
+    xq = jnp.clip(jnp.round(x / xs), -127, 127).astype(jnp.int8)
+    wq = jnp.clip(jnp.round(w / ws), -127, 127).astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        xq, wq, dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * xs * ws
+
+
+def _matmul_ozaki(x, w, num_splits: int):
+    """The paper's path: FP64-accurate x @ w out of int8 MXU GEMMs.
+
+    x: (..., k) f32, w: (k, n) f32. Flattens leading dims, runs the df32
+    Ozaki matmul (deployable on TPU: {int8, int32, f32} only), returns f32
+    rounded from the df32 result.
+    """
+    from repro.core.ozaki import OzakiConfig, ozaki_matmul_dw
+    from repro.core.xmath import DW, dw_to_single
+
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    cfg = OzakiConfig(num_splits=num_splits, accum="df32", backend="xla",
+                      fuse_diagonals=True)
+    out = ozaki_matmul_dw(DW(x2, jnp.zeros_like(x2)),
+                          DW(w.T.astype(jnp.float32),
+                             jnp.zeros_like(w.T, jnp.float32)), cfg)
+    return dw_to_single(out).reshape(*lead, w.shape[1])
+
+
+def policy_matmul(cfg, x: jax.Array, w: jax.Array) -> jax.Array:
+    """cfg is an ArchConfig (or anything with the two precision fields)."""
+    p = cfg.matmul_precision
+    if p == "bf16":
+        return _matmul_bf16(x, w, jnp.dtype(cfg.compute_dtype),
+                            jnp.dtype(getattr(cfg, "accum_dtype",
+                                              "float32")))
+    if p == "int8_quant":
+        return _matmul_int8_quant(x.astype(jnp.float32),
+                                  w.astype(jnp.float32))
+    if p == "ozaki_fp64":
+        return _matmul_ozaki(x.astype(jnp.float32), w.astype(jnp.float32),
+                             cfg.ozaki_splits)
+    raise ValueError(f"unknown matmul_precision {p!r}")
+
+
+# ----------------------------------------------------------------------------
+# Norms / embeddings / softcap
+# ----------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array,
+                 compute_dtype) -> jax.Array:
+    return table.astype(compute_dtype)[ids]
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float, positions: jax.Array,
+                     rotary_dim: Optional[int] = None):
+    """cos/sin tables: (..., seq, rotary_dim // 2)."""
+    rd = rotary_dim or head_dim
+    inv = 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               style: str = "standard") -> jax.Array:
+    """x: (batch, seq, heads, head_dim); cos/sin: (batch?, seq, rd//2).
+
+    ``standard``  — rotate the full head_dim (llama-style half-split).
+    ``partial2d`` — chatglm: rotate only the first half of head_dim
+                    (interleaved pairs), pass the rest through. The second
+                    positional channel of GLM's 2D RoPE is the identity for
+                    causal LM inference (block position = 0), so only the
+                    sequence channel rotates — noted in DESIGN.md.
+    """
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    c = cos[:, :, None, :] if cos.ndim == 3 else cos[None, :, None, :]
+    s = sin[:, :, None, :] if sin.ndim == 3 else sin[None, :, None, :]
+    if style == "standard":
+        half = x.shape[-1] // 2
+        x1, x2 = x[..., :half], x[..., half:]
+        out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+        return out.astype(orig_dtype)
+    if style == "partial2d":
+        rd = x.shape[-1] // 2
+        xr, xp = x[..., :rd], x[..., rd:]
+        xe, xo = xr[..., 0::2], xr[..., 1::2]
+        re = xe * c - xo * s
+        ro = xo * c + xe * s
+        rot = jnp.stack([re, ro], axis=-1).reshape(xr.shape)
+        return jnp.concatenate([rot, xp], axis=-1).astype(orig_dtype)
+    if style == "none":
+        return x.astype(orig_dtype)
+    raise ValueError(f"unknown rope style {style!r}")

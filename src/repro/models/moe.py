@@ -1,0 +1,114 @@
+"""Mixture-of-Experts FFN (qwen3-style: top-k of E experts, gated SiLU).
+
+Dispatch is GShard-style with a *per-batch-row group*: token positions are
+assigned a slot inside their expert's capacity buffer by a cumulative sum
+over the row, then scattered into an ``(B, E, C, d)`` buffer. Expert
+einsums contract over the buffer; with ``experts -> model`` sharding the
+scatter/gather lower to the expert-parallel all-to-alls.
+
+Overflowing tokens (position >= capacity) are dropped — their combine
+weight is zero — which keeps every shape static. Router runs in fp32
+(precision-critical softmax; the Ozaki policy covers it when enabled).
+
+Aux losses (load-balance + router-z) are returned for the trainer.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+from .layers import ParamBuilder, policy_matmul
+
+
+class MoEOut(NamedTuple):
+    y: jax.Array
+    load_balance_loss: jax.Array
+    router_z_loss: jax.Array
+
+
+def init_moe(pb: ParamBuilder, d_model: int, num_experts: int,
+             d_ff_expert: int) -> None:
+    pb.dense("router", (d_model, num_experts), ("embed", "experts"))
+    pb.dense("wi", (num_experts, d_model, 2 * d_ff_expert),
+             ("experts", "embed", "expert_mlp"))
+    pb.dense("wo", (num_experts, d_ff_expert, d_model),
+             ("experts", "expert_mlp", "embed"))
+
+
+def capacity_of(tokens_per_group: int, num_experts: int, top_k: int,
+                capacity_factor: float) -> int:
+    c = math.ceil(tokens_per_group * top_k / num_experts * capacity_factor)
+    return max(c, 1)
+
+
+def moe_ffn(cfg, params, x: jax.Array) -> MoEOut:
+    """x: (batch, seq, d_model) -> MoEOut with y the same shape."""
+    mc = cfg.moe
+    b, s, d = x.shape
+    e, k = mc.num_experts, mc.top_k
+    cap = capacity_of(s, e, k, mc.capacity_factor)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)             # (b, s, k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+
+    # --- slot assignment within each batch-row group ---------------------
+    flat_idx = idx.reshape(b, s * k)                   # priority: seq-major
+    onehot = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)      # (b, s*k, e)
+    pos = jnp.cumsum(onehot, axis=1) - 1               # slot per assignment
+    pos = jnp.sum(pos * onehot, axis=-1)               # (b, s*k)
+    keep = pos < cap
+    pos3 = pos.reshape(b, s, k)
+    keep3 = keep.reshape(b, s, k)
+
+    # --- dispatch: scatter tokens into (b, e, cap, d) ---------------------
+    # one scatter per top-k slot: materializing the k-fold token repeat
+    # costs 8x the hidden state at 32k prefill (observed 2.1 GB/buffer)
+    def scatter_row(xr, er, pr, kr):
+        buf = jnp.zeros((e, cap, d), x.dtype)
+        for j in range(k):
+            slot = jnp.where(kr[:, j], pr[:, j], cap)  # dropped -> OOB
+            buf = buf.at[er[:, j], slot].add(xr, mode="drop")
+        return buf
+
+    buf = jax.vmap(scatter_row)(x, idx, pos3, keep3)
+    buf = constrain(buf, ("batch", "experts", None, None))
+
+    # --- expert FFN (gated SiLU), experts sharded over "model" -----------
+    cdt = jnp.dtype(cfg.compute_dtype)
+    adt = jnp.dtype(getattr(cfg, "accum_dtype", "float32"))
+    h = jnp.einsum("becd,edf->becf", buf.astype(cdt),
+                   params["wi"].astype(cdt),
+                   preferred_element_type=adt)
+    h = constrain(h, ("batch", "experts", None, None))
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = (jax.nn.silu(gate) * up).astype(cdt)
+    out = jnp.einsum("becf,efd->becd", h, params["wo"].astype(cdt),
+                     preferred_element_type=adt).astype(x.dtype)
+    out = constrain(out, ("batch", "experts", None, None))
+
+    # --- combine: gather slots back, weighted sum over k ------------------
+    def gather_row(br, er, pr, wr, kr):
+        acc = jnp.zeros((s, d), x.dtype)
+        for j in range(k):
+            yj = br[er[:, j], jnp.minimum(pr[:, j], cap - 1)]
+            acc = acc + yj * (wr[:, j] * kr[:, j])[:, None].astype(x.dtype)
+        return acc
+
+    y = jax.vmap(gather_row)(out, idx, pos3, weights,
+                             keep3.astype(jnp.float32))
+
+    # --- aux losses --------------------------------------------------------
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=(0, 1, 2))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    lb = e * jnp.sum(frac_tokens * frac_probs) * mc.load_balance_coef
+    zl = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * mc.router_z_coef
+    return MoEOut(y, lb, zl)

@@ -1,0 +1,297 @@
+"""State-space model blocks: Mamba1 (falcon-mamba) and Mamba2 SSD (zamba2).
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel is replaced
+by a *chunked* scan — a sequential ``lax.scan`` over sequence chunks whose
+inner step is dense tensor algebra (VPU/MXU friendly), carrying the
+(d_inner, d_state) recurrent state between chunks. The inner dimension is
+sharded over the "model" mesh axis; the recurrence is elementwise in
+d_inner, so the scan introduces no collectives.
+
+Mamba2 uses the SSD chunked form: intra-chunk quadratic attention-like
+term + inter-chunk state passing — the chunk matmuls are MXU-shaped,
+which is the TPU-native formulation of the paper['s] SSD algorithm.
+
+Decode: O(1) recurrent update per token, with a conv-tail cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+from .layers import ParamBuilder
+
+
+class SSMState(NamedTuple):
+    """Decode-time cache for one SSM layer (leading dim = layers)."""
+
+    conv: jax.Array   # (b, d_conv - 1, d_inner) trailing inputs
+    h: jax.Array      # mamba1: (b, d_inner, N); mamba2: (b, nh, hd, N)
+
+
+# ----------------------------------------------------------------------------
+# shared pieces
+# ----------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array, tail: jax.Array | None = None):
+    """Depthwise causal conv. x: (b, s, d), w: (dc, d). Returns (y, new_tail).
+
+    ``tail``: (b, dc-1, d) inputs preceding x (decode carries this).
+    """
+    dc = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(dc))
+    return y, xp[:, -(dc - 1):, :]
+
+
+def _softplus(x):
+    return jax.nn.softplus(x)
+
+
+# ----------------------------------------------------------------------------
+# Mamba1 (falcon-mamba-7b)
+# ----------------------------------------------------------------------------
+
+def init_mamba1(pb: ParamBuilder, d_model: int, d_state: int, d_conv: int,
+                expand: int, dt_rank: int | None = None) -> None:
+    di = expand * d_model
+    dtr = dt_rank or max(1, d_model // 16)
+    pb.dense("in_proj", (d_model, 2 * di), ("embed", "inner"))
+    pb.dense("conv_w", (d_conv, di), ("conv", "inner"), scale=0.5)
+    pb.dense("x_proj", (di, dtr + 2 * d_state), ("inner", "ssm_misc"))
+    pb.dense("dt_proj", (dtr, di), ("ssm_misc", "inner"))
+    pb.zeros("dt_bias", (di,), ("inner",))
+    pb.value("a_log", jnp.log(jnp.tile(
+        jnp.arange(1, d_state + 1, dtype=jnp.float32), (di, 1))),
+        ("inner", "state"))
+    pb.ones("d_skip", (di,), ("inner",))
+    pb.dense("out_proj", (di, d_model), ("inner", "embed"))
+
+
+def _mamba1_core(params, xi, dt_rank: int, chunk: int):
+    """Selective scan. xi: (b, s, di) post-conv. Returns (b, s, di)."""
+    b, s, di = xi.shape
+    n = params["a_log"].shape[1]
+    proj = jnp.einsum("bsd,dm->bsm", xi, params["x_proj"])
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = _softplus(jnp.einsum("bsr,rd->bsd", dt, params["dt_proj"])
+                   + params["dt_bias"])                  # (b, s, di)
+    a = -jnp.exp(params["a_log"])                        # (di, n)
+
+    s_pad = -(-s // chunk) * chunk
+    if s_pad != s:
+        pad = ((0, 0), (0, s_pad - s), (0, 0))
+        xi, dt, bmat, cmat = (jnp.pad(t, pad) for t in (xi, dt, bmat, cmat))
+    nc = s_pad // chunk
+
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, -1).swapaxes(0, 1)
+
+    xc, dtc, bc, cc = map(to_chunks, (xi, dt, bmat, cmat))
+
+    def body(h, inp):
+        xq, dq, bq, cq = inp                              # (b, Q, ...)
+        da = jnp.exp(dq[..., None] * a[None, None])       # (b, Q, di, n)
+        dbx = (dq * xq)[..., None] * bq[:, :, None, :]    # (b, Q, di, n)
+
+        def step(hc, t):
+            hc = da[:, t] * hc + dbx[:, t]
+            return hc, jnp.einsum("bdn,bn->bd", hc, cq[:, t])
+
+        h, ys = jax.lax.scan(step, h, jnp.arange(chunk))
+        return h, ys.swapaxes(0, 1)                      # (b, Q, di)
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    h, ys = jax.lax.scan(body, h0, (xc.astype(jnp.float32),
+                                    dtc.astype(jnp.float32),
+                                    bc.astype(jnp.float32),
+                                    cc.astype(jnp.float32)))
+    y = ys.swapaxes(0, 1).reshape(b, s_pad, di)[:, :s]
+    y = y.astype(xi.dtype) + xi[:, :s] * params["d_skip"].astype(xi.dtype)
+    return y, h
+
+
+def mamba1_block(cfg, params, x: jax.Array,
+                 state: SSMState | None = None):
+    """Full Mamba1 block. x: (b, s, d_model). Returns (y, new_state)."""
+    sc = cfg.ssm
+    dtr = max(1, cfg.d_model // 16)
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    xz = constrain(xz, ("batch", None, "inner"))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    tail = state.conv if state is not None else None
+    xi, new_tail = _causal_conv(xi, params["conv_w"].astype(x.dtype), tail)
+    xi = jax.nn.silu(xi)
+    if state is None or x.shape[1] > 1:
+        y, new_h = _mamba1_core(params, xi, dtr, chunk=min(64, x.shape[1]))
+    else:
+        y, new_h = _mamba1_step(params, xi[:, 0], state.h, dtr)
+        y = y[:, None]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(x.dtype))
+    if state is None:
+        return out, None
+    return out, SSMState(new_tail, new_h)
+
+
+def _mamba1_step(params, xi, h, dt_rank: int):
+    """One-token recurrence. xi: (b, di); h: (b, di, n)."""
+    n = params["a_log"].shape[1]
+    proj = xi.astype(jnp.float32) @ params["x_proj"]
+    dt, bvec, cvec = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = _softplus(dt @ params["dt_proj"] + params["dt_bias"])  # (b, di)
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt[..., None] * a[None])                       # (b, di, n)
+    h = da * h + (dt * xi)[..., None] * bvec[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, cvec) + \
+        xi.astype(jnp.float32) * params["d_skip"]
+    return y.astype(xi.dtype), h
+
+
+# ----------------------------------------------------------------------------
+# Mamba2 / SSD (zamba2-7b)
+# ----------------------------------------------------------------------------
+
+def init_mamba2(pb: ParamBuilder, d_model: int, d_state: int, d_conv: int,
+                expand: int, headdim: int) -> None:
+    di = expand * d_model
+    nh = di // headdim
+    pb.dense("in_proj", (d_model, 2 * di), ("embed", "inner"))
+    pb.dense("conv_w", (d_conv, di), ("conv", "inner"), scale=0.5)
+    pb.dense("bc_proj", (d_model, 2 * d_state), ("embed", "state"))
+    pb.dense("dt_proj", (d_model, nh), ("embed", "heads"))
+    pb.zeros("dt_bias", (nh,), ("heads",))
+    pb.value("a_log", jnp.zeros((nh,), jnp.float32), ("heads",))
+    pb.ones("d_skip", (nh,), ("heads",))
+    pb.dense("out_proj", (di, d_model), ("inner", "embed"))
+
+
+def _segsum_exp(da: jax.Array) -> jax.Array:
+    """L[t, u] = prod_{u < r <= t} da_r for t >= u else 0.
+
+    da: (..., Q). Returns (..., Q, Q) lower-triangular (inclusive diag).
+    """
+    q = da.shape[-1]
+    logs = jnp.log(jnp.maximum(da, 1e-30))
+    cs = jnp.cumsum(logs, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]           # sum_(u, t]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(tri, jnp.exp(diff), 0.0)
+
+
+def mamba2_core(params, xi: jax.Array, bmat, cmat, dt, headdim: int,
+                chunk: int, h0=None):
+    """SSD chunked scan. xi: (b, s, di); bmat/cmat: (b, s, n); dt: (b, s, nh).
+
+    Returns (y (b, s, di), h_final (b, nh, hd, n)).
+    """
+    b, s, di = xi.shape
+    nh = di // headdim
+    n = bmat.shape[-1]
+    a = -jnp.exp(params["a_log"])                        # (nh,)
+
+    s_pad = -(-s // chunk) * chunk
+    if s_pad != s:
+        pad3 = ((0, 0), (0, s_pad - s), (0, 0))
+        xi, bmat, cmat, dt = (jnp.pad(t, pad3) for t in (xi, bmat, cmat, dt))
+    nc = s_pad // chunk
+    xh = xi.reshape(b, nc, chunk, nh, headdim).swapaxes(0, 1)
+    bq = bmat.reshape(b, nc, chunk, n).swapaxes(0, 1)
+    cq = cmat.reshape(b, nc, chunk, n).swapaxes(0, 1)
+    dq = dt.reshape(b, nc, chunk, nh).swapaxes(0, 1)
+
+    def body(h, inp):
+        xq, bqq, cqq, dqq = inp                          # per-chunk tensors
+        da = jnp.exp(dqq * a[None, None])                # (b, Q, nh)
+        # intra-chunk: Y = (L ⊙ (C B^T)) (dt X)
+        l = _segsum_exp(da.swapaxes(1, 2))               # (b, nh, Q, Q)
+        cb = jnp.einsum("bqn,bkn->bqk", cqq, bqq)        # (b, Q, Q)
+        w = cb[:, None] * l                              # (b, nh, Q, Q)
+        dx = dqq[..., None] * xq                         # (b, Q, nh, hd)
+        y = jnp.einsum("bhqk,bkhd->bqhd", w, dx)
+        # contribution of the carried state: C_t (prod da) h0
+        dec = jnp.cumprod(da, axis=1)                    # (b, Q, nh)
+        y = y + jnp.einsum("bqn,bhdn,bqh->bqhd", cqq, h, dec)
+        # inter-chunk state update
+        tot = dec[:, -1]                                 # (b, nh)
+        rem = tot[:, None] / jnp.maximum(dec, 1e-30)     # prod_(t, Q]
+        h = h * tot[..., None, None] + jnp.einsum(
+            "bqn,bqhd,bqh->bhdn", bqq, dx, rem)
+        return h, y
+
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, headdim, n), jnp.float32)
+    h, ys = jax.lax.scan(body, h0, (xh.astype(jnp.float32),
+                                    bq.astype(jnp.float32),
+                                    cq.astype(jnp.float32),
+                                    dq.astype(jnp.float32)))
+    y = ys.swapaxes(0, 1).reshape(b, s_pad, di)[:, :s]
+    return y, h
+
+
+def mamba2_block(cfg, params, x: jax.Array, state: SSMState | None = None):
+    """Full Mamba2 block. x: (b, s, d_model). Returns (y, new_state)."""
+    sc = cfg.ssm
+    di = sc.expand * cfg.d_model
+    nh = di // sc.headdim
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    xz = constrain(xz, ("batch", None, "inner"))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    tail = state.conv if state is not None else None
+    xi, new_tail = _causal_conv(xi, params["conv_w"].astype(x.dtype), tail)
+    xi = jax.nn.silu(xi)
+    bc = jnp.einsum("bsd,dn->bsn", x.astype(jnp.float32), params["bc_proj"])
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    dt = _softplus(jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32),
+                              params["dt_proj"]) + params["dt_bias"])
+    if state is None or x.shape[1] > 1:
+        y, h = mamba2_core(params, xi, bmat, cmat, dt, sc.headdim,
+                           min(sc.chunk, x.shape[1]),
+                           h0=None if state is None else state.h)
+        new_h = h
+    else:
+        y, new_h = _mamba2_step(params, xi[:, 0], bmat[:, 0], cmat[:, 0],
+                                dt[:, 0], state.h, sc.headdim)
+        y = y[:, None]
+    skip = jnp.repeat(params["d_skip"], sc.headdim)      # (di,)
+    y = (y.astype(x.dtype) + xi * skip.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(x.dtype))
+    if state is None:
+        return out, None
+    return out, SSMState(new_tail, new_h)
+
+
+def _mamba2_step(params, xi, bvec, cvec, dt, h, headdim: int):
+    """One-token SSD recurrence. xi: (b, di); h: (b, nh, hd, n)."""
+    b, di = xi.shape
+    nh = di // headdim
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt * a[None])                           # (b, nh)
+    xh = xi.reshape(b, nh, headdim).astype(jnp.float32)
+    h = (h * da[..., None, None]
+         + jnp.einsum("bn,bhd,bh->bhdn", bvec, xh, dt))
+    y = jnp.einsum("bhdn,bn->bhd", h, cvec).reshape(b, di)
+    return y.astype(xi.dtype), h
+
+
+def init_ssm_state(cfg, batch: int, variant: str, dtype=None):
+    """Conv tail lives in the compute dtype (a f32 tail would promote the
+    whole post-conv stream and break bf16 scan carries); the recurrent
+    state h stays f32 (precision of the recurrence)."""
+    sc = cfg.ssm
+    di = sc.expand * cfg.d_model
+    conv = jnp.zeros((batch, sc.d_conv - 1, di),
+                     dtype or jnp.dtype(cfg.compute_dtype))
+    if variant == "mamba1":
+        h = jnp.zeros((batch, di, sc.d_state), jnp.float32)
+    else:
+        h = jnp.zeros((batch, di // sc.headdim, sc.headdim, sc.d_state),
+                      jnp.float32)
+    return SSMState(conv, h)

@@ -1,0 +1,475 @@
+"""Model assembly for every assigned architecture family.
+
+One shared decoder skeleton covers dense / moe / vlm / audio; the ssm
+family is a Mamba1 stack; hybrid (zamba2) is a Mamba2 stack with ONE
+shared attention(+MLP) block applied every ``hybrid_attn_period`` layers.
+
+Layers are *stacked* (leading dim = num_layers) and executed with
+``lax.scan`` (+ optional ``jax.checkpoint`` per block), which keeps
+lowering/compile time flat in depth — required for the 80-94-layer
+dry-run cells.
+
+Entry points (all pure functions of (cfg, params, ...)):
+  init_model         -> (params, axes)           axes = logical names
+  forward_train      -> (logits, aux_loss)
+  init_decode_state  -> DecodeState (cache pytree; abstract-eval friendly)
+  prefill            -> (state, last_logits)
+  decode_step        -> (logits, state)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+from . import ssm as ssm_mod
+from .attention import (KVCache, cache_update, chunked_attention,
+                        decode_attention, init_cache)
+from .layers import (ParamBuilder, apply_rope, embed_lookup, policy_matmul,
+                     rms_norm, rope_frequencies, softcap)
+from .moe import init_moe, moe_ffn
+
+
+class DecodeState(NamedTuple):
+    pos: jax.Array                 # scalar int32: tokens already in cache
+    kv: Optional[KVCache]          # stacked (L, b, max_len, hkv, hd)
+    ssm: Optional[ssm_mod.SSMState]  # stacked (L, ...)
+    hybrid_kv: Optional[KVCache]   # (n_apps, b, max_len, hkv, hd)
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+
+def _init_attn(pb: ParamBuilder, cfg) -> None:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pb.dense("wq", (d, h * hd), ("embed", "heads_flat"))
+    pb.dense("wk", (d, kv * hd), ("embed", "kv_flat"))
+    pb.dense("wv", (d, kv * hd), ("embed", "kv_flat"))
+    pb.dense("wo", (h * hd, d), ("heads_flat", "embed"))
+
+
+def _init_mlp(pb: ParamBuilder, d: int, ff: int) -> None:
+    pb.dense("wi", (d, 2 * ff), ("embed", "mlp2"))
+    pb.dense("wo", (ff, d), ("mlp", "embed"))
+
+
+def _init_block(cfg, key) -> tuple[Any, Any]:
+    pb = ParamBuilder(key, jnp.dtype(cfg.param_dtype))
+    pb.ones("ln1", (cfg.d_model,), ("embed",))
+    if cfg.family == "ssm":
+        sub = pb.child("mamba")
+        ssm_mod.init_mamba1(sub, cfg.d_model, cfg.ssm.d_state,
+                            cfg.ssm.d_conv, cfg.ssm.expand)
+        return pb.build()
+    if cfg.family == "hybrid":
+        sub = pb.child("mamba")
+        ssm_mod.init_mamba2(sub, cfg.d_model, cfg.ssm.d_state,
+                            cfg.ssm.d_conv, cfg.ssm.expand, cfg.ssm.headdim)
+        return pb.build()
+    _init_attn(pb.child("attn"), cfg)
+    pb.ones("ln2", (cfg.d_model,), ("embed",))
+    if cfg.moe is not None:
+        init_moe(pb.child("moe"), cfg.d_model, cfg.moe.num_experts,
+                 cfg.moe.d_ff_expert)
+    else:
+        _init_mlp(pb.child("mlp"), cfg.d_model, cfg.d_ff)
+    return pb.build()
+
+
+def init_model(cfg, key) -> tuple[Any, Any]:
+    pb = ParamBuilder(key, jnp.dtype(cfg.param_dtype))
+    if cfg.frontend == "audio":
+        pb.dense("embed", (cfg.num_codebooks, cfg.vocab_size, cfg.d_model),
+                 ("codebooks", "vocab", "embed"), scale=0.02)
+    else:
+        pb.dense("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                 scale=0.02)
+
+    block_keys = jax.random.split(pb._next_key(), cfg.num_layers)
+    axes_box = {}
+
+    def _params_only(k):
+        p, a = _init_block(cfg, k)
+        axes_box["axes"] = a
+        return p
+
+    jax.eval_shape(_params_only, block_keys[0])   # captures axes, no alloc
+    sample_axes = axes_box["axes"]
+    blocks = jax.vmap(_params_only)(block_keys)
+    pb.params["blocks"] = blocks
+    pb.axes["blocks"] = jax.tree.map(
+        lambda a: ("layers",) + a, sample_axes,
+        is_leaf=lambda a: isinstance(a, tuple))
+
+    if cfg.family == "hybrid":
+        shared = pb.child("shared_attn")
+        shared.ones("ln1", (cfg.d_model,), ("embed",))
+        _init_attn(shared.child("attn"), cfg)
+        shared.ones("ln2", (cfg.d_model,), ("embed",))
+        _init_mlp(shared.child("mlp"), cfg.d_model, cfg.d_ff)
+
+    pb.ones("final_norm", (cfg.d_model,), ("embed",))
+    if not cfg.tie_embeddings:
+        if cfg.frontend == "audio":
+            pb.dense("unembed", (cfg.num_codebooks, cfg.d_model,
+                                 cfg.vocab_size),
+                     ("codebooks", "embed", "vocab"))
+        else:
+            pb.dense("unembed", (cfg.d_model, cfg.vocab_size),
+                     ("embed", "vocab"))
+    return pb.build()
+
+
+# ----------------------------------------------------------------------------
+# per-layer pieces
+# ----------------------------------------------------------------------------
+
+def _attention(cfg, p, x, positions, *, is_local, cache=None,
+               write_slice=None):
+    """Attention sub-block (pre-norm + residual).
+
+    is_local: traced bool (or python bool) — sliding window active.
+    cache: KVCache for decode; write_slice: (cache, start) for prefill.
+    """
+    b, s, d = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    y = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = policy_matmul(cfg, y, p["wq"]).reshape(b, s, h, hd)
+    k = policy_matmul(cfg, y, p["wk"]).reshape(b, s, kvh, hd)
+    v = policy_matmul(cfg, y, p["wv"]).reshape(b, s, kvh, hd)
+    if s > 1:  # decode (s == 1) replicates q: see decode_attention
+        q = constrain(q, ("batch", None, "heads", None))
+        k = constrain(k, ("batch", None, None, None))
+        v = constrain(v, ("batch", None, None, None))
+
+    if cfg.rope_style != "none":
+        rd = hd // 2 if cfg.rope_style == "partial2d" else hd
+        cos, sin = rope_frequencies(hd, cfg.rope_theta, positions,
+                                    rotary_dim=rd)
+        q = apply_rope(q, cos, sin, cfg.rope_style)
+        k = apply_rope(k, cos, sin, cfg.rope_style)
+
+    window = jnp.where(is_local, cfg.sliding_window, 0) \
+        if cfg.sliding_window else 0
+
+    new_cache = cache
+    if cache is not None and s == 1:                      # decode
+        pos = positions[:, 0] if positions.shape[0] > 1 \
+            else jnp.reshape(positions, (-1,))[0]
+        new_cache = cache_update(cache, k, v, pos)
+        out = decode_attention(q, new_cache, pos + 1, window=window,
+                               softcap=cfg.attn_logit_softcap)
+    else:                                                 # train / prefill
+        out = chunked_attention(q, k, v, causal=True, window=window,
+                                softcap=cfg.attn_logit_softcap)
+        if write_slice is not None:
+            cache, start = write_slice
+            kc = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, start, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, start, 0, 0))
+            new_cache = KVCache(kc, vc)
+    proj = policy_matmul(cfg, out.reshape(b, s, h * hd), p["wo"])
+    proj = constrain(proj, ("batch", "seq", None))
+    return x + proj.astype(x.dtype), new_cache
+
+
+def _mlp(cfg, p, x):
+    y = rms_norm(x, p["ln2"] if "ln2" in p else p["ln1"], cfg.norm_eps)
+    gate_up = constrain(policy_matmul(cfg, y, p["mlp"]["wi"]),
+                        ("batch", "seq", "mlp2"))
+    gate, up = jnp.split(gate_up, 2, axis=-1)
+    out = policy_matmul(cfg, (jax.nn.silu(gate) * up).astype(x.dtype),
+                        p["mlp"]["wo"])
+    out = constrain(out, ("batch", "seq", None))
+    return x + out.astype(x.dtype)
+
+
+def _ffn(cfg, p, x):
+    """MLP or MoE, returns (x, aux_loss)."""
+    if cfg.moe is not None:
+        y = rms_norm(x, p["ln2"], cfg.norm_eps)
+        out = moe_ffn(cfg, p["moe"], y)
+        return x + out.y, out.load_balance_loss + out.router_z_loss
+    return _mlp(cfg, p, x), jnp.float32(0.0)
+
+
+# ----------------------------------------------------------------------------
+# backbone scans (one per family group)
+# ----------------------------------------------------------------------------
+
+def _layer_flags(cfg) -> jax.Array:
+    """is_local per layer (gemma2: even layers local, odd global)."""
+    idx = jnp.arange(cfg.num_layers)
+    if cfg.sliding_window and cfg.local_global_period:
+        return (idx % cfg.local_global_period) == 0
+    return jnp.zeros((cfg.num_layers,), bool) | bool(cfg.sliding_window)
+
+
+def _scan_decoder(cfg, params, x, positions, kv_stack, write_start):
+    """Standard decoder stack. kv_stack None (train) or stacked caches.
+
+    Caches ride in the scan CARRY with in-place indexed updates — as
+    xs/ys XLA double-buffers the full stack (2x cache HBM, observed on
+    the decode_32k dry-runs); as a donated carry it updates in place.
+    """
+    flags = _layer_flags(cfg)
+
+    if kv_stack is None:
+        def body(carry, xs):
+            p, is_local = xs
+            hx, _ = _attention(cfg, p["attn"] | {"ln1": p["ln1"]}, carry,
+                               positions, is_local=is_local)
+            hx, aux = _ffn(cfg, p, hx)
+            return hx, aux
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, aux = jax.lax.scan(fn, x, (params["blocks"], flags))
+        return x, jnp.sum(aux), None
+
+    def body(carry, xs):
+        hx, kv = carry
+        p, is_local, li = xs
+        cache = KVCache(jax.lax.dynamic_index_in_dim(kv.k, li, 0, False),
+                        jax.lax.dynamic_index_in_dim(kv.v, li, 0, False))
+        if write_start is None:
+            hx, nc = _attention(cfg, p["attn"] | {"ln1": p["ln1"]}, hx,
+                                positions, is_local=is_local, cache=cache)
+        else:
+            hx, nc = _attention(cfg, p["attn"] | {"ln1": p["ln1"]}, hx,
+                                positions, is_local=is_local,
+                                write_slice=(cache, write_start))
+        kv = KVCache(
+            jax.lax.dynamic_update_index_in_dim(kv.k, nc.k, li, 0),
+            jax.lax.dynamic_update_index_in_dim(kv.v, nc.v, li, 0))
+        hx, aux = _ffn(cfg, p, hx)
+        return (hx, kv), aux
+
+    (x, new_kv), aux = jax.lax.scan(
+        body, (x, kv_stack),
+        (params["blocks"], flags, jnp.arange(cfg.num_layers)))
+    return x, jnp.sum(aux), new_kv
+
+
+def _scan_ssm(cfg, params, x, ssm_stack):
+    def body(carry, xs):
+        hx = carry
+        if ssm_stack is None:
+            p = xs
+            y = rms_norm(hx, p["ln1"], cfg.norm_eps)
+            out, _ = ssm_mod.mamba1_block(cfg, p["mamba"], y)
+            return hx + out, None
+        p, st = xs
+        y = rms_norm(hx, p["ln1"], cfg.norm_eps)
+        out, new_st = ssm_mod.mamba1_block(cfg, p["mamba"], y, st)
+        return hx + out, new_st
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    xs = params["blocks"] if ssm_stack is None else \
+        (params["blocks"], ssm_stack)
+    x, new_states = jax.lax.scan(fn, x, xs)
+    return x, jnp.float32(0.0), new_states
+
+
+def _scan_hybrid(cfg, params, x, positions, ssm_stack, kv_apps,
+                 write_start):
+    """zamba2: mamba2 stack; the SHARED attention block fires before
+    layers 0, p, 2p, ... (p = hybrid_attn_period).
+
+    Structure: a python loop over the attention applications (static
+    cache indices -> clean in-place updates; a traced ``lax.cond`` here
+    copies the full KV stack per layer — observed 4x cache memory on the
+    long_500k dry-run), with a ``lax.scan`` over each mamba2 segment
+    between applications.
+    """
+    period = cfg.hybrid_attn_period
+    n_layers = cfg.num_layers
+    shared = params["shared_attn"]
+    sp = shared["attn"] | {"ln1": shared["ln1"]}
+
+    def segment(lo, hi, x, states_seg):
+        seg_params = jax.tree.map(lambda t: t[lo:hi], params["blocks"])
+
+        def body(carry, xs):
+            hx = carry
+            if states_seg is None:
+                p = xs
+                st = None
+            else:
+                p, st = xs
+            y = rms_norm(hx, p["ln1"], cfg.norm_eps)
+            out, new_st = ssm_mod.mamba2_block(cfg, p["mamba"], y, st)
+            return hx + out, new_st
+
+        if cfg.remat and states_seg is None:
+            # hierarchical remat: checkpoint the WHOLE segment (saves one
+            # residual per segment, not per layer) + per-layer checkpoint
+            # inside — 6x fewer saved activations for ~1 extra forward
+            fn = jax.checkpoint(body)
+
+            def run(x):
+                return jax.lax.scan(fn, x, seg_params)
+
+            return jax.checkpoint(run)(x)
+        xs = seg_params if states_seg is None else (seg_params, states_seg)
+        return jax.lax.scan(body, x, xs)
+
+    def shared_train_block(x):
+        hx, _ = _attention(cfg, sp, x, positions, is_local=False)
+        return _mlp(cfg, shared, hx)
+
+    if cfg.remat:
+        shared_train_block = jax.checkpoint(shared_train_block)
+
+    new_state_segs = []
+    for a, lo in enumerate(range(0, n_layers, period)):
+        hi = min(lo + period, n_layers)
+        # shared attention application #a (static cache row)
+        if kv_apps is None:
+            x = shared_train_block(x)
+        else:
+            cache = KVCache(kv_apps.k[a], kv_apps.v[a])
+            if write_start is None:
+                x, nc = _attention(cfg, sp, x, positions, is_local=False,
+                                   cache=cache)
+            else:
+                x, nc = _attention(cfg, sp, x, positions, is_local=False,
+                                   write_slice=(cache, write_start))
+            kv_apps = KVCache(kv_apps.k.at[a].set(nc.k),
+                              kv_apps.v.at[a].set(nc.v))
+            x = _mlp(cfg, shared, x)
+        seg_states = None if ssm_stack is None else \
+            jax.tree.map(lambda t: t[lo:hi], ssm_stack)
+        x, new_seg = segment(lo, hi, x, seg_states)
+        new_state_segs.append(new_seg)
+
+    new_states = None
+    if ssm_stack is not None:
+        new_states = jax.tree.map(
+            lambda *segs: jnp.concatenate(segs, axis=0), *new_state_segs)
+    return x, kv_apps, new_states
+
+
+def _hybrid_apps(cfg) -> int:
+    return -(-cfg.num_layers // cfg.hybrid_attn_period)
+
+
+# ----------------------------------------------------------------------------
+# embedding / logits
+# ----------------------------------------------------------------------------
+
+def _embed(cfg, params, batch) -> jax.Array:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    if cfg.frontend == "audio":
+        # tokens: (b, s, nq); sum one embedding per codebook
+        parts = [embed_lookup(params["embed"][i], tokens[..., i], cdt)
+                 for i in range(cfg.num_codebooks)]
+        return functools.reduce(jnp.add, parts)
+    x = embed_lookup(params["embed"], tokens, cdt)
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        x = jnp.concatenate(
+            [batch["patch_embeds"].astype(cdt), x], axis=1)
+    return constrain(x, ("batch", "seq", None))
+
+
+def _logits(cfg, params, x) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.frontend == "audio":
+        w = params["unembed"]                   # (nq, d, V)
+        out = jnp.stack([policy_matmul(cfg, x, w[i])
+                         for i in range(cfg.num_codebooks)], axis=-2)
+        out = constrain(out, ("batch", None, None, "vocab"))
+    elif cfg.tie_embeddings:
+        out = constrain(policy_matmul(cfg, x, params["embed"].T),
+                        ("batch", None, "vocab"))
+    else:
+        out = constrain(policy_matmul(cfg, x, params["unembed"]),
+                        ("batch", None, "vocab"))
+    return softcap(out.astype(jnp.float32), cfg.final_logit_softcap)
+
+
+# ----------------------------------------------------------------------------
+# entry points
+# ----------------------------------------------------------------------------
+
+def forward_train(cfg, params, batch):
+    """-> (logits f32, aux_loss). Logits cover the full (padded) sequence."""
+    x = _embed(cfg, params, batch)
+    positions = jnp.arange(x.shape[1])[None, :]
+    aux = jnp.float32(0.0)
+    if cfg.family == "ssm":
+        x, aux, _ = _scan_ssm(cfg, params, x, None)
+    elif cfg.family == "hybrid":
+        x, _, _ = _scan_hybrid(cfg, params, x, positions, None, None, None)
+    else:
+        x, aux, _ = _scan_decoder(cfg, params, x, positions, None, None)
+    return _logits(cfg, params, x), aux
+
+
+def init_decode_state(cfg, batch: int, max_len: int,
+                      dtype=jnp.bfloat16,
+                      per_row_pos: bool = False) -> DecodeState:
+    kv = ssm_st = hyb = None
+    pos0 = jnp.zeros((batch,), jnp.int32) if per_row_pos else jnp.int32(0)
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        kv = jax.vmap(lambda _: init_cache(
+            batch, max_len, cfg.num_kv_heads, cfg.head_dim, dtype))(
+            jnp.arange(cfg.num_layers))
+    elif cfg.family == "ssm":
+        ssm_st = jax.vmap(lambda _: ssm_mod.init_ssm_state(
+            cfg, batch, cfg.ssm.variant))(jnp.arange(cfg.num_layers))
+    elif cfg.family == "hybrid":
+        ssm_st = jax.vmap(lambda _: ssm_mod.init_ssm_state(
+            cfg, batch, "mamba2"))(jnp.arange(cfg.num_layers))
+        hyb = jax.vmap(lambda _: init_cache(
+            batch, max_len, cfg.num_kv_heads, cfg.head_dim, dtype))(
+            jnp.arange(_hybrid_apps(cfg)))
+    return DecodeState(pos0, kv, ssm_st, hyb)
+
+
+def prefill(cfg, params, batch, state: DecodeState):
+    """Run the prompt, fill caches, return (state, last-position logits)."""
+    x = _embed(cfg, params, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+    if cfg.family == "ssm":
+        x, _, new_ssm = _scan_ssm(cfg, params, x, state.ssm)
+        state = state._replace(ssm=new_ssm, pos=jnp.int32(s))
+    elif cfg.family == "hybrid":
+        x, new_kv, new_ssm = _scan_hybrid(cfg, params, x, positions,
+                                          state.ssm, state.hybrid_kv, 0)
+        state = state._replace(ssm=new_ssm, hybrid_kv=new_kv,
+                               pos=jnp.int32(s))
+    else:
+        x, _, new_kv = _scan_decoder(cfg, params, x, positions, state.kv, 0)
+        state = state._replace(kv=new_kv, pos=jnp.int32(s))
+    return state, _logits(cfg, params, x[:, -1:, :])[:, 0]
+
+
+def decode_step(cfg, params, state: DecodeState, tokens):
+    """One token for every sequence. tokens: (b, 1) (audio: (b, 1, nq)).
+
+    ``state.pos`` may be a scalar (uniform batch) or a (b,) vector of
+    per-slot cursors (continuous batching).
+    """
+    x = _embed(cfg, params, {"tokens": tokens})
+    positions = jnp.reshape(jnp.asarray(state.pos), (-1, 1)).astype(jnp.int32)
+    if cfg.family == "ssm":
+        x, _, new_ssm = _scan_ssm(cfg, params, x, state.ssm)
+        state = state._replace(ssm=new_ssm, pos=state.pos + 1)
+    elif cfg.family == "hybrid":
+        x, new_kv, new_ssm = _scan_hybrid(cfg, params, x, positions,
+                                          state.ssm, state.hybrid_kv, None)
+        state = state._replace(ssm=new_ssm, hybrid_kv=new_kv,
+                               pos=state.pos + 1)
+    else:
+        x, _, new_kv = _scan_decoder(cfg, params, x, positions, state.kv,
+                                     None)
+        state = state._replace(kv=new_kv, pos=state.pos + 1)
+    return _logits(cfg, params, x)[:, 0], state

@@ -1,0 +1,7 @@
+"""Distribution layer: sharding rules, collectives, distributed Ozaki."""
+from .sharding import (ShardingPlan, batch_axes, decode_state_axes,
+                       make_plan, make_rules, pspec, tree_pspecs,
+                       tree_shardings)
+
+__all__ = ["ShardingPlan", "batch_axes", "decode_state_axes", "make_plan",
+           "make_rules", "pspec", "tree_pspecs", "tree_shardings"]

@@ -1,0 +1,71 @@
+"""Collective helpers: exact integer reductions, ring primitives, and the
+compute/comm-overlap chunked matmul used by the §Perf experiments.
+
+``psum`` of int32 is associative -> bitwise reproducible for any mesh
+shape/reduction order. That exactness is what upgrades the Ozaki scheme's
+reproducibility story to an *elasticity invariant* (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def psum_exact_int32(x: jax.Array, axis: str) -> jax.Array:
+    """Integer all-reduce; order-independent by associativity."""
+    assert jnp.issubdtype(x.dtype, jnp.integer), x.dtype
+    return jax.lax.psum(x, axis)
+
+
+def ring_all_gather(x: jax.Array, axis: str, axis_size: int) -> jax.Array:
+    """All-gather along ``axis`` built from collective_permutes (one hop
+    per step) — the schedule that overlaps with per-step compute on TPU
+    ICI rings. x: (chunk, ...) -> (axis_size * chunk, ...).
+    """
+    idx = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % axis_size) for i in range(axis_size)]
+
+    def body(carry, _):
+        block = carry
+        block = jax.lax.ppermute(block, axis, perm)
+        return block, block
+
+    _, blocks = jax.lax.scan(body, x, None, length=axis_size - 1)
+    all_blocks = jnp.concatenate([x[None], blocks], axis=0)
+    # blocks arrive in source order idx-1, idx-2, ...; restore global order
+    src = (idx - jnp.arange(axis_size)) % axis_size
+    order = jnp.argsort(src)
+    all_blocks = jnp.take(all_blocks, order, axis=0)
+    return all_blocks.reshape((-1,) + x.shape[1:])
+
+
+def chunked_matmul_psum(x: jax.Array, w: jax.Array, axis: str,
+                        num_chunks: int) -> jax.Array:
+    """k-sharded matmul with the reduction interleaved over n-chunks.
+
+    Inside shard_map: x (m, k_local), w (k_local, n). Splitting n into
+    chunks and issuing one psum per chunk lets chunk i's all-reduce
+    overlap chunk i+1's matmul (XLA schedules the independent collective
+    concurrently). Beyond-paper trick recorded in §Perf.
+    """
+    n = w.shape[1]
+    chunk = n // num_chunks
+    outs = []
+    for i in range(num_chunks):
+        part = x @ w[:, i * chunk:(i + 1) * chunk]
+        outs.append(jax.lax.psum(part, axis))
+    rest = n - chunk * num_chunks
+    if rest:
+        outs.append(jax.lax.psum(x @ w[:, n - rest:], axis))
+    return jnp.concatenate(outs, axis=1)
+
+
+def reduce_scatter_sum(x: jax.Array, axis: str, axis_size: int,
+                       scatter_dim: int = 0) -> jax.Array:
+    """psum_scatter wrapper (tiled=True keeps the dim, divided)."""
+    return jax.lax.psum_scatter(x, axis, scatter_dimension=scatter_dim,
+                                tiled=True)

@@ -1,0 +1,170 @@
+"""Distributed Ozaki GEMM — the paper's DGEMM scaled onto the mesh (O4).
+
+The reduction (k) dimension is sharded across a mesh axis. Each device:
+
+  1. contributes its local row/col maxima to a *global* ``pmax`` so all
+     shards split against the same shared exponents (the Ozaki invariant:
+     slices of one row live in one mantissa space);
+  2. extracts int8 slices of its local k-chunk and runs the local slice
+     GEMMs (int8 x int8 -> int32, exact);
+  3. reduces each anti-diagonal's int32 partial product with an integer
+     ``psum`` — integer addition is associative, so the distributed sum
+     is **bitwise reproducible** for any mesh shape or reduction order
+     (the elasticity invariant used by the checkpoint/restart tests);
+  4. performs the high-precision scaled accumulation once, on the reduced
+     products.
+
+Exactness requires accumulator headroom for ``k_global`` terms (not just
+the local chunk) plus diagonal-fusion slack — ``alpha`` is computed from
+the GLOBAL k, mirroring Eq. (3) of the paper.
+
+Three collective schedules:
+  * ``schedule="psum"``      — stacked psum of all anti-diagonals at the
+    end; result replicated over the k-axis (paper-faithful layout).
+  * ``schedule="overlap"``   — psum of diagonal d is issued while diagonal
+    d+1's GEMMs run (compute/comm overlap; beyond-paper O4b).
+  * ``schedule="reduce_scatter"`` — int32 reduce-scatter over the OUTPUT
+    COLUMNS instead of an all-reduce: 2x less link traffic, and the
+    high-precision accumulation runs on 1/P of the columns per chip.
+    C comes out sharded (m@m_axis, n@axis) — the natural layout for a
+    GEMM feeding the next sharded operator (beyond-paper O4c; §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.ozaki import OzakiConfig, _gemm_xla, int32_to_dw
+from repro.core.splitting import row_exponents, slice_width, split_int
+from repro.core.xmath import DW, dw_add
+
+
+def _local_diag_products(sa, sb, cfg: OzakiConfig):
+    """[(t, int32 product)] per anti-diagonal from local slices."""
+    out = []
+    for t, pairs in cfg.diagonals():
+        p_t = _gemm_xla(sa.slices[pairs[0][0]], sb.slices[pairs[0][1]])
+        for pth, qth in pairs[1:]:
+            p_t = p_t + _gemm_xla(sa.slices[pth], sb.slices[qth])
+        out.append((t, p_t))
+    return out
+
+
+def distributed_ozaki_matmul(a: jax.Array, b: jax.Array, mesh: Mesh,
+                             cfg: OzakiConfig = OzakiConfig(),
+                             axis: str = "model",
+                             schedule: str = "psum",
+                             m_axis: str | None = None) -> jax.Array:
+    """FP64-accurate C = A @ B with k sharded over ``mesh[axis]``.
+
+    a: (m, k) f64, b: (k, n) f64 (global shapes). Result is replicated
+    over ``axis`` and bitwise identical for every device count.
+    ``cfg.accum`` selects f64 (CPU oracle) or df32 (TPU-deployable:
+    everything below stays in {int8, int32, f32}).
+    ``m_axis``: additionally shard the m (row) dim — the 2D production
+    layout; rows are independent in the Ozaki scheme (per-row exponents),
+    so this composes with the k-shard reduction untouched.
+    """
+    n_shards = mesh.shape[axis]
+    k_global = a.shape[1]
+    # Headroom: k_global terms per diagonal-fused GEMM group. The int32
+    # psum adds no extra constraint beyond k_global (the global count
+    # already includes every shard's terms).
+    fuse = cfg.max_fuse_terms if (cfg.fuse_diagonals or cfg.concat_k) else 1
+    w = slice_width(k_global, ell_acc=cfg.ell_acc, ell_in=cfg.ell_in,
+                    fuse_terms=fuse)
+
+    def local(a_blk, b_blk):
+        # 1. global shared exponents (pmax over the k-shards)
+        ea = row_exponents(a_blk)
+        eb = row_exponents(b_blk.T)
+        ea = jax.lax.pmax(ea, axis)
+        eb = jax.lax.pmax(eb, axis)
+        # 2. local slices against the global exponents
+        sa = split_int(a_blk, cfg.num_splits, w, exp=ea)
+        sb = split_int(b_blk.T, cfg.num_splits, w, exp=eb)
+        prods = _local_diag_products(sa, sb, cfg)
+        # 3. exact integer reduction per anti-diagonal
+        if schedule == "overlap":
+            # issue psum(d) early so it overlaps the next diagonal's GEMMs
+            reduced = []
+            for t, p_t in prods:
+                reduced.append((t, jax.lax.psum(p_t, axis)))
+            prods = reduced
+        elif schedule == "reduce_scatter":
+            # int32 reduce-scatter over output columns: each chip keeps
+            # its n/P column block, exactly reduced (still associative
+            # -> bitwise reproducible). eb must be sliced to the block.
+            ts = [t for t, _ in prods]
+            stacked = jnp.stack([p for _, p in prods])
+            stacked = jax.lax.psum_scatter(stacked, axis,
+                                           scatter_dimension=2, tiled=True)
+            prods = list(zip(ts, stacked))
+            nloc = stacked.shape[2]
+            idx = jax.lax.axis_index(axis)
+            eb = jax.lax.dynamic_slice_in_dim(eb, idx * nloc, nloc)
+        elif schedule == "rs_stream":
+            # per-diagonal reduce-scatter, issued as each diagonal's
+            # GEMMs finish: no s-deep int32 stack is materialized and
+            # diagonal d's collective overlaps diagonal d+1's compute
+            prods = [(t, jax.lax.psum_scatter(p, axis,
+                                              scatter_dimension=1,
+                                              tiled=True))
+                     for t, p in prods]
+            nloc = prods[0][1].shape[1]
+            idx = jax.lax.axis_index(axis)
+            eb = jax.lax.dynamic_slice_in_dim(eb, idx * nloc, nloc)
+        else:
+            ts = [t for t, _ in prods]
+            stacked = jnp.stack([p for _, p in prods])
+            stacked = jax.lax.psum(stacked, axis)
+            prods = list(zip(ts, stacked))
+        # 4. high-precision accumulation (shape follows the — possibly
+        # scattered — reduced products)
+        shape = prods[0][1].shape
+        e_base = ea[:, None].astype(jnp.int32) + eb[None, :].astype(jnp.int32)
+        if cfg.accum == "df32":
+            # TPU path: compensated f32 pair, no f64 anywhere
+            acc = DW(jnp.zeros(shape, jnp.float32),
+                     jnp.zeros(shape, jnp.float32))
+            for t, p_t in sorted(prods, key=lambda tp: -tp[0]):
+                scale = jnp.float32(2.0 ** (-(t + 2) * w))
+                term = int32_to_dw(p_t)
+                acc = dw_add(acc, DW(term.hi * scale, term.lo * scale))
+            hi = jnp.ldexp(acc.hi, e_base)
+            lo = jnp.ldexp(acc.lo, e_base)
+            return hi, lo             # df32 pair (48 mantissa bits)
+        c = jnp.zeros(shape, jnp.float64)
+        for t, p_t in sorted(prods, key=lambda tp: -tp[0]):
+            c = c + jnp.ldexp(p_t.astype(jnp.float64), e_base - (t + 2) * w)
+        return c
+
+    row = m_axis if m_axis else None
+    col = axis if schedule in ("reduce_scatter", "rs_stream") else None
+    c_spec = P(row, col)
+    out_specs = (c_spec, c_spec) if cfg.accum == "df32" else c_spec
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(row, axis), P(axis, None)),
+                   out_specs=out_specs)
+    out = fn(a, b)
+    return DW(*out) if cfg.accum == "df32" else out
+
+
+def ozaki_matmul_kshard_auto(a: jax.Array, b: jax.Array, mesh: Mesh,
+                             cfg: OzakiConfig = OzakiConfig(),
+                             axis: str = "model") -> jax.Array:
+    """Paper-faithful distributed baseline: plain ``ozaki_matmul`` under
+    jit with k-sharded inputs — GSPMD inserts the collectives (f64
+    all-reduce of scaled partials). Reproducible only per mesh shape.
+    """
+    from repro.core.ozaki import ozaki_matmul
+    fn = jax.jit(functools.partial(ozaki_matmul, cfg=cfg),
+                 in_shardings=(NamedSharding(mesh, P(None, axis)),
+                               NamedSharding(mesh, P(axis, None))),
+                 out_shardings=NamedSharding(mesh, P(None, None)))
+    return fn(a, b)

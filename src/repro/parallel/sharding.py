@@ -1,0 +1,245 @@
+"""Logical-axis sharding rules -> PartitionSpec (MaxText-style).
+
+Every parameter/state leaf in the framework carries a tuple of *logical*
+axis names (assigned at init by ``ParamBuilder``); a ``Rules`` table maps
+each logical name to zero or more *mesh* axes. Changing the table is the
+main §Perf lever — the hillclimb log edits rules, not model code.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod. ``pod`` composes with ``data`` for batch/FSDP sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+Rules = Mapping[str, tuple[str, ...]]
+
+# ----------------------------------------------------------------------------
+# Activation-constraint context: models call ``constrain(x, axes)`` at key
+# points (attention heads, FFN hidden, MoE buffers, logits); inside a
+# ``use_sharding(mesh, rules)`` scope that pins the GSPMD propagation —
+# without it GSPMD is free to replicate scanned/microbatched activations
+# (observed: 16x FLOP blowup on the first train_4k dry-run).
+# ----------------------------------------------------------------------------
+
+_ACTIVE: list = []
+
+
+class use_sharding:
+    def __init__(self, mesh: Mesh, rules: Rules):
+        self.mesh = mesh
+        self.rules = rules
+
+    def __enter__(self):
+        _ACTIVE.append((self.mesh, self.rules))
+        return self
+
+    def __exit__(self, *exc):
+        _ACTIVE.pop()
+        return False
+
+
+def constrain(x, axes: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical axes; no-op outside the ctx.
+
+    Entries are dropped when the dim is SMALLER than the shard count —
+    constraining a size-1 batch over a 16-way data axis makes GSPMD PAD
+    the tensor 16x (observed 98 GiB cache ghosts on the long_500k
+    cells). Merely non-divisible dims (24 heads over 16) keep the
+    constraint: the <2x padding beats full replication (dropping the
+    24-head constraint cost 4x FLOPs on the llama/musicgen cells).
+    """
+    if not _ACTIVE:
+        return x
+    mesh, rules = _ACTIVE[-1]
+    spec = list(pspec(axes, rules)) if pspec(axes, rules) else []
+    spec = spec + [None] * (x.ndim - len(spec))
+    used: set = set()
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        shards = 1
+        for nm in names:
+            shards *= mesh.shape[nm]
+        # drop tiny dims (padding blowup) and duplicate mesh axes (a
+        # later logical axis yields to the earlier one, e.g. seq vs
+        # vocab both -> model under the SP override)
+        if x.shape[i] < shards or used & set(names):
+            spec[i] = None
+            continue
+        used |= set(names)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def wrap_with_sharding(fn, mesh: Mesh, rules: Rules):
+    """Make ``fn`` trace under the activation-constraint context."""
+    import functools
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        with use_sharding(mesh, rules):
+            return fn(*args, **kwargs)
+
+    return wrapped
+
+# --- default logical -> mesh rules ------------------------------------------
+# Parameters
+_PARAM_RULES = {
+    "vocab": ("model",),
+    "embed": (),                 # ("data",)+ under FSDP
+    "mlp": ("model",),
+    "mlp2": ("model",),
+    "heads_flat": ("model",),    # q heads x head_dim, fused
+    "kv_flat": (),               # few KV heads; replicated
+    "experts": ("model",),       # expert parallelism
+    "expert_mlp": (),
+    "inner": ("model",),         # SSM d_inner
+    "heads": ("model",),         # mamba2 heads
+    "state": (),
+    "conv": (),
+    "ssm_misc": (),
+    "codebooks": (),
+    "layers": (),                # scanned; never sharded
+}
+# Activations / batch / caches
+_DATA_RULES = {
+    "batch": ("data",),
+    "seq": (),
+    "kv_seq": ("model",),        # decode caches: flash-decoding style
+    "kv_heads": (),
+    "head_dim": (),
+    "act_embed": (),
+}
+
+
+def make_rules(*, multi_pod: bool = False, fsdp: bool = False,
+               overrides: Optional[Mapping[str, tuple[str, ...]]] = None
+               ) -> dict[str, tuple[str, ...]]:
+    rules = dict(_PARAM_RULES) | dict(_DATA_RULES)
+    if multi_pod:
+        rules["batch"] = ("pod", "data")
+    if fsdp:
+        # ZeRO-3-style: the embed dim of (almost) every param shards over
+        # the data axis (and pod, when present).
+        rules["embed"] = ("pod", "data") if multi_pod else ("data",)
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def pspec(axes: Sequence[Optional[str]], rules: Rules) -> P:
+    """Logical axes tuple -> PartitionSpec. ``None`` axis -> unsharded."""
+    out = []
+    for a in axes:
+        if a is None:
+            out.append(None)
+            continue
+        mesh_axes = rules.get(a, ())
+        if not mesh_axes:
+            out.append(None)
+        elif len(mesh_axes) == 1:
+            out.append(mesh_axes[0])
+        else:
+            out.append(tuple(mesh_axes))
+    # trailing Nones are implicit
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_pspecs(axes_tree: Any, rules: Rules) -> Any:
+    return jax.tree.map(lambda a: pspec(a, rules), axes_tree,
+                        is_leaf=lambda a: isinstance(a, tuple) and
+                        all(isinstance(x, (str, type(None))) for x in a))
+
+
+def tree_shardings(axes_tree: Any, mesh: Mesh, rules: Rules) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_pspecs(axes_tree, rules),
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# --- batch / state logical axes ---------------------------------------------
+
+def batch_axes(cfg, kind: str) -> dict[str, tuple]:
+    """Logical axes for the input batch dict of one step."""
+    if cfg.frontend == "audio":
+        tok = ("batch", "seq", None)
+    else:
+        tok = ("batch", "seq")
+    out = {"tokens": tok}
+    if cfg.frontend == "vision" and kind in ("train", "prefill"):
+        out["patch_embeds"] = ("batch", "seq", "act_embed")
+    return out
+
+
+def decode_state_axes(cfg) -> Any:
+    """Logical axes matching models.transformer.DecodeState (isomorphic
+    pytree: same NamedTuple nodes, axis-name tuples as leaves)."""
+    from repro.models.attention import KVCache
+    from repro.models.ssm import SSMState
+    from repro.models.transformer import DecodeState
+    kv = ssm = hyb = None
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        kv = _kv_axes(KVCache)
+    elif cfg.family == "ssm":
+        ssm = _ssm_axes(SSMState, variant="mamba1")
+    elif cfg.family == "hybrid":
+        ssm = _ssm_axes(SSMState, variant="mamba2")
+        hyb = _kv_axes(KVCache)
+    return DecodeState((), kv, ssm, hyb)   # pos scalar: P() -> replicated
+
+
+def _kv_axes(KVCache):
+    a = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    return KVCache(a, a)
+
+
+def _ssm_axes(SSMState, variant: str):
+    conv = ("layers", "batch", None, "inner")
+    if variant == "mamba1":
+        h = ("layers", "batch", "inner", "state")
+    else:
+        h = ("layers", "batch", "heads", None, "state")
+    return SSMState(conv, h)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """Everything jit needs for one (arch, shape) cell."""
+
+    mesh: Mesh
+    rules: dict
+    param_specs: Any
+    batch_specs: Any
+    state_specs: Any = None
+
+    def param_shardings(self):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.param_specs,
+                            is_leaf=lambda s: isinstance(s, P))
+
+
+def make_plan(cfg, axes_tree, mesh: Mesh, kind: str = "train",
+              overrides=None) -> ShardingPlan:
+    multi_pod = "pod" in mesh.axis_names
+    rules = make_rules(multi_pod=multi_pod, fsdp=cfg.fsdp_params,
+                       overrides=overrides)
+    pspecs = tree_pspecs(axes_tree, rules)
+    b_axes = batch_axes(cfg, kind)
+    b_specs = {k: pspec(v, rules) for k, v in b_axes.items()}
+    s_specs = None
+    if kind in ("prefill", "decode"):
+        s_axes = decode_state_axes(cfg)
+        s_specs = jax.tree.map(
+            lambda a: pspec(a, rules), s_axes,
+            is_leaf=lambda a: isinstance(a, tuple) and
+            all(isinstance(x, (str, type(None))) for x in a))
+    return ShardingPlan(mesh, rules, pspecs, b_specs, s_specs)

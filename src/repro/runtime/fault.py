@@ -1,0 +1,136 @@
+"""Fault tolerance runtime: heartbeat, straggler watchdog, restart driver.
+
+On a real cluster each host runs a ``Heartbeat`` thread and the
+coordinator inspects the files; missing beats mark a dead host and the
+job restarts from the latest checkpoint onto the surviving topology
+(elastic restore — see ``checkpoint.restore``'s sharding_fn). Here the
+same machinery is exercised in-process: ``restart_loop`` catches
+(simulated or real) failures, restores, and continues — the integration
+test asserts bit-identical results vs an uninterrupted run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import statistics
+import threading
+import time
+from typing import Callable, Optional
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected node failure (tests / chaos drills)."""
+
+
+class Heartbeat:
+    """Background thread writing {host, step, t} beats to a JSON file."""
+
+    def __init__(self, path: str, host: str = "host0",
+                 interval_s: float = 0.05):
+        self.path = path
+        self.host = host
+        self.interval_s = interval_s
+        self.step = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self):
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        return self
+
+    def _run(self):
+        while not self._stop.is_set():
+            beat = {"host": self.host, "step": self.step, "t": time.time()}
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(beat, f)
+            os.replace(tmp, self.path)
+            self._stop.wait(self.interval_s)
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2)
+
+
+def is_alive(path: str, timeout_s: float) -> bool:
+    try:
+        with open(path) as f:
+            beat = json.load(f)
+        return (time.time() - beat["t"]) < timeout_s
+    except (OSError, ValueError):
+        return False
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration_s: float
+    median_s: float
+
+
+class StepWatchdog:
+    """Flags steps slower than ``factor`` x running median (stragglers).
+
+    On TPU pods a straggling host stalls the whole program at the next
+    collective; the watchdog turns that stall into a logged, attributable
+    event so the scheduler can evict/replace the host.
+    """
+
+    def __init__(self, factor: float = 3.0, window: int = 50,
+                 warmup: int = 3):
+        self.factor = factor
+        self.window = window
+        self.warmup = warmup
+        self.durations: list[float] = []
+        self.events: list[StragglerEvent] = []
+        self._t0: Optional[float] = None
+        self._step = 0
+
+    def start_step(self, step: int):
+        self._step = step
+        self._t0 = time.monotonic()
+
+    def end_step(self) -> Optional[StragglerEvent]:
+        if self._t0 is None:
+            return None
+        dur = time.monotonic() - self._t0
+        ev = None
+        if len(self.durations) >= self.warmup:
+            med = statistics.median(self.durations[-self.window:])
+            if dur > self.factor * med:
+                ev = StragglerEvent(self._step, dur, med)
+                self.events.append(ev)
+        self.durations.append(dur)
+        return ev
+
+    def observe(self, duration_s: float, step: int = -1):
+        """Record an externally-measured duration (tests)."""
+        self.start_step(step)
+        self._t0 = time.monotonic() - duration_s
+        return self.end_step()
+
+
+def restart_loop(run_fn: Callable[[Optional[int]], int], *,
+                 max_restarts: int = 3,
+                 on_restart: Optional[Callable[[int, BaseException], None]]
+                 = None) -> int:
+    """Run ``run_fn(resume_step)`` to completion with crash recovery.
+
+    ``run_fn`` returns the final step on success and raises on failure;
+    it must itself restore state from the latest checkpoint when
+    ``resume_step`` is not None. Returns the final step.
+    """
+    resume: Optional[int] = None
+    for attempt in range(max_restarts + 1):
+        try:
+            return run_fn(resume)
+        except (SimulatedFailure, RuntimeError) as e:  # noqa: PERF203
+            if attempt == max_restarts:
+                raise
+            if on_restart:
+                on_restart(attempt, e)
+            resume = -1   # sentinel: "restore from latest"
+    raise AssertionError("unreachable")

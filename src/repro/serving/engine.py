@@ -1,0 +1,158 @@
+"""Serving: batched prefill/decode with a continuous-batching scheduler.
+
+Slot-based continuous batching (vLLM-style, adapted to static JAX
+shapes): the engine owns ONE batched ``DecodeState`` with ``num_slots``
+rows, each with an independent cursor (``DecodeState.pos`` is a (b,)
+vector). Admission prefillis a request on a batch-1 state and inserts
+its caches into a free slot; every engine tick decodes ALL slots in one
+jitted step (idle slots compute masked garbage — the static-shape tax).
+Finished rows free their slot immediately, so new requests join mid-
+flight without draining the batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_decode_state, prefill
+from repro.models.transformer import DecodeState
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def _insert_row(batched, single, row: int):
+    """Write a batch-1 state pytree into slot ``row`` of the batched one.
+
+    Every DecodeState leaf has batch at dim 1 (stacked (L, b, ...)),
+    except ``pos`` (dim 0).
+    """
+    def ins(full, one):
+        if full.ndim == 1:                       # pos vector (b,)
+            return full.at[row].set(one[0] if one.ndim else one)
+        return jax.lax.dynamic_update_slice(
+            full, one.astype(full.dtype),
+            (0, row) + (0,) * (full.ndim - 2))
+
+    return jax.tree.map(ins, batched, single)
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, *, num_slots: int = 4,
+                 max_len: int = 256, cache_dtype=jnp.float32,
+                 sample_fn: Callable = greedy_sample):
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.sample_fn = sample_fn
+        self.state = init_decode_state(cfg, num_slots, max_len,
+                                       dtype=cache_dtype, per_row_pos=True)
+        self.slot_req: list[Optional[Request]] = [None] * num_slots
+        self.next_token = np.zeros((num_slots, 1), np.int32)
+        self.waiting: list[Request] = []
+        self.finished: list[Request] = []
+        self.cache_dtype = cache_dtype
+        self._decode = jax.jit(functools.partial(decode_step, cfg))
+        self._steps = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.waiting.append(req)
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self):
+        for slot in self._free_slots():
+            if not self.waiting:
+                break
+            req = self.waiting.pop(0)
+            single = init_decode_state(self.cfg, 1, self.max_len,
+                                       dtype=self.cache_dtype,
+                                       per_row_pos=True)
+            p = req.prompt[None, :]
+            single = single._replace(pos=jnp.int32(0))
+            single, last = prefill(self.cfg, self.params,
+                                   {"tokens": jnp.asarray(p)}, single)
+            single = single._replace(
+                pos=jnp.full((1,), single.pos, jnp.int32))
+            self.state = _insert_row(self.state, single, slot)
+            first = np.asarray(self.sample_fn(last))[0]
+            req.generated.append(int(first))
+            self.next_token[slot, 0] = int(first)
+            self.slot_req[slot] = req
+
+    def _retire(self, slot: int):
+        req = self.slot_req[slot]
+        req.done = True
+        self.finished.append(req)
+        self.slot_req[slot] = None
+        # neutralize the cursor so the idle row stays cheap/masked
+        self.state = self.state._replace(
+            pos=self.state.pos.at[slot].set(0))
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine tick: admit, one batched decode, retire."""
+        self._admit()
+        if all(r is None for r in self.slot_req):
+            return
+        logits, self.state = self._decode(
+            self.params, self.state, jnp.asarray(self.next_token))
+        toks = np.asarray(self.sample_fn(logits))
+        self._steps += 1
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if len(req.generated) >= req.max_new_tokens or \
+                    (req.eos_id is not None and
+                     req.generated[-1] == req.eos_id) or \
+                    int(self.state.pos[slot]) >= self.max_len:
+                self._retire(slot)
+                continue
+            req.generated.append(int(toks[slot]))
+            self.next_token[slot, 0] = int(toks[slot])
+
+    def run_until_done(self, max_ticks: int = 10_000):
+        while (self.waiting or
+               any(r is not None for r in self.slot_req)):
+            self.step()
+            max_ticks -= 1
+            if max_ticks <= 0:
+                raise TimeoutError("serving engine did not drain")
+        return self.finished
+
+
+def generate_sequential(cfg, params, prompt: np.ndarray,
+                        max_new_tokens: int, *, max_len: int = 256,
+                        cache_dtype=jnp.float32,
+                        sample_fn: Callable = greedy_sample) -> list[int]:
+    """Single-request reference generator (the engine must match this)."""
+    state = init_decode_state(cfg, 1, max_len, dtype=cache_dtype)
+    state, last = prefill(cfg, params, {"tokens": jnp.asarray(prompt[None])},
+                          state)
+    out = [int(np.asarray(sample_fn(last))[0])]
+    tok = jnp.asarray([[out[-1]]], jnp.int32)
+    for _ in range(max_new_tokens - 1):
+        logits, state = decode_step(cfg, params, state, tok)
+        nxt = int(np.asarray(sample_fn(logits))[0])
+        out.append(nxt)
+        tok = jnp.asarray([[nxt]], jnp.int32)
+    return out

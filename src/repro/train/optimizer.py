@@ -1,0 +1,100 @@
+"""AdamW + schedules + gradient clipping (pytree-native, no optax).
+
+Optimizer state is a pytree congruent with the params, so the same
+sharding specs apply (moments shard exactly like their parameter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # scalar int32
+    mu: Any                  # first moment, like params
+    nu: Any                  # second moment, like params
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+
+
+def adamw_init(params: Any, moment_dtype=None) -> AdamWState:
+    """``moment_dtype``: e.g. bf16 moments to fit HBM at the 235B scale."""
+    def z(p):
+        return jnp.zeros(p.shape, moment_dtype or jnp.float32)
+    return AdamWState(jnp.int32(0), jax.tree.map(z, params),
+                      jax.tree.map(z, params))
+
+
+def cosine_lr(oc: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = step.astype(jnp.float32) / max(1, oc.warmup_steps)
+    prog = (step - oc.warmup_steps).astype(jnp.float32) / max(
+        1, oc.total_steps - oc.warmup_steps)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decayed = oc.min_lr_ratio + (1 - oc.min_lr_ratio) * cos
+    return oc.peak_lr * jnp.where(step < oc.warmup_steps,
+                                  jnp.clip(warm, 0.0, 1.0), decayed)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(grads: Any, state: AdamWState, params: Any,
+                 oc: OptimizerConfig):
+    """-> (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, oc.grad_clip_norm)
+    step = state.step + 1
+    lr = jnp.asarray(cosine_lr(oc, step), jnp.float32)
+    b1t = 1.0 - oc.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - oc.b2 ** step.astype(jnp.float32)
+    b1t = jnp.asarray(b1t, jnp.float32)
+    b2t = jnp.asarray(b2t, jnp.float32)
+
+    def upd(p, g, m, v):
+        # Update math runs in the MOMENT dtype: f32 normally; fully-bf16
+        # when the config chose bf16 moments (the 235B single-pod fit) —
+        # f32 math there would materialize f32 copies of every parameter
+        # leaf (observed +7 GiB/chip on the dry-run).
+        wdt = m.dtype
+        g = g.astype(wdt)
+        m = (oc.b1 * m + (1 - oc.b1) * g).astype(wdt)
+        v = (oc.b2 * v + (1 - oc.b2) * jnp.square(g)).astype(wdt)
+        mh = m / b1t.astype(wdt)
+        vh = v / b2t.astype(wdt)
+        delta = mh / (jnp.sqrt(vh) + jnp.asarray(oc.eps, wdt)) + \
+            jnp.asarray(oc.weight_decay, wdt) * p.astype(wdt)
+        return ((p - (lr.astype(wdt) * delta).astype(p.dtype)),
+                m, v)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda o: isinstance(o, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda o: isinstance(o, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda o: isinstance(o, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), \
+        {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,18 @@
+"""Test session config.
+
+x64 is enabled for the FP64 oracle paths (the paper targets DGEMM).
+NOTE: do NOT set XLA_FLAGS device-count here — smoke tests must see one
+device; multi-device behaviour is tested through subprocesses
+(tests/util.py) and the dry-run launcher sets its own flag.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

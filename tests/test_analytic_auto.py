@@ -1,0 +1,108 @@
+"""Analytic cost model (Fig. 4 claims) + INT8-AUTO split selection."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.analytic import (ALL_MMUS, DGEMM_MANTISSA_SPACE, FP16_FP32,
+                                 INT4_INT32, INT8_INT32, INT12_INT32,
+                                 ozaki_flops, ozaki_hp_accum_ops)
+from repro.core.auto_split import auto_num_splits
+from repro.core.splitting import compute_alpha
+
+TARGET_RANGE = [2 ** e for e in range(11, 21)]
+
+
+def test_bps_ordering_paper_sec_321():
+    """INT8 BPS >= FP16 BPS in the target range; INT4 fixed at 3."""
+    for k in TARGET_RANGE:
+        assert INT8_INT32.bps(k) >= FP16_FP32.bps(k)
+        assert INT4_INT32.bps(k) == 3
+        if k < 2 ** 18:
+            assert INT8_INT32.bps(k) == 7      # = ell_in, no waste > 1
+
+
+def test_fewer_splits_than_fp16_sec_322():
+    for k in TARGET_RANGE:
+        assert INT8_INT32.num_splits(k, DGEMM_MANTISSA_SPACE) <= \
+            FP16_FP32.num_splits(k, DGEMM_MANTISSA_SPACE)
+        if k <= 2 ** 16:   # beyond, FP16's alpha collapses below INT4's 3
+            assert INT4_INT32.num_splits(k, DGEMM_MANTISSA_SPACE) >= \
+                FP16_FP32.num_splits(k, DGEMM_MANTISSA_SPACE)
+
+
+def test_memory_saving_sec_323():
+    """Paper: integers save 50-75% of slice working memory vs FP16."""
+    for k in TARGET_RANGE:
+        fp16 = FP16_FP32.slice_bytes_per_element(k, DGEMM_MANTISSA_SPACE)
+        int8 = INT8_INT32.slice_bytes_per_element(k, DGEMM_MANTISSA_SPACE)
+        saving = 1 - int8 / fp16
+        assert 0.45 <= saving <= 0.85, (k, saving)
+        # INT8 is the least-memory IMMU (up to k ~ 2^17; beyond, INT8's
+        # alpha drops below ell_in and INT4's fixed 3 bits catch up —
+        # visible in the paper's own Fig. 4 bottom-left)
+        if k <= 2 ** 17:
+            for mmu in (INT4_INT32, INT12_INT32):
+                assert int8 <= mmu.slice_bytes_per_element(
+                    k, DGEMM_MANTISSA_SPACE)
+
+
+def test_gemm_count_sec_324():
+    for k in TARGET_RANGE:
+        s8 = INT8_INT32.num_splits(k, DGEMM_MANTISSA_SPACE)
+        assert INT8_INT32.num_gemms(k, DGEMM_MANTISSA_SPACE) == \
+            s8 * (s8 + 1) // 2
+        # INT4 needs ~6x the operations of INT8 (paper Sec. 3.2.4)
+        ratio = INT4_INT32.num_gemms(k, DGEMM_MANTISSA_SPACE) / \
+            INT8_INT32.num_gemms(k, DGEMM_MANTISSA_SPACE)
+        assert ratio > 2.5
+
+
+def test_alpha_closed_form_matches_exact():
+    """Eq. (4) floor form vs the overflow-exact implementation."""
+    for k in TARGET_RANGE:
+        assert abs(INT8_INT32.alpha(k) - compute_alpha(k)) <= 1
+
+
+def test_flops_model():
+    assert ozaki_flops(4, 5, 6, 1) == 2 * 4 * 5 * 6
+    assert ozaki_flops(4, 5, 6, 9) == 2 * 4 * 5 * 6 * 45
+    assert ozaki_hp_accum_ops(4, 5, 9, True) == 4 * 5 * 9
+    assert ozaki_hp_accum_ops(4, 5, 9, False) == 4 * 5 * 45
+
+
+# --------------------------------------------------------------------------
+# INT8-AUTO
+# --------------------------------------------------------------------------
+
+def _phi(rng, m, k, phi):
+    return jnp.asarray(rng.uniform(-0.5, 0.5, (m, k))
+                       * np.exp(phi * rng.standard_normal((m, k))))
+
+
+def test_auto_monotone_in_threshold(rng):
+    a = _phi(rng, 16, 64, 1.0)
+    b = _phi(rng, 64, 16, 1.0)
+    s0 = auto_num_splits(a, b, w=7, threshold_bits=0.0)
+    s1 = auto_num_splits(a, b, w=7, threshold_bits=1.0)
+    assert s1 <= s0
+    assert s0 >= 8      # T=0 keeps all 53 bits: ~ceil((53+phi)/7)
+
+
+def test_auto_monotone_in_phi(rng):
+    narrow = auto_num_splits(_phi(rng, 16, 64, 0.1), _phi(rng, 64, 16, 0.1),
+                             w=7, threshold_bits=0.0)
+    wide = auto_num_splits(_phi(rng, 16, 64, 4.0), _phi(rng, 64, 16, 4.0),
+                           w=7, threshold_bits=0.0)
+    assert wide > narrow
+
+
+def test_auto_t0_gives_exactness(rng):
+    """T=0 split count -> error at dd-oracle level (paper Sec. 4.4)."""
+    from repro.core.ozaki import OzakiConfig, ozaki_matmul
+    from repro.core.xmath import dd_matmul_np, rel_error_vs_dd
+    a = _phi(rng, 16, 64, 1.0)
+    b = _phi(rng, 64, 12, 1.0)
+    s = auto_num_splits(a, b, w=7, threshold_bits=0.0)
+    c = ozaki_matmul(a, b, OzakiConfig(num_splits=s))
+    hi, lo = dd_matmul_np(np.asarray(a), np.asarray(b))
+    assert float(np.max(rel_error_vs_dd(np.asarray(c), hi, lo))) < 1e-15

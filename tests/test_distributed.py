@@ -1,0 +1,138 @@
+"""Multi-device behaviour (8 virtual CPU devices via subprocess)."""
+import pytest
+
+from util import run_multidevice
+
+
+def test_distributed_ozaki_bitwise_reproducible():
+    out = run_multidevice("""
+import jax
+jax.config.update('jax_enable_x64', True)
+import numpy as np, jax.numpy as jnp
+from repro.core.ozaki import OzakiConfig
+from repro.parallel.ozaki_shard import distributed_ozaki_matmul
+rng = np.random.default_rng(0)
+a = jnp.asarray(rng.uniform(-0.5, 0.5, (64, 256))
+                * np.exp(rng.standard_normal((64, 256))))
+b = jnp.asarray(rng.uniform(-0.5, 0.5, (256, 48)))
+cfg = OzakiConfig(num_splits=11)
+outs = []
+for shape in ((2, 4), (4, 2), (1, 8)):
+    mesh = jax.make_mesh(shape, ('data', 'model'),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    outs.append(np.asarray(distributed_ozaki_matmul(a, b, mesh, cfg)))
+assert np.array_equal(outs[0], outs[1]), 'mesh 2x4 vs 4x2'
+assert np.array_equal(outs[0], outs[2]), 'mesh 2x4 vs 1x8'
+ref = np.asarray(a) @ np.asarray(b)
+err = np.abs(outs[0] - ref).max() / np.abs(ref).max()
+assert err < 1e-14, err
+# overlap schedule identical (int32 psum exactness)
+o2 = np.asarray(distributed_ozaki_matmul(
+    a, b, jax.make_mesh((2, 4), ('data', 'model'),
+                        axis_types=(jax.sharding.AxisType.Auto,) * 2),
+    cfg, schedule='overlap'))
+assert np.array_equal(outs[0], o2)
+print('OK')
+""")
+    assert "OK" in out
+
+
+def test_distributed_ozaki_m_sharded_and_df32():
+    out = run_multidevice("""
+import jax
+jax.config.update('jax_enable_x64', True)
+import numpy as np, jax.numpy as jnp
+from repro.core.ozaki import OzakiConfig
+from repro.core.xmath import df32_to_f64
+from repro.parallel.ozaki_shard import distributed_ozaki_matmul
+rng = np.random.default_rng(1)
+a = jnp.asarray(rng.uniform(-0.5, 0.5, (64, 128)))
+b = jnp.asarray(rng.uniform(-0.5, 0.5, (128, 32)))
+mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+c = np.asarray(distributed_ozaki_matmul(a, b, mesh,
+               OzakiConfig(num_splits=9), m_axis='data'))
+ref = np.asarray(a) @ np.asarray(b)
+assert np.abs(c - ref).max() < 1e-13
+a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+dw = distributed_ozaki_matmul(a32, b32, mesh,
+                              OzakiConfig(num_splits=9, accum='df32'),
+                              m_axis='data')
+c32 = np.asarray(df32_to_f64(dw))
+# oracle must use the SAME f32-rounded inputs (their rounding is ~1e-8;
+# the scheme reproduces their exact product to df32 precision)
+ref32 = np.asarray(a32, np.float64) @ np.asarray(b32, np.float64)
+assert np.abs(c32 - ref32).max() < 1e-11, np.abs(c32 - ref32).max()
+print('OK')
+""")
+    assert "OK" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    out = run_multidevice("""
+import jax, numpy as np, jax.numpy as jnp
+from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.parallel.sharding import make_plan
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import init_training, make_train_step, train_step
+from repro.train.optimizer import adamw_init
+from repro.data.pipeline import make_data
+
+cfg = get_config('llama3.2-3b').reduced()
+oc = OptimizerConfig(peak_lr=1e-3, warmup_steps=1, total_steps=10)
+data = make_data(cfg, 32, 8)
+batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+
+# single device reference
+from repro.models import init_model
+params, axes = init_model(cfg, jax.random.key(0))
+p1, o1, m1 = train_step(cfg, oc, params, adamw_init(params), batch)
+
+# 4x2 mesh sharded
+mesh = make_local_mesh(data=4, model=2)
+plan = make_plan(cfg, axes, mesh, kind='train')
+step = make_train_step(cfg, oc, plan)
+params2, _, opt2 = init_training(cfg, jax.random.key(0), plan)
+p2, o2, m2 = step(params2, opt2, batch)
+for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=5e-3, atol=5e-4)
+assert abs(float(m1['loss']) - float(m2['loss'])) < 1e-2
+print('OK')
+""", timeout=900)
+    assert "OK" in out
+
+
+def test_int8_gradient_compression_with_error_feedback():
+    out = run_multidevice("""
+import jax, numpy as np, jax.numpy as jnp
+from functools import partial
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.parallel.compression import (compress_psum, init_ef_state)
+
+mesh = jax.make_mesh((8,), ('data',),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(0)
+g_all = jnp.asarray(rng.standard_normal((8, 256)), jnp.float32)
+
+def one_round(gs, res):
+    def local(g, r):
+        avg, ef = compress_psum({'g': g[0]}, init_ef_state({'g': g[0]})._replace(residual={'g': r[0]}), 'data')
+        return avg['g'][None], ef.residual['g'][None]
+    return shard_map(local, mesh=mesh, in_specs=(P('data'), P('data')),
+                     out_specs=(P('data'), P('data')))(gs, res)
+
+res = jnp.zeros_like(g_all)
+exact = np.asarray(jnp.mean(g_all, axis=0))
+# EF: accumulated compressed sum over T rounds of the SAME grad converges
+acc = np.zeros(256)
+for t in range(20):
+    avg, res = one_round(g_all, res)
+    acc += np.asarray(avg[0])
+err = np.abs(acc / 20 - exact).max() / (np.abs(exact).max() + 1e-9)
+assert err < 2e-3, err
+print('OK')
+""")
+    assert "OK" in out

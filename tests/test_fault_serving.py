@@ -1,0 +1,164 @@
+"""Fault-tolerance runtime + serving engine behaviour."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_model
+from repro.runtime.fault import (Heartbeat, SimulatedFailure, StepWatchdog,
+                                 is_alive, restart_loop)
+from repro.serving.engine import (Request, ServingEngine,
+                                  generate_sequential)
+
+KEY = jax.random.key(0)
+
+
+# --------------------------------------------------------------------------
+# runtime
+# --------------------------------------------------------------------------
+
+def test_heartbeat_lifecycle(tmp_path):
+    path = str(tmp_path / "hb.json")
+    hb = Heartbeat(path, interval_s=0.01).start()
+    time.sleep(0.08)
+    hb.step = 42
+    time.sleep(0.05)
+    assert is_alive(path, timeout_s=1.0)
+    hb.stop()
+    time.sleep(0.12)
+    assert not is_alive(path, timeout_s=0.05)
+
+
+def test_watchdog_flags_straggler():
+    wd = StepWatchdog(factor=3.0, warmup=3)
+    for _ in range(5):
+        assert wd.observe(0.10) is None
+    ev = wd.observe(0.50)
+    assert ev is not None and ev.duration_s >= 0.5
+    assert wd.observe(0.11) is None
+    assert len(wd.events) == 1
+
+
+def test_restart_loop_recovers():
+    calls = []
+
+    def run(resume):
+        calls.append(resume)
+        if len(calls) < 3:
+            raise SimulatedFailure("boom")
+        return 99
+
+    assert restart_loop(run, max_restarts=5) == 99
+    assert calls == [None, -1, -1]
+
+
+def test_restart_loop_exhausts():
+    def run(resume):
+        raise SimulatedFailure("always")
+
+    with pytest.raises(SimulatedFailure):
+        restart_loop(run, max_restarts=1)
+
+
+def test_train_restart_bitwise_identical(tmp_path):
+    """Kill at step 3, restart, finish == uninterrupted run (bitwise)."""
+    import argparse
+    from repro.launch.train import train
+
+    def args(ckpt, fail_at):
+        return argparse.Namespace(
+            arch="llama3.2-3b", full=False, precision=None, steps=6,
+            batch=4, seq=32, grad_accum=1, model_parallel=1, lr=5e-3,
+            warmup=2, seed=0, data_seed=1234, ckpt_dir=ckpt,
+            ckpt_every=2, log_every=100, max_restarts=2,
+            simulate_failure_at=fail_at)
+
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    os.makedirs(d1), os.makedirs(d2)
+    train(args(d1, -1))          # uninterrupted
+    train(args(d2, 3))           # crash at step 3, auto-restart
+    from repro.checkpoint import ckpt as ckpt_lib
+    m1 = ckpt_lib.load_manifest(d1, 6)
+    m2 = ckpt_lib.load_manifest(d2, 6)
+    assert m1["keys"] == m2["keys"]
+    for k in m1["keys"]:
+        a = np.load(os.path.join(d1, "step_0000006", "arrays", k + ".npy"))
+        b = np.load(os.path.join(d2, "step_0000006", "arrays", k + ".npy"))
+        np.testing.assert_array_equal(a, b, err_msg=k)
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def llama_setup():
+    cfg = get_config("llama3.2-3b").reduced()
+    params, _ = init_model(cfg, KEY)
+    return cfg, params
+
+
+def test_engine_matches_sequential(llama_setup, rng):
+    cfg, params = llama_setup
+    engine = ServingEngine(cfg, params, num_slots=3, max_len=64)
+    reqs = []
+    for rid in range(5):
+        plen = int(rng.integers(3, 10))
+        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        req = Request(rid, prompt, max_new_tokens=int(rng.integers(4, 9)))
+        reqs.append(req)
+        engine.submit(req)
+    finished = engine.run_until_done()
+    assert len(finished) == 5
+    for req in reqs:
+        ref = generate_sequential(cfg, params, req.prompt,
+                                  req.max_new_tokens, max_len=64)
+        assert req.generated == ref, req.rid
+
+
+def test_engine_mid_flight_admission(llama_setup, rng):
+    """A request submitted while others decode must join and match."""
+    cfg, params = llama_setup
+    engine = ServingEngine(cfg, params, num_slots=2, max_len=64)
+    first = Request(0, rng.integers(0, cfg.vocab_size, 5).astype(np.int32),
+                    max_new_tokens=8)
+    engine.submit(first)
+    for _ in range(3):
+        engine.step()
+    late = Request(1, rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                   max_new_tokens=6)
+    engine.submit(late)
+    engine.run_until_done()
+    for req in (first, late):
+        ref = generate_sequential(cfg, params, req.prompt,
+                                  req.max_new_tokens, max_len=64)
+        assert req.generated == ref, req.rid
+
+
+def test_engine_eos_stops(llama_setup, rng):
+    cfg, params = llama_setup
+    prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    ref = generate_sequential(cfg, params, prompt, 16, max_len=64)
+    eos = ref[2]
+    engine = ServingEngine(cfg, params, num_slots=1, max_len=64)
+    req = Request(0, prompt, max_new_tokens=16, eos_id=int(eos))
+    engine.submit(req)
+    engine.run_until_done()
+    assert req.generated[-1] == eos
+    assert len(req.generated) <= 16
+    assert req.generated == ref[:len(req.generated)]
+
+
+def test_engine_more_requests_than_slots(llama_setup, rng):
+    cfg, params = llama_setup
+    engine = ServingEngine(cfg, params, num_slots=2, max_len=64)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                    max_new_tokens=4) for i in range(6)]
+    for r in reqs:
+        engine.submit(r)
+    finished = engine.run_until_done()
+    assert sorted(r.rid for r in finished) == list(range(6))

@@ -1,0 +1,78 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret=True on CPU).
+
+Integer paths assert exact equality; the df32 accumulation path is exact
+too (identical compensated-arithmetic sequence).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.splitting import row_exponents, split_int_dw
+from repro.core.xmath import DW, df32_from_f64
+from repro.kernels import ref
+from repro.kernels.int8_gemm import int8_matmul_nt
+from repro.kernels.ozaki_accum import accum_scaled_dw
+from repro.kernels.ozaki_split import fused_split_dw
+
+
+@pytest.mark.parametrize("m,n,k", [
+    (8, 8, 8), (16, 24, 32), (128, 64, 256), (200, 120, 530),
+    (256, 256, 512), (33, 7, 129)])
+def test_int8_gemm_sweep(rng, m, n, k):
+    a = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    bt = jnp.asarray(rng.integers(-128, 128, (n, k)), jnp.int8)
+    got = np.asarray(int8_matmul_nt(a, bt, interpret=True))
+    want = np.asarray(ref.int8_matmul_nt_ref(a, bt))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(32, 32, 64), (256, 256, 512)])
+def test_int8_gemm_block_shapes(rng, bm, bn, bk):
+    a = jnp.asarray(rng.integers(-128, 128, (100, 300)), jnp.int8)
+    bt = jnp.asarray(rng.integers(-128, 128, (70, 300)), jnp.int8)
+    got = np.asarray(int8_matmul_nt(a, bt, bm=bm, bn=bn, bk=bk,
+                                    interpret=True))
+    np.testing.assert_array_equal(got,
+                                  np.asarray(ref.int8_matmul_nt_ref(a, bt)))
+
+
+@pytest.mark.parametrize("m,k,s,w", [
+    (8, 128, 9, 7), (64, 256, 13, 7), (100, 130, 5, 6), (16, 512, 3, 7)])
+def test_fused_split_sweep(rng, m, k, s, w):
+    x = jnp.asarray(rng.uniform(-0.5, 0.5, (m, k))
+                    * np.exp(rng.standard_normal((m, k))))
+    dw = df32_from_f64(x)
+    exp = row_exponents(dw.hi)
+    got = np.asarray(fused_split_dw(dw.hi, dw.lo, exp, num_splits=s, w=w,
+                                    interpret=True))
+    want = np.asarray(ref.fused_split_dw_ref(dw.hi, dw.lo, exp,
+                                             num_splits=s, w=w))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("m,n,scale_pow", [(16, 128, -14), (100, 200, -28),
+                                           (256, 256, -42)])
+def test_accum_scaled_sweep(rng, m, n, scale_pow):
+    p = jnp.asarray(rng.integers(-2 ** 30, 2 ** 30, (m, n)), jnp.int32)
+    c_hi = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    c_lo = jnp.asarray(rng.standard_normal((m, n)) * 1e-8, jnp.float32)
+    scale = float(2.0 ** scale_pow)
+    gh, gl = accum_scaled_dw(p, c_hi, c_lo, scale=scale, interpret=True)
+    wh, wl = ref.accum_scaled_dw_ref(p, c_hi, c_lo, scale=scale)
+    np.testing.assert_array_equal(np.asarray(gh), np.asarray(wh))
+    np.testing.assert_array_equal(np.asarray(gl), np.asarray(wl))
+
+
+def test_int8_gemm_jit_composes(rng):
+    """Kernels must be callable under an outer jit (pjit path)."""
+    a = jnp.asarray(rng.integers(-128, 128, (64, 128)), jnp.int8)
+    bt = jnp.asarray(rng.integers(-128, 128, (32, 128)), jnp.int8)
+
+    @jax.jit
+    def f(a, bt):
+        return int8_matmul_nt(a, bt, interpret=True) + 1
+
+    got = np.asarray(f(a, bt))
+    np.testing.assert_array_equal(
+        got, np.asarray(ref.int8_matmul_nt_ref(a, bt)) + 1)

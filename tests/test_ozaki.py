@@ -1,0 +1,136 @@
+"""Ozaki-scheme GEMM accuracy and scheduling equivalences (paper Alg. 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ozaki import (OzakiConfig, dgemm_f64, gemm_fp32_pass,
+                              ozaki_matmul, ozaki_matmul_complex,
+                              ozaki_matmul_dw)
+from repro.core.xmath import (DW, dd_matmul_np, df32_from_f64, df32_to_f64,
+                              rel_error_vs_dd)
+
+
+def _phi_matrix(rng, m, k, phi):
+    """Paper Eq. (6): uniform(-0.5,0.5) * exp(phi * normal)."""
+    return jnp.asarray(rng.uniform(-0.5, 0.5, (m, k))
+                       * np.exp(phi * rng.standard_normal((m, k))))
+
+
+def _max_rel_err_vs_dd(c, a, b):
+    hi, lo = dd_matmul_np(np.asarray(a), np.asarray(b))
+    return float(np.max(rel_error_vs_dd(np.asarray(c), hi, lo)))
+
+
+@pytest.mark.parametrize("phi,s,tol", [
+    (0.1, 9, 1e-15), (1.0, 11, 1e-14), (2.0, 13, 1e-13)])
+def test_accuracy_vs_exponent_range(rng, phi, s, tol):
+    """Fig. 6: enough splits keep INT8xX at/below DGEMM error."""
+    a = _phi_matrix(rng, 24, 96, phi)
+    b = _phi_matrix(rng, 96, 16, phi).T.T
+    c = ozaki_matmul(a, jnp.asarray(b), OzakiConfig(num_splits=s))
+    assert _max_rel_err_vs_dd(c, a, b) < tol
+
+
+def test_few_splits_wide_exponents_degrades(rng):
+    """Fig. 6's other half: wide phi + few splits loses accuracy."""
+    a = _phi_matrix(rng, 16, 64, 4.0)
+    b = _phi_matrix(rng, 64, 16, 4.0)
+    err3 = _max_rel_err_vs_dd(
+        ozaki_matmul(a, b, OzakiConfig(num_splits=3)), a, b)
+    err13 = _max_rel_err_vs_dd(
+        ozaki_matmul(a, b, OzakiConfig(num_splits=13)), a, b)
+    assert err13 < err3 * 1e-3
+
+
+def test_zero_cancellation_beats_dgemm(rng):
+    """Fig. 7: C = A @ A^-1 — Ozaki beats plain FP64 on cancellation."""
+    n = 48
+    a_np = rng.standard_normal((n, n))
+    ainv = np.linalg.inv(a_np)
+    a, b = jnp.asarray(a_np), jnp.asarray(ainv)
+    err_oz = _max_rel_err_vs_dd(
+        ozaki_matmul(a, b, OzakiConfig(num_splits=11)), a, b)
+    err_dg = _max_rel_err_vs_dd(dgemm_f64(a, b), a, b)
+    assert err_oz < err_dg
+
+
+def test_schedules_agree(rng):
+    a = _phi_matrix(rng, 16, 128, 1.0)
+    b = _phi_matrix(rng, 128, 12, 1.0)
+    base = np.asarray(ozaki_matmul(
+        a, b, OzakiConfig(num_splits=9, fuse_diagonals=False)))
+    fused = np.asarray(ozaki_matmul(
+        a, b, OzakiConfig(num_splits=9, fuse_diagonals=True)))
+    cat = np.asarray(ozaki_matmul(
+        a, b, OzakiConfig(num_splits=9, concat_k=True)))
+    # fused sums the same int32 products exactly -> tiny f64 path diffs
+    np.testing.assert_allclose(fused, base, rtol=1e-15)
+    np.testing.assert_array_equal(fused, cat)   # identical group order
+
+
+def test_full_pairs_at_least_as_accurate(rng):
+    a = _phi_matrix(rng, 12, 64, 1.0)
+    b = _phi_matrix(rng, 64, 12, 1.0)
+    tri = _max_rel_err_vs_dd(ozaki_matmul(
+        a, b, OzakiConfig(num_splits=7, full_pairs=False)), a, b)
+    full = _max_rel_err_vs_dd(ozaki_matmul(
+        a, b, OzakiConfig(num_splits=7, full_pairs=True)), a, b)
+    assert full <= tri * 1.01 + 1e-18
+
+
+def test_pallas_backend_bitwise_equals_xla(rng):
+    a = _phi_matrix(rng, 32, 256, 1.0)
+    b = _phi_matrix(rng, 256, 24, 1.0)
+    x = np.asarray(ozaki_matmul(a, b, OzakiConfig(num_splits=9,
+                                                  backend="xla")))
+    p = np.asarray(ozaki_matmul(a, b, OzakiConfig(num_splits=9,
+                                                  backend="pallas",
+                                                  interpret=True)))
+    np.testing.assert_array_equal(x, p)
+
+
+def test_df32_accumulation_path(rng):
+    a = _phi_matrix(rng, 16, 96, 0.5)
+    b = _phi_matrix(rng, 96, 16, 0.5)
+    c = ozaki_matmul(a, b, OzakiConfig(num_splits=9, accum="df32"))
+    # df32 carries 48 bits -> ~1e-13 relative accuracy
+    assert _max_rel_err_vs_dd(c, a, b) < 1e-12
+
+
+def test_dw_native_path(rng):
+    """TPU-native entry: df32 in, df32 out, no f64 in the hot path."""
+    a = _phi_matrix(rng, 16, 64, 0.5)
+    b = _phi_matrix(rng, 64, 8, 0.5)
+    out = ozaki_matmul_dw(df32_from_f64(a), df32_from_f64(jnp.asarray(b).T),
+                          OzakiConfig(num_splits=9, accum="df32"))
+    c = np.asarray(df32_to_f64(out))
+    assert _max_rel_err_vs_dd(c, a, b) < 1e-12
+
+
+@pytest.mark.parametrize("algo", ["4mul", "3mul"])
+def test_complex_gemm(rng, algo):
+    n = 24
+    a = jnp.asarray(rng.uniform(-0.5, 0.5, (n, n))
+                    + 1j * rng.uniform(-0.5, 0.5, (n, n)))
+    b = jnp.asarray(rng.uniform(-0.5, 0.5, (n, n))
+                    + 1j * rng.uniform(-0.5, 0.5, (n, n)))
+    c = np.asarray(ozaki_matmul_complex(a, b, OzakiConfig(num_splits=10),
+                                        algo=algo))
+    ref = np.asarray(a) @ np.asarray(b)
+    np.testing.assert_allclose(c, ref, rtol=1e-13, atol=1e-14)
+
+
+def test_better_than_fp32(rng):
+    a = _phi_matrix(rng, 16, 64, 1.0)
+    b = _phi_matrix(rng, 64, 16, 1.0)
+    err_oz = _max_rel_err_vs_dd(
+        ozaki_matmul(a, b, OzakiConfig(num_splits=9)), a, b)
+    err_32 = _max_rel_err_vs_dd(gemm_fp32_pass(a, b), a, b)
+    assert err_oz < err_32 * 1e-6
+
+
+def test_gemm_count_formula():
+    cfg = OzakiConfig(num_splits=9)
+    assert cfg.num_gemms == 45                       # s(s+1)/2
+    assert OzakiConfig(num_splits=9, full_pairs=True).num_gemms == 81

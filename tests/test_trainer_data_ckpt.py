@@ -1,0 +1,208 @@
+"""Trainer math, data determinism, checkpoint roundtrip/restart."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.configs import get_config
+from repro.data.pipeline import TokenSource, DataConfig, make_data, \
+    write_corpus
+from repro.models import init_model
+from repro.train.optimizer import (AdamWState, OptimizerConfig, adamw_init,
+                                   adamw_update, cosine_lr,
+                                   clip_by_global_norm)
+from repro.train.trainer import loss_fn, split_microbatches, train_step
+
+KEY = jax.random.key(0)
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+
+def test_adamw_matches_reference(rng):
+    oc = OptimizerConfig(peak_lr=1e-2, warmup_steps=0, total_steps=10,
+                         weight_decay=0.0, grad_clip_norm=1e9,
+                         min_lr_ratio=1.0)
+    p = {"w": jnp.asarray(rng.standard_normal(5), jnp.float32)}
+    g = {"w": jnp.asarray(rng.standard_normal(5), jnp.float32)}
+    st = adamw_init(p)
+    new_p, st2, m = adamw_update(g, st, p, oc)
+    gw = np.asarray(g["w"])
+    mh = (0.1 * gw) / (1 - 0.9)
+    vh = (0.05 * gw ** 2) / (1 - 0.95)
+    want = np.asarray(p["w"]) - 1e-2 * mh / (np.sqrt(vh) + oc.eps)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    oc = OptimizerConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                         min_lr_ratio=0.1)
+    lrs = [float(cosine_lr(oc, jnp.int32(s))) for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0.1 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1)
+
+
+def test_grad_clip(rng):
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [0.6, 0.8],
+                               rtol=1e-6)
+
+
+def test_bf16_moment_update_stays_bf16(rng):
+    oc = OptimizerConfig()
+    p = {"w": jnp.ones(4, jnp.bfloat16)}
+    st = adamw_init(p, moment_dtype=jnp.bfloat16)
+    g = {"w": jnp.full(4, 0.5, jnp.bfloat16)}
+    new_p, st2, _ = adamw_update(g, st, p, oc)
+    assert st2.mu["w"].dtype == jnp.bfloat16
+    assert new_p["w"].dtype == jnp.bfloat16
+
+
+# --------------------------------------------------------------------------
+# trainer
+# --------------------------------------------------------------------------
+
+def _tiny_setup(rng, steps_cfg=40):
+    cfg = get_config("llama3.2-3b").reduced()
+    params, _ = init_model(cfg, KEY)
+    oc = OptimizerConfig(peak_lr=5e-3, warmup_steps=2,
+                         total_steps=steps_cfg)
+    data = make_data(cfg, seq_len=32, global_batch=4)
+    return cfg, params, oc, data
+
+
+def test_loss_decreases(rng):
+    cfg, params, oc, data = _tiny_setup(rng)
+    opt = adamw_init(params)
+    losses = []
+    for step in range(12):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        params, opt, metrics = train_step(cfg, oc, params, opt, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_grad_accum_consistent(rng):
+    cfg, params, oc, data = _tiny_setup(rng)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    p1, _, m1 = train_step(cfg, oc, params, adamw_init(params), batch)
+    micro = {k: jnp.asarray(v) for k, v in
+             split_microbatches({k: np.asarray(v) for k, v in
+                                 batch.items()}, 2).items()}
+    p2, _, m2 = train_step(cfg, oc, params, adamw_init(params), micro,
+                           grad_accum=2)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_vision_loss_masks_patches(rng):
+    cfg = get_config("internvl2-76b").reduced()
+    params, _ = init_model(cfg, KEY)
+    b, s = 2, 16
+    batch = {"tokens": jnp.asarray(rng.integers(
+        0, cfg.vocab_size, (b, s)), jnp.int32),
+        "patch_embeds": jnp.asarray(
+            rng.standard_normal((b, cfg.num_patches, cfg.d_model)),
+            jnp.float32)}
+    loss, metrics = loss_fn(cfg, params, batch)
+    assert bool(jnp.isfinite(loss))
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+
+def test_data_deterministic():
+    cfg = get_config("llama3.2-3b").reduced()
+    d1 = make_data(cfg, 16, 4, seed=7)
+    d2 = make_data(cfg, 16, 4, seed=7)
+    b1, b2 = d1.batch_at(5), d2.batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(b1["tokens"], d1.batch_at(6)["tokens"])
+
+
+def test_data_host_sharding():
+    cfg = get_config("llama3.2-3b").reduced()
+    d = make_data(cfg, 16, 8, seed=7)
+    full = d.batch_at(3)["tokens"]
+    h0 = d.batch_at(3, host_index=0, host_count=2)["tokens"]
+    h1 = d.batch_at(3, host_index=1, host_count=2)["tokens"]
+    np.testing.assert_array_equal(np.concatenate([h0, h1]), full)
+
+
+def test_memmap_corpus(tmp_path):
+    path = str(tmp_path / "corpus.bin")
+    write_corpus(path, 10_000, vocab=100)
+    cfg = get_config("llama3.2-3b").reduced()
+    d = make_data(cfg, 16, 2, memmap_path=path)
+    b = d.batch_at(0)["tokens"]
+    assert b.shape == (2, 16)
+    assert b.max() < cfg.vocab_size
+    np.testing.assert_array_equal(
+        b, make_data(cfg, 16, 2, memmap_path=path).batch_at(0)["tokens"])
+
+
+def test_audio_vlm_batches():
+    for arch in ("musicgen-medium", "internvl2-76b"):
+        cfg = get_config(arch).reduced()
+        d = make_data(cfg, 16, 2)
+        b = d.batch_at(0)
+        if cfg.frontend == "audio":
+            assert b["tokens"].shape == (2, 16, cfg.num_codebooks)
+        else:
+            assert b["patch_embeds"].shape == (2, cfg.num_patches,
+                                               cfg.d_model)
+            assert b["tokens"].shape == (2, 16 - cfg.num_patches)
+
+
+# --------------------------------------------------------------------------
+# checkpoint
+# --------------------------------------------------------------------------
+
+def test_ckpt_roundtrip(tmp_path, rng):
+    tree = {"params": {"w": jnp.asarray(rng.standard_normal((4, 3)),
+                                        jnp.float32),
+                       "b": jnp.asarray(rng.standard_normal(3),
+                                        jnp.bfloat16)},
+            "step": jnp.int32(7)}
+    ckpt_lib.save(str(tmp_path), 7, tree, meta={"data_cursor": 7})
+    assert ckpt_lib.latest_step(str(tmp_path)) == 7
+    assert ckpt_lib.verify(str(tmp_path), 7)
+    out = ckpt_lib.restore(str(tmp_path), 7, jax.eval_shape(lambda: tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ckpt_async_and_gc(tmp_path, rng):
+    tree = {"w": jnp.ones((8,))}
+    threads = [ckpt_lib.save(str(tmp_path), s, tree, async_write=True,
+                             keep_last=2) for s in (1, 2, 3)]
+    for t in threads:
+        t.join()
+    ckpt_lib.save(str(tmp_path), 4, tree, keep_last=2)
+    assert ckpt_lib.all_steps(str(tmp_path)) == [3, 4]
+
+
+def test_ckpt_shape_mismatch_raises(tmp_path):
+    ckpt_lib.save(str(tmp_path), 1, {"w": jnp.ones((4,))})
+    with pytest.raises(ValueError):
+        ckpt_lib.restore(str(tmp_path), 1,
+                         {"w": jax.ShapeDtypeStruct((5,), jnp.float32)})
+
+
+def test_ckpt_missing_key_raises(tmp_path):
+    ckpt_lib.save(str(tmp_path), 1, {"w": jnp.ones((4,))})
+    with pytest.raises(ValueError):
+        ckpt_lib.restore(str(tmp_path), 1,
+                         {"w": jax.ShapeDtypeStruct((4,), jnp.float32),
+                          "extra": jax.ShapeDtypeStruct((1,), jnp.float32)})

@@ -19,8 +19,10 @@ from repro.launch.mesh import PEAK_BF16_FLOPS, PEAK_INT8_OPS
 from .common import emit, phi_matrix, time_fn
 
 
-def run(n: int = 256):
+def run(n: int | None = None, quick: bool = False):
     rng = np.random.default_rng(2)
+    if n is None:
+        n = 64 if quick else 256     # quick sets the default; -n wins
     a = jnp.asarray(phi_matrix(rng, n, n, 1.0))
     b = jnp.asarray(phi_matrix(rng, n, n, 1.0))
     flop = 2.0 * n ** 3
@@ -30,7 +32,7 @@ def run(n: int = 256):
          f"int8_over_bf16={PEAK_INT8_OPS / PEAK_BF16_FLOPS:.1f}x")
 
     # --- Fig. 8 top: wall-clock throughput (CPU indicative)
-    for s in (9, 11, 13):
+    for s in (9,) if quick else (9, 11, 13):
         cfg = OzakiConfig(num_splits=s)
         us = time_fn(lambda c=cfg: ozaki_matmul(a, b, c))
         emit(f"fig8/INT8x{s}/n={n}", us, f"gflops={flop / us / 1e3:.2f}")
@@ -67,4 +69,16 @@ def run(n: int = 256):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small n, one split count (CI smoke run)")
+    ap.add_argument("-n", type=int, default=None,
+                    help="matrix size (overrides the --quick default)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(n=args.n, quick=args.quick)

@@ -1,0 +1,84 @@
+"""Fused-pipeline benchmark: pallas_fused vs xla Ozaki, plus HBM passes.
+
+The paper's Fig. 9 shows the split and accumulation stages — not the int8
+GEMMs — dominating the memory-bound cost of the scheme. The fused
+pipeline attacks exactly those: a one-pass SplitInt kernel (s slices per
+HBM read) and a fused scaled-accumulation kernel (convert + scale +
+compensated add in one VMEM pass). This benchmark reports
+
+  * wall-clock of both backends (CPU interpret mode — indicative only;
+    the kernels lower to Mosaic unchanged on TPU),
+  * the modeled HBM round-trips per stage (``core.tuning.hbm_pass_model``)
+    — the deployable claim: 1-pass split and 3-pass accumulation groups
+    on the fused path vs s-pass / 5-pass on the XLA path,
+  * the batched broadcast-weights case through ``ozaki_matmul_batched``.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.ozimmu_gemm import BATCHED_CONFIG, CONFIG
+from repro.core.ozaki import OzakiConfig, ozaki_matmul, ozaki_matmul_batched
+from repro.core.tuning import hbm_pass_model, select_plan
+
+from .common import emit, phi_matrix, time_fn
+
+
+def run(n: int = 128, num_splits: int | None = None, quick: bool = False):
+    rng = np.random.default_rng(7)
+    num_splits = CONFIG.num_splits if num_splits is None else num_splits
+    if quick:
+        n, num_splits = 64, 5
+    a = jnp.asarray(phi_matrix(rng, n, n, 1.0))
+    b = jnp.asarray(phi_matrix(rng, n, n, 1.0))
+
+    plan = (select_plan(n, n, n, num_splits=num_splits) if CONFIG.autotune
+            else None)
+    cfgs = {
+        "xla": OzakiConfig(num_splits=num_splits, backend="xla"),
+        CONFIG.backend: OzakiConfig(num_splits=num_splits,
+                                    backend=CONFIG.backend, tile=plan),
+    }
+    outs = {}
+    for name, cfg in cfgs.items():
+        us = time_fn(lambda c=cfg: ozaki_matmul(a, b, c))
+        outs[name] = np.asarray(ozaki_matmul(a, b, cfgs[name]))
+        passes = hbm_pass_model(num_splits, fused=(name == "pallas_fused"))
+        emit(f"fused_pipeline/{name}/n={n}", us,
+             f"hbm_passes_split={passes['split']};"
+             f"hbm_passes_accum={passes['accum']};"
+             f"hbm_passes_total={passes['total']}")
+    bitwise = np.array_equal(outs["xla"], outs[CONFIG.backend])
+    px = hbm_pass_model(num_splits, fused=False)
+    pf = hbm_pass_model(num_splits, fused=True)
+    assert pf["total"] < px["total"], (pf, px)
+    emit("fused_pipeline/parity", 0.0,
+         f"bitwise_equal={bitwise};"
+         f"pass_reduction={px['total'] / pf['total']:.2f}x")
+
+    # batched serving case (BATCHED_CONFIG shape, CPU-scaled): the
+    # (B, m, k) @ (k, n) broadcast-weights route of ozaki_matmul_batched.
+    scale = 16 if quick else 4
+    bsz = max(2, BATCHED_CONFIG.batch // scale)
+    m = max(8, BATCHED_CONFIG.m // scale)
+    ab = jnp.asarray(
+        np.stack([phi_matrix(rng, m, n, 1.0) for _ in range(bsz)]))
+    cfg = OzakiConfig(num_splits=BATCHED_CONFIG.num_splits,
+                      backend=BATCHED_CONFIG.backend)
+    us = time_fn(lambda: ozaki_matmul_batched(ab, b, cfg))
+    emit(f"fused_pipeline/batched/b={bsz}/m={m}/n={n}", us,
+         f"broadcast_weights=1;gflops="
+         f"{2.0 * bsz * m * n * n / us / 1e3:.2f}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes, few splits (CI smoke run)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=args.quick)

@@ -1,0 +1,15 @@
+"""ozJAX — DGEMM on integer matrix multiplication units, in JAX/Pallas.
+
+Package-wide numerics policy, applied before any RNG or kernel runs:
+
+* partitionable threefry — sharded parameter init must draw the SAME
+  numbers as single-device init. The non-partitionable generator (the
+  default on older jax) re-derives bits from output positions per shard,
+  so a (4, 2)-sharded weight would be initialized differently than the
+  replicated reference. Setting it here (the package root) rather than
+  in one module keeps the stream independent of import order: every
+  ``repro.*`` import passes through this file first.
+"""
+import jax
+
+jax.config.update("jax_threefry_partitionable", True)

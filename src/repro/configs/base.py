@@ -72,6 +72,7 @@ class ArchConfig:
     # --- numerics / the paper's knob ------------------------------------
     matmul_precision: str = "bf16"  # bf16 | int8_quant | ozaki_fp64
     ozaki_splits: int = 9
+    ozaki_backend: str = "xla"      # xla | pallas | pallas_fused
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
     accum_dtype: str = "float32"    # matmul partial sums; bf16 halves the
@@ -92,6 +93,7 @@ class ArchConfig:
             object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
         assert self.family in ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
         assert self.matmul_precision in ("bf16", "int8_quant", "ozaki_fp64")
+        assert self.ozaki_backend in ("xla", "pallas", "pallas_fused")
 
     @property
     def attention_free(self) -> bool:

@@ -3,6 +3,14 @@
 Not an assigned LM architecture; this config drives the paper's own
 benchmarks (Fig. 5-9) and the paper-representative dry-run/hillclimb cell:
 a distributed Ozaki DGEMM C = A.B with k sharded across the mesh.
+
+``backend`` selects the pipeline implementation (see ``core.ozaki``):
+"xla" is the reference, "pallas_fused" the deployment path whose split
+and accumulation stages run as one-pass fused kernels; ``autotune``
+derives block shapes via ``core.tuning.select_plan``. Consumers:
+``benchmarks/bench_fused_pipeline.py`` (backend/accum/autotune and the
+``BATCHED_CONFIG`` serving shape, CPU-scaled) and the dry-run gemm cell
+(``launch/dryrun.py``: num_splits / fuse_diagonals / accum defaults).
 """
 import dataclasses
 
@@ -16,6 +24,24 @@ class GemmConfig:
     num_splits: int = 9
     fuse_diagonals: bool = True
     concat_k: bool = False
+    backend: str = "pallas_fused"   # xla | pallas | pallas_fused
+    accum: str = "df32"             # deployable accumulation (TPU: no f64)
+    autotune: bool = True           # derive blocks via core.tuning.select_plan
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedGemmConfig:
+    """Serving case: (batch, m, k) @ (k, n) with broadcast weights."""
+
+    name: str = "ozimmu-gemm-batched"
+    batch: int = 32
+    m: int = 128
+    n: int = 4096
+    k: int = 4096
+    num_splits: int = 9
+    backend: str = "pallas_fused"
+    accum: str = "df32"
 
 
 CONFIG = GemmConfig()
+BATCHED_CONFIG = BatchedGemmConfig()

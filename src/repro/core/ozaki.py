@@ -4,6 +4,23 @@
 matrix multiplications with int32 accumulation (the TPU MXU int8 path) plus
 a high-precision scaled accumulation of the slice products.
 
+The driver is a three-stage pipeline — split, slice GEMMs, accumulate —
+and each stage dispatches on ``OzakiConfig.backend``:
+
+  * ``xla``          — every stage as composite XLA ops (lax primitives).
+    The reference path: s-pass splitting, dot_general GEMMs, multi-op
+    accumulation.
+  * ``pallas``       — the int8 GEMMs run on the Pallas MXU kernel; split
+    and accumulation stay XLA ops.
+  * ``pallas_fused`` — the full fused pipeline: one-pass SplitInt kernel
+    (all s slices per HBM read), Pallas MXU GEMMs, and the fused scaled
+    accumulation kernel (int32→float convert + scale + compensated add in
+    one VMEM pass). This is the deployment path; the memory-bound split
+    and accumulate stages the paper's Fig. 9 profiles drop from s-pass /
+    5-pass to 1-pass / 3-pass (see ``core.tuning.hbm_pass_model``).
+    Results are bitwise identical to ``xla`` for both accumulation modes
+    (the kernels run the same rounding sequences).
+
 Accumulation modes:
   * ``accum="f64"``  — the paper's mode (CPU validation; x64 required).
   * ``accum="df32"`` — double-float32 accumulation, deployable on TPU
@@ -19,19 +36,37 @@ Scheduling modes (see DESIGN.md §4):
     alpha (handled by ``compute_alpha(..., fuse_terms=...)``).
   * ``concat_k`` (O2): realizes each anti-diagonal sum as ONE int8 GEMM
     over a k-concatenated operand pair — fewer, larger MXU launches.
+
+Batched entry point: ``ozaki_matmul_batched`` handles ``(B, m, k) @
+(B, k, n)`` stacks and the serving case ``(B, m, k) @ (k, n)`` (broadcast
+weights). Broadcast weights collapse the batch into rows — one big GEMM,
+bitwise identical to a Python loop over ``ozaki_matmul`` because every
+per-row quantity (exponent, slices, accumulation) is row-independent.
+Fully-batched operands go through ``jax.vmap`` over the pipeline (all
+three Pallas kernels are vmap-compatible; the batch becomes a leading
+grid dimension). Gradients are defined via ``jax.custom_jvp`` with the
+exact-product rule ``dC = dA·B + A·dB`` — correct because the scheme is
+an error-free rewrite of the true product, not a lossy quantizer.
+
+Block shapes and split counts for the Pallas paths come from
+``OzakiConfig.tile`` (a ``core.tuning.TilePlan``); ``tile=None`` uses the
+kernels' MXU-aligned defaults.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from .splitting import (SplitResult, compute_alpha, slice_width, split_int,
+from .splitting import (SplitResult, row_exponents, slice_width, split_int,
                         split_int_dw)
-from .xmath import DW, dw_add, dw_normalize, fast_two_sum
+from .tuning import TilePlan
+from .xmath import DW, dw_add, dw_normalize, dw_to_single
+
+BACKENDS = ("xla", "pallas", "pallas_fused")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,12 +75,14 @@ class OzakiConfig:
 
     num_splits: s in the paper (INT8x{s}).
     accum: "f64" | "df32".
-    backend: "xla" (lax.dot_general) | "pallas" (MXU kernel).
+    backend: "xla" (lax ops) | "pallas" (MXU GEMM kernel only) |
+        "pallas_fused" (full split/GEMM/accumulate kernel pipeline).
     fuse_diagonals: O1 — exact int32 pre-accumulation per anti-diagonal.
     concat_k: O2 — one GEMM per anti-diagonal via k-concatenation.
     full_pairs: compute all s*s pairs (paper computes i+j <= s+1 only).
     ell_acc / ell_in: accumulator / input mantissa widths (Table 2).
     interpret: run Pallas kernels in interpret mode (CPU validation).
+    tile: optional TilePlan with per-stage block shapes (core.tuning).
     """
 
     num_splits: int = 9
@@ -57,6 +94,7 @@ class OzakiConfig:
     ell_acc: int = 31
     ell_in: int = 7
     interpret: bool = True
+    tile: Optional[TilePlan] = None
 
     def width_for(self, k: int) -> int:
         fuse_terms = self.max_fuse_terms if (self.fuse_diagonals or
@@ -86,7 +124,38 @@ class OzakiConfig:
 
 
 # ----------------------------------------------------------------------------
-# int8 GEMM backends: (m,k) int8 x (n,k) int8 -> (m,n) int32, contract on k
+# Stage 1 — split: f64/df32 matrix -> (s, m, k) int8 slices + row exponents
+# ----------------------------------------------------------------------------
+
+def _split_stage(m: jax.Array, cfg: OzakiConfig, w: int) -> SplitResult:
+    """Split a single-word float matrix (rows share the exponent)."""
+    if cfg.backend != "pallas_fused":
+        return split_int(m, cfg.num_splits, w)
+    from repro.kernels import fused_split_dw
+    exp = row_exponents(m)
+    kw = {} if cfg.tile is None else {"bm": cfg.tile.split_bm,
+                                      "bk": cfg.tile.split_bk}
+    slices = fused_split_dw(m, jnp.zeros_like(m), exp,
+                            num_splits=cfg.num_splits, w=w,
+                            interpret=cfg.interpret, **kw)
+    return SplitResult(slices, exp, w)
+
+
+def _split_stage_dw(m: DW, cfg: OzakiConfig, w: int) -> SplitResult:
+    """Split a double-word (df32) matrix."""
+    if cfg.backend != "pallas_fused":
+        return split_int_dw(m, cfg.num_splits, w)
+    from repro.kernels import fused_split_dw
+    exp = row_exponents(m.hi)
+    kw = {} if cfg.tile is None else {"bm": cfg.tile.split_bm,
+                                      "bk": cfg.tile.split_bk}
+    slices = fused_split_dw(m.hi, m.lo, exp, num_splits=cfg.num_splits,
+                            w=w, interpret=cfg.interpret, **kw)
+    return SplitResult(slices, exp, w)
+
+
+# ----------------------------------------------------------------------------
+# Stage 2 — int8 GEMMs: (m,k) int8 x (n,k) int8 -> (m,n) int32, contract on k
 # ----------------------------------------------------------------------------
 
 def _gemm_xla(a8: jax.Array, bt8: jax.Array) -> jax.Array:
@@ -96,28 +165,17 @@ def _gemm_xla(a8: jax.Array, bt8: jax.Array) -> jax.Array:
 
 
 def _get_gemm(cfg: OzakiConfig) -> Callable[[jax.Array, jax.Array], jax.Array]:
-    if cfg.backend == "pallas":
+    if cfg.backend in ("pallas", "pallas_fused"):
         from repro.kernels import int8_gemm
-        return functools.partial(int8_gemm.int8_matmul_nt,
-                                 interpret=cfg.interpret)
+        kw = {"interpret": cfg.interpret}
+        if cfg.tile is not None:
+            kw.update(bm=cfg.tile.bm, bn=cfg.tile.bn, bk=cfg.tile.bk)
+        return functools.partial(int8_gemm.int8_matmul_nt, **kw)
+    if cfg.backend != "xla":
+        raise ValueError(f"unknown backend {cfg.backend!r}; "
+                         f"expected one of {BACKENDS}")
     return _gemm_xla
 
-
-# ----------------------------------------------------------------------------
-# int32 -> df32 exact conversion (no int64 anywhere: TPU/x32 safe)
-# ----------------------------------------------------------------------------
-
-def int32_to_dw(p: jax.Array) -> DW:
-    low = jnp.bitwise_and(p, jnp.int32(0xFFFF))        # [0, 65535]
-    high = p - low                                      # multiple of 2^16
-    hi_f = high.astype(jnp.float32)                     # <= 15 sig bits: exact
-    lo_f = low.astype(jnp.float32)                      # <= 16 sig bits: exact
-    return dw_normalize(hi_f, lo_f)
-
-
-# ----------------------------------------------------------------------------
-# Core driver
-# ----------------------------------------------------------------------------
 
 def _pair_products(sa: SplitResult, sb: SplitResult, cfg: OzakiConfig,
                    gemm) -> list[tuple[int, jax.Array]]:
@@ -141,17 +199,37 @@ def _pair_products(sa: SplitResult, sb: SplitResult, cfg: OzakiConfig,
     return out
 
 
+# ----------------------------------------------------------------------------
+# int32 -> df32 exact conversion (no int64 anywhere: TPU/x32 safe)
+# ----------------------------------------------------------------------------
+
+def int32_to_dw(p: jax.Array) -> DW:
+    low = jnp.bitwise_and(p, jnp.int32(0xFFFF))        # [0, 65535]
+    high = p - low                                      # multiple of 2^16
+    hi_f = high.astype(jnp.float32)                     # <= 15 sig bits: exact
+    lo_f = low.astype(jnp.float32)                      # <= 16 sig bits: exact
+    return dw_normalize(hi_f, lo_f)
+
+
+# ----------------------------------------------------------------------------
+# Stage 3 — high-precision scaled accumulation (line 7 of Alg. 3)
+# ----------------------------------------------------------------------------
+
+def _ordered(products):
+    return sorted(products, key=lambda tp: -tp[0])      # small terms first
+
+
 def _accum_f64(products, sa, sb, w, shape):
     c = jnp.zeros(shape, jnp.float64)
     e_base = sa.exp[:, None].astype(jnp.int32) + sb.exp[None, :].astype(jnp.int32)
-    for t, p_t in sorted(products, key=lambda tp: -tp[0]):  # small terms first
+    for t, p_t in _ordered(products):
         c = c + jnp.ldexp(p_t.astype(jnp.float64), e_base - (t + 2) * w)
     return c
 
 
 def _accum_df32(products, sa, sb, w, shape) -> DW:
     acc = DW(jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32))
-    for t, p_t in sorted(products, key=lambda tp: -tp[0]):
+    for t, p_t in _ordered(products):
         scale = jnp.float32(2.0 ** (-(t + 2) * w))      # exact power of two
         term = int32_to_dw(p_t)
         acc = dw_add(acc, DW(term.hi * scale, term.lo * scale))
@@ -161,6 +239,56 @@ def _accum_df32(products, sa, sb, w, shape) -> DW:
     return DW(hi, lo)
 
 
+def _accum_fused_f64(products, sa, sb, w, shape, cfg):
+    """Fused-kernel f64 accumulation — bitwise equal to ``_accum_f64``.
+
+    The deferred per-element exponent is exact (power-of-two scaling
+    commutes with rounding), so accumulating against the scalar
+    ``2^{-(t+2)w}`` and applying ``ldexp(·, e_A + e_B)`` once reproduces
+    the reference sum bit for bit.
+    """
+    from repro.kernels import accum_scaled_sw
+    kw = {"interpret": cfg.interpret}
+    if cfg.tile is not None:
+        kw.update(bm=cfg.tile.accum_bm, bn=cfg.tile.accum_bn)
+    c = jnp.zeros(shape, jnp.float64)
+    for t, p_t in _ordered(products):
+        c = accum_scaled_sw(p_t, c, scale=2.0 ** (-(t + 2) * w), **kw)
+    e_base = sa.exp[:, None].astype(jnp.int32) + sb.exp[None, :].astype(jnp.int32)
+    return jnp.ldexp(c, e_base)
+
+
+def _accum_fused_df32(products, sa, sb, w, shape, cfg) -> DW:
+    """Fused-kernel df32 accumulation — bitwise equal to ``_accum_df32``."""
+    from repro.kernels import accum_scaled_dw
+    kw = {"interpret": cfg.interpret}
+    if cfg.tile is not None:
+        kw.update(bm=cfg.tile.accum_bm, bn=cfg.tile.accum_bn)
+    c_hi = jnp.zeros(shape, jnp.float32)
+    c_lo = jnp.zeros(shape, jnp.float32)
+    for t, p_t in _ordered(products):
+        c_hi, c_lo = accum_scaled_dw(p_t, c_hi, c_lo,
+                                     scale=2.0 ** (-(t + 2) * w), **kw)
+    e_base = sa.exp[:, None] + sb.exp[None, :]
+    return DW(jnp.ldexp(c_hi, e_base), jnp.ldexp(c_lo, e_base))
+
+
+def _accum_stage(products, sa, sb, w, shape, cfg: OzakiConfig):
+    """Dispatch the accumulation stage; returns f64 array or DW."""
+    fused = cfg.backend == "pallas_fused"
+    if cfg.accum == "f64":
+        if fused:
+            return _accum_fused_f64(products, sa, sb, w, shape, cfg)
+        return _accum_f64(products, sa, sb, w, shape)
+    if fused:
+        return _accum_fused_df32(products, sa, sb, w, shape, cfg)
+    return _accum_df32(products, sa, sb, w, shape)
+
+
+# ----------------------------------------------------------------------------
+# Core drivers
+# ----------------------------------------------------------------------------
+
 def ozaki_matmul(a: jax.Array, b: jax.Array,
                  cfg: OzakiConfig = OzakiConfig()) -> jax.Array:
     """FP64-accurate C = A @ B via int8 GEMMs. A: (m, k) f64, B: (k, n) f64."""
@@ -169,14 +297,14 @@ def ozaki_matmul(a: jax.Array, b: jax.Array,
                         "the TPU df32 path")
     k = a.shape[1]
     w = cfg.width_for(k)
-    sa = split_int(a, cfg.num_splits, w)
-    sb = split_int(b.T, cfg.num_splits, w)
+    sa = _split_stage(a, cfg, w)
+    sb = _split_stage(b.T, cfg, w)
     gemm = _get_gemm(cfg)
     products = _pair_products(sa, sb, cfg, gemm)
+    out = _accum_stage(products, sa, sb, w, (a.shape[0], b.shape[1]), cfg)
     if cfg.accum == "f64":
-        return _accum_f64(products, sa, sb, w, (a.shape[0], b.shape[1]))
-    dw = _accum_df32(products, sa, sb, w, (a.shape[0], b.shape[1]))
-    return dw.hi.astype(jnp.float64) + dw.lo.astype(jnp.float64)
+        return out
+    return out.hi.astype(jnp.float64) + out.lo.astype(jnp.float64)
 
 
 def ozaki_matmul_dw(a: DW, b_t: DW, cfg: OzakiConfig = OzakiConfig()) -> DW:
@@ -186,15 +314,78 @@ def ozaki_matmul_dw(a: DW, b_t: DW, cfg: OzakiConfig = OzakiConfig()) -> DW:
     FP64 units. The number of splits should satisfy
     (num_splits + 1) * w <= 120 so all scales stay in f32 normal range.
     """
+    if cfg.accum != "df32":
+        cfg = dataclasses.replace(cfg, accum="df32")   # dw path IS df32
     k = a.shape[1]
     w = cfg.width_for(k)
     if (cfg.num_splits + 1) * w > 120:
         raise ValueError("split schedule underflows f32 scale range")
-    sa = split_int_dw(a, cfg.num_splits, w)
-    sb = split_int_dw(b_t, cfg.num_splits, w)
+    sa = _split_stage_dw(a, cfg, w)
+    sb = _split_stage_dw(b_t, cfg, w)
     gemm = _get_gemm(cfg)
     products = _pair_products(sa, sb, cfg, gemm)
-    return _accum_df32(products, sa, sb, w, (a.shape[0], b_t.shape[0]))
+    return _accum_stage(products, sa, sb, w, (a.shape[0], b_t.shape[0]), cfg)
+
+
+# ----------------------------------------------------------------------------
+# Batched API: (B, m, k) @ (B, k, n), or (B, m, k) @ (k, n) broadcast weights
+# ----------------------------------------------------------------------------
+
+def _matmul_any(a: jax.Array, b: jax.Array, cfg: OzakiConfig) -> jax.Array:
+    """Unbatched dispatch on input dtype: f64 paper path or f32 dw path."""
+    if a.dtype == jnp.float64:
+        return ozaki_matmul(a, b, cfg)
+    out = ozaki_matmul_dw(DW(a, jnp.zeros_like(a)),
+                          DW(b.T, jnp.zeros_like(b.T)), cfg)
+    return dw_to_single(out)
+
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(2,))
+def _batched_core(a: jax.Array, b: jax.Array, cfg: OzakiConfig) -> jax.Array:
+    if b.ndim == 2:
+        # Broadcast weights: fold the batch into rows. Exact — exponents,
+        # slices and accumulation are all row-independent, so this equals
+        # a loop over ``ozaki_matmul`` bitwise (and is one big MXU GEMM).
+        bsz, m, k = a.shape
+        out = _matmul_any(a.reshape(bsz * m, k), b, cfg)
+        return out.reshape(bsz, m, b.shape[1])
+    return jax.vmap(lambda x, y: _matmul_any(x, y, cfg))(a, b)
+
+
+@_batched_core.defjvp
+def _batched_core_jvp(cfg, primals, tangents):
+    a, b = primals
+    da, db = tangents
+    primal = _batched_core(a, b, cfg)
+    # The scheme reproduces the exact product, so the product rule applies
+    # verbatim. Tangents run on the plain matmul (they need only the
+    # working precision of the inputs, not the emulated one).
+    tangent = (jnp.matmul(da, b, preferred_element_type=a.dtype) +
+               jnp.matmul(a, db, preferred_element_type=a.dtype))
+    return primal, tangent.astype(primal.dtype)
+
+
+def ozaki_matmul_batched(a: jax.Array, b: jax.Array,
+                         cfg: OzakiConfig = OzakiConfig()) -> jax.Array:
+    """Batched Ozaki GEMM: ``C[i] = A[i] @ B[i]`` (or shared ``B``).
+
+    a: (B, m, k); b: (B, k, n), or (k, n) to broadcast one weight matrix
+    over the batch (the serving case). f64 inputs follow ``cfg.accum``;
+    f32 inputs run the TPU-native df32 pipeline and return f32. The
+    result is differentiable (exact-product JVP) and jit-stable — pass
+    ``cfg`` statically when jitting.
+    """
+    if a.ndim != 3:
+        raise ValueError(f"a must be (batch, m, k), got {a.shape}")
+    if b.ndim not in (2, 3):
+        raise ValueError(f"b must be (k, n) or (batch, k, n), got {b.shape}")
+    if b.ndim == 3 and a.shape[0] != b.shape[0]:
+        raise ValueError(f"batch mismatch: {a.shape} vs {b.shape}")
+    if a.shape[-1] != b.shape[-2]:
+        raise ValueError(f"contraction mismatch: {a.shape} vs {b.shape}")
+    if a.dtype != b.dtype:
+        raise TypeError(f"dtype mismatch: {a.dtype} vs {b.dtype}")
+    return _batched_core(a, b, cfg)
 
 
 # ----------------------------------------------------------------------------
@@ -219,28 +410,31 @@ def ozaki_matmul_complex(a: jax.Array, b: jax.Array,
 
     def real_mm(x_split, y_split, shape):
         products = _pair_products(x_split, y_split, cfg, gemm)
+        out = _accum_stage(products, x_split, y_split, w, shape, cfg)
         if cfg.accum == "f64":
-            return _accum_f64(products, x_split, y_split, w, shape)
-        dw = _accum_df32(products, x_split, y_split, w, shape)
-        return dw.hi.astype(jnp.float64) + dw.lo.astype(jnp.float64)
+            return out
+        return out.hi.astype(jnp.float64) + out.lo.astype(jnp.float64)
+
+    def split(x):
+        return _split_stage(x, cfg, w)
 
     shape = (a.shape[0], b.shape[1])
     if algo == "3mul":
-        s_ar = split_int(ar, cfg.num_splits, w)
-        s_ai = split_int(ai, cfg.num_splits, w)
-        s_as = split_int(ar + ai, cfg.num_splits, w)
-        s_br = split_int(br.T, cfg.num_splits, w)
-        s_bi = split_int(bi.T, cfg.num_splits, w)
-        s_bs = split_int((br + bi).T, cfg.num_splits, w)
+        s_ar = split(ar)
+        s_ai = split(ai)
+        s_as = split(ar + ai)
+        s_br = split(br.T)
+        s_bi = split(bi.T)
+        s_bs = split((br + bi).T)
         p1 = real_mm(s_ar, s_br, shape)
         p2 = real_mm(s_ai, s_bi, shape)
         p3 = real_mm(s_as, s_bs, shape)
         return jax.lax.complex(p1 - p2, p3 - p1 - p2)
 
-    s_ar = split_int(ar, cfg.num_splits, w)
-    s_ai = split_int(ai, cfg.num_splits, w)
-    s_br = split_int(br.T, cfg.num_splits, w)
-    s_bi = split_int(bi.T, cfg.num_splits, w)
+    s_ar = split(ar)
+    s_ai = split(ai)
+    s_br = split(br.T)
+    s_bi = split(bi.T)
     c_r = real_mm(s_ar, s_br, shape) - real_mm(s_ai, s_bi, shape)
     c_i = real_mm(s_ar, s_bi, shape) + real_mm(s_ai, s_br, shape)
     return jax.lax.complex(c_r, c_i)

@@ -1,0 +1,160 @@
+"""Tile/schedule selection for the Ozaki pipeline (fused-backend planner).
+
+Given operand shapes, this module picks (a) the number of splits from the
+analytic model in ``core.analytic`` and (b) Pallas block shapes for the
+three pipeline stages, so callers never hand-tune kernel launches.
+
+Heuristics (kept deliberately closed-form — no autotuning searches):
+
+* **num_splits** — the smallest ``s`` with ``s * BPS(k) >= mantissa_space``
+  (Eq. 5 / Table 2): the paper's INT8xs operating point for a target
+  mantissa-space length (70 bits for the DGEMM-replacement mode). Callers
+  wanting data-dependent selection use ``core.auto_split`` instead; this
+  planner is shape-only so it can run before the operands exist.
+* **GEMM blocks (bm, bn, bk)** — largest power-of-two, MXU-aligned tiles
+  whose working set ``bm*bk + bn*bk (int8) + 4*bm*bn (int32)`` fits the
+  VMEM budget (default: half of 16 MiB, leaving room for double
+  buffering). Under pressure the reduction slab ``bk`` halves first (it
+  shrinks BOTH int8 operand tiles at once and only lengthens the inner
+  k loop), then ``bm``, then ``bn`` down to their alignment floors.
+* **split blocks** — the split kernel's output block is ``num_splits``
+  times its input tile, so the input tile is sized from
+  ``(num_splits + 8) * split_bm * split_bk <= budget`` (8 ~= two float32
+  input blocks at 4 bytes each per int8 output element).
+* **accum blocks** — elementwise kernel; the largest aligned tile for the
+  (m, n) output with 4 arrays resident (p, c_hi, c_lo, + headroom).
+* **schedule** — ``fuse_diagonals`` always (the int32 pre-accumulation is
+  exact, strictly fewer high-precision accumulations);``concat_k`` when
+  the per-GEMM reduction is short (k <= CONCAT_K_MAX) so that one big
+  MXU launch amortizes what would otherwise be launch-bound slice GEMMs.
+
+``apply_plan`` folds a plan back into an ``OzakiConfig`` without importing
+it (plain ``dataclasses.replace``), keeping this module import-cycle-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+# alignment vocabulary is owned by the kernels' shared launch layer, so
+# the planner's choices match shrink_block's exactly (repro.core imports
+# repro.kernels.launch only — the kernels themselves import repro.core
+# lazily, so there is no cycle).
+from repro.kernels.launch import (LANE, SUBLANE_F32 as SUBLANE, SUBLANE_I8,
+                                  align_up as _align_up)
+
+from .analytic import DGEMM_MANTISSA_SPACE, INT8_INT32, MMUSpec
+
+VMEM_BYTES = 16 * 2 ** 20
+VMEM_BUDGET = VMEM_BYTES // 2      # leave half for double buffering
+CONCAT_K_MAX = 2048                 # below this, slice GEMMs are launch-bound
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """Block shapes + schedule for one fused-pipeline launch (hashable)."""
+
+    bm: int = 256                   # int8 GEMM output rows per block
+    bn: int = 256                   # int8 GEMM output cols per block
+    bk: int = 512                   # int8 GEMM reduction slab
+    split_bm: int = 256             # split kernel input tile rows
+    split_bk: int = 256             # split kernel input tile cols
+    accum_bm: int = 256             # accumulation tile rows
+    accum_bn: int = 256             # accumulation tile cols
+    num_splits: int = 9
+    fuse_diagonals: bool = True
+    concat_k: bool = False
+
+
+def _pow2_at_most(x: int, lo: int) -> int:
+    """Largest power of two <= x, floored at ``lo``."""
+    if x <= lo:
+        return lo
+    return 2 ** int(math.floor(math.log2(x)))
+
+
+def select_num_splits(k: int, *, mantissa_space: int = DGEMM_MANTISSA_SPACE,
+                      mmu: MMUSpec = INT8_INT32) -> int:
+    """Paper operating point: ceil(mantissa_space / BPS(k))."""
+    return mmu.num_splits(k, mantissa_space)
+
+
+def select_plan(m: int, n: int, k: int, *, batch: int = 1,
+                num_splits: int | None = None,
+                mantissa_space: int = DGEMM_MANTISSA_SPACE,
+                mmu: MMUSpec = INT8_INT32,
+                vmem_budget: int = VMEM_BUDGET) -> TilePlan:
+    """Pick block shapes and split count from operand shapes alone.
+
+    ``batch`` scales nothing directly (the batch is a grid dimension, not
+    a VMEM resident), but a multi-row batch disables ``concat_k`` — the
+    concatenated operands would be materialized once per batch row.
+    """
+    if num_splits is None:
+        num_splits = select_num_splits(k, mantissa_space=mantissa_space,
+                                       mmu=mmu)
+
+    # --- GEMM blocks: shrink from the 256x256x512 MXU sweet spot.
+    # bm is an int8 A-tile sublane dim (32-aligned); bn doubles as the
+    # int32 C-tile lane dim, so the stricter 128 alignment applies.
+    bm = min(256, _pow2_at_most(_align_up(m, SUBLANE_I8), SUBLANE_I8))
+    bn = min(256, _pow2_at_most(_align_up(n, LANE), LANE))
+    bk = min(512, _pow2_at_most(_align_up(k, LANE), LANE))
+    while bm * bk + bn * bk + 4 * bm * bn > vmem_budget:
+        if bk > LANE:
+            bk //= 2
+        elif bm > SUBLANE_I8:
+            bm //= 2
+        elif bn > LANE:
+            bn //= 2
+        else:
+            break
+
+    # --- split blocks: output is num_splits x the (int8) input tile.
+    split_bm = min(256, _pow2_at_most(_align_up(m, SUBLANE_I8), SUBLANE_I8))
+    split_bk = min(256, _pow2_at_most(_align_up(k, LANE), LANE))
+    while (num_splits + 8) * split_bm * split_bk > vmem_budget and \
+            split_bk > LANE:
+        split_bk //= 2
+
+    # --- accum blocks: 4 f32/int32 arrays resident per tile.
+    accum_bm = min(256, _pow2_at_most(_align_up(m, SUBLANE), SUBLANE))
+    accum_bn = min(256, _pow2_at_most(_align_up(n, LANE), LANE))
+    while 16 * accum_bm * accum_bn > vmem_budget and accum_bn > LANE:
+        accum_bn //= 2
+
+    return TilePlan(bm=bm, bn=bn, bk=bk, split_bm=split_bm,
+                    split_bk=split_bk, accum_bm=accum_bm, accum_bn=accum_bn,
+                    num_splits=num_splits, fuse_diagonals=True,
+                    concat_k=(k <= CONCAT_K_MAX and batch == 1))
+
+
+def apply_plan(cfg, plan: TilePlan):
+    """Fold a TilePlan into an OzakiConfig (any dataclass with the fields)."""
+    return dataclasses.replace(cfg, num_splits=plan.num_splits,
+                               fuse_diagonals=plan.fuse_diagonals,
+                               concat_k=plan.concat_k, tile=plan)
+
+
+def hbm_pass_model(num_splits: int, *, fused: bool,
+                   fuse_diagonals: bool = True) -> dict:
+    """Modeled HBM round-trips per stage for one operand/output matrix.
+
+    Counts *array passes* (each read or write of a full matrix-sized
+    buffer), the quantity the paper's Fig. 9 shows dominating the split
+    and accumulation stages:
+
+    * split — Algorithm 4 re-reads the residual every iteration
+      (``s`` passes) while the one-pass kernel reads the input once.
+    * accum — the unfused path materializes the int32->float conversion
+      and the scaled term before the compensated add (2 extra passes per
+      accumulation group); the fused kernel does conversion + scale +
+      add in registers within one VMEM pass.
+    """
+    s = num_splits
+    groups = s if fuse_diagonals else s * (s + 1) // 2
+    split_passes = 1 if fused else s
+    # per group: read P + read/write C(hi,lo); unfused adds temp traffic
+    accum_passes = groups * (3 if fused else 5)
+    return {"split": split_passes, "accum": accum_passes,
+            "total": split_passes + accum_passes}

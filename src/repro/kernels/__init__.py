@@ -4,14 +4,20 @@ The paper's hot path is (a) the int8 slice GEMMs (its cuBLAS GemmEx call)
 and (b) the high-precision accumulation + the splitting stage it profiles
 in Fig. 9. One kernel each:
 
-  int8_gemm.py    — MXU int8xint8->int32 tiled GEMM (NT layout)
+  int8_gemm.py    — MXU int8xint8->int32 tiled GEMM (NT layout), plus a
+                    batch-grid variant for the batched Ozaki API
   ozaki_split.py  — fused one-pass SplitInt (s slices per HBM read)
-  ozaki_accum.py  — fused int32->df32 scaled compensated accumulation
+  ozaki_accum.py  — fused int32->float scaled accumulation (df32
+                    compensated, or single-word for the f64 oracle path)
 
-ops.py re-exports jit'd wrappers; ref.py holds the pure-jnp oracles.
+launch.py holds the shared launch-config layer (block alignment, padding,
+grid construction) all kernels go through; ops.py re-exports jit'd
+wrappers; ref.py holds the pure-jnp oracles.
 """
-from . import int8_gemm, ozaki_accum, ozaki_split, ref
-from .ops import accum_scaled_dw, fused_split_dw, int8_matmul_nt
+from . import int8_gemm, launch, ozaki_accum, ozaki_split, ref
+from .ops import (accum_scaled_dw, accum_scaled_sw, fused_split_dw,
+                  int8_matmul_nt, int8_matmul_nt_batched)
 
-__all__ = ["int8_gemm", "ozaki_accum", "ozaki_split", "ref",
-           "accum_scaled_dw", "fused_split_dw", "int8_matmul_nt"]
+__all__ = ["int8_gemm", "launch", "ozaki_accum", "ozaki_split", "ref",
+           "accum_scaled_dw", "accum_scaled_sw", "fused_split_dw",
+           "int8_matmul_nt", "int8_matmul_nt_batched"]

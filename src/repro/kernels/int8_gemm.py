@@ -11,6 +11,12 @@ accumulating in int32. Block shapes default to MXU-aligned 256x256x512:
   A tile 256x512 int8 = 128 KiB, B tile 256x512 int8 = 128 KiB,
   C tile 256x256 int32 = 256 KiB  ->  ~0.5 MiB VMEM of ~16 MiB.
 
+``int8_matmul_nt_batched`` adds a leading batch grid dimension — one
+kernel launch for a whole ``(B, m, k) x (B, n, k)`` stack (the batched
+Ozaki API's fully-batched case); the per-(batch, m, n) k-loop is
+unchanged. Launch bookkeeping (block shrink, padding, grid) comes from
+the shared ``launch`` layer.
+
 Validated on CPU in interpret mode against ``ref.int8_matmul_nt_ref``.
 """
 from __future__ import annotations
@@ -20,6 +26,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .launch import LANE, SUBLANE_I8, grid_for, pad_tail, shrink_block
 
 
 def _kernel(a_ref, b_ref, o_ref):
@@ -36,14 +44,6 @@ def _kernel(a_ref, b_ref, o_ref):
     o_ref[...] += prod
 
 
-def _pad_to(x: jax.Array, mult: tuple[int, int]) -> jax.Array:
-    pm = (-x.shape[0]) % mult[0]
-    pk = (-x.shape[1]) % mult[1]
-    if pm == 0 and pk == 0:
-        return x
-    return jnp.pad(x, ((0, pm), (0, pk)))
-
-
 @functools.partial(jax.jit,
                    static_argnames=("bm", "bn", "bk", "interpret"))
 def int8_matmul_nt(a: jax.Array, b_t: jax.Array, *, bm: int = 256,
@@ -54,13 +54,16 @@ def int8_matmul_nt(a: jax.Array, b_t: jax.Array, *, bm: int = 256,
     m, k = a.shape
     n, k2 = b_t.shape
     assert k == k2, (a.shape, b_t.shape)
-    bm_, bn_, bk_ = min(bm, _ceil_align(m)), min(bn, _ceil_align(n)), \
-        min(bk, _ceil_align(k, 128))
-    a_p = _pad_to(a, (bm_, bk_))
-    b_p = _pad_to(b_t, (bn_, bk_))
+    # bm: sublane of the int8 A tile (32); bn: sublane of the int8 B tile
+    # AND lane dim of the int32 C tile, so the stricter 128 applies.
+    bm_ = shrink_block(bm, m, SUBLANE_I8)
+    bn_ = shrink_block(bn, n, LANE)
+    bk_ = shrink_block(bk, k, LANE)
+    a_p = pad_tail(a, (bm_, bk_))
+    b_p = pad_tail(b_t, (bn_, bk_))
     mp, kp = a_p.shape
     np_, _ = b_p.shape
-    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    grid = grid_for((mp, np_, kp), (bm_, bn_, bk_))
     out = pl.pallas_call(
         _kernel,
         grid=grid,
@@ -75,6 +78,52 @@ def int8_matmul_nt(a: jax.Array, b_t: jax.Array, *, bm: int = 256,
     return out[:m, :n]
 
 
-def _ceil_align(x: int, align: int = 8) -> int:
-    """Smallest multiple of ``align`` >= x (shrinks blocks for tiny inputs)."""
-    return -(-x // align) * align
+def _kernel_batched(a_ref, b_ref, o_ref):
+    k_idx = pl.program_id(3)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    prod = jax.lax.dot_general(
+        a_ref[0], b_ref[0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    o_ref[...] += prod[None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def int8_matmul_nt_batched(a: jax.Array, b_t: jax.Array, *, bm: int = 256,
+                           bn: int = 256, bk: int = 512,
+                           interpret: bool = True) -> jax.Array:
+    """C[b] = A[b] @ B_t[b].T for every batch row, one kernel launch.
+
+    a: (B, m, k) int8, b_t: (B, n, k) int8 -> (B, m, n) int32. The batch
+    is the outermost grid dimension, so consecutive program instances
+    reuse the same (i, j, k) walk per batch row.
+    """
+    assert a.dtype == jnp.int8 and b_t.dtype == jnp.int8
+    B, m, k = a.shape
+    B2, n, k2 = b_t.shape
+    assert B == B2 and k == k2, (a.shape, b_t.shape)
+    bm_ = shrink_block(bm, m, SUBLANE_I8)
+    bn_ = shrink_block(bn, n, LANE)
+    bk_ = shrink_block(bk, k, LANE)
+    a_p = pad_tail(a, (bm_, bk_))
+    b_p = pad_tail(b_t, (bn_, bk_))
+    _, mp, kp = a_p.shape
+    _, np_, _ = b_p.shape
+    grid = (B,) + grid_for((mp, np_, kp), (bm_, bn_, bk_))
+    out = pl.pallas_call(
+        _kernel_batched,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm_, bk_), lambda b, i, j, kk: (b, i, kk)),
+            pl.BlockSpec((1, bn_, bk_), lambda b, i, j, kk: (b, j, kk)),
+        ],
+        out_specs=pl.BlockSpec((1, bm_, bn_), lambda b, i, j, kk: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, mp, np_), jnp.int32),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:, :m, :n]

@@ -1,0 +1,54 @@
+"""Shared launch-configuration layer for the Ozaki Pallas kernels.
+
+All three kernels (``int8_gemm``, ``ozaki_split``, ``ozaki_accum``) follow
+the same launch recipe: shrink the requested block to the (aligned) array
+extent, zero-pad the operands up to a whole number of blocks, launch a
+dense grid, and slice the padding back off. This module centralizes that
+recipe so the kernels agree on alignment rules; the tuning layer
+(``repro.core.tuning``) selects the block shapes themselves
+(``TilePlan``) that flow into these helpers.
+
+TPU tiling constraints (see the Pallas guide): the last dimension of a
+block should be a multiple of 128 lanes; the second-to-last a multiple of
+the dtype's sublane count (8 for f32, 32 for int8). In interpret mode any
+shape works, but keeping the compiled-mode constraints here means the same
+launch parameters lower to Mosaic unchanged.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128          # last-dim tile multiple (all dtypes)
+SUBLANE_F32 = 8     # second-to-last multiple, 4-byte dtypes
+SUBLANE_I8 = 32     # second-to-last multiple, 1-byte dtypes
+
+
+def align_up(x: int, align: int) -> int:
+    """Smallest multiple of ``align`` >= x."""
+    return -(-x // align) * align
+
+
+def shrink_block(requested: int, extent: int, align: int) -> int:
+    """Block actually launched: the request, capped at the aligned extent.
+
+    Tiny inputs get a single just-big-enough block instead of a padded
+    256-wide one (interpret-mode tests sweep shapes down to 7).
+    """
+    return min(requested, align_up(extent, align))
+
+
+def pad_tail(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    """Zero-pad the trailing ``len(mults)`` dims up to whole blocks."""
+    nd = len(mults)
+    pads = [(0, 0)] * (x.ndim - nd) + [
+        (0, (-d) % m) for d, m in zip(x.shape[-nd:], mults)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def grid_for(shape: tuple[int, ...], blocks: tuple[int, ...]) -> tuple[int, ...]:
+    """Dense grid over padded ``shape`` (must divide exactly)."""
+    assert all(d % b == 0 for d, b in zip(shape, blocks)), (shape, blocks)
+    return tuple(d // b for d, b in zip(shape, blocks))

@@ -8,10 +8,11 @@ from __future__ import annotations
 
 import jax
 
-from .int8_gemm import int8_matmul_nt
-from .ozaki_accum import accum_scaled_dw
+from .int8_gemm import int8_matmul_nt, int8_matmul_nt_batched
+from .ozaki_accum import accum_scaled_dw, accum_scaled_sw
 from .ozaki_split import fused_split_dw
 
 INTERPRET = jax.default_backend() != "tpu"
 
-__all__ = ["int8_matmul_nt", "fused_split_dw", "accum_scaled_dw", "INTERPRET"]
+__all__ = ["int8_matmul_nt", "int8_matmul_nt_batched", "fused_split_dw",
+           "accum_scaled_dw", "accum_scaled_sw", "INTERPRET"]

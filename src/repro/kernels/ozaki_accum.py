@@ -1,17 +1,25 @@
-"""Pallas TPU kernel: fused scaled accumulation of int32 slice products.
+"""Pallas TPU kernels: fused scaled accumulation of int32 slice products.
 
-Line 7 of Algorithm 3: ``C += C_tmp ⊙ (2^{-(i+j)α} · e_A · e_B^T)`` with C
-held in double-float32 (the TPU has no FP64 unit). Fusing the int32→df32
-conversion, the power-of-two scaling, and the compensated add into one
+Line 7 of Algorithm 3: ``C += C_tmp ⊙ (2^{-(i+j)α} · e_A · e_B^T)``. Fusing
+the int32→float conversion, the power-of-two scaling, and the add into one
 VMEM pass halves the HBM traffic of the accumulation stage — which the
 paper's Fig. 9 identifies as the second-largest cost of the whole scheme.
 
-The exponent application is deferred: products are accumulated against the
-scalar ``2^{-(t+2)w}`` only; the per-element ``e_A + e_B`` is applied once
-by the caller at the end (see ``core.ozaki._accum_df32``). This keeps the
+Two accumulator widths:
+
+  * ``accum_scaled_dw``  — C in double-float32 with a compensated add
+    (the TPU has no FP64 unit). 48 mantissa bits.
+  * ``accum_scaled_sw``  — C in one plain word (f64 on CPU validation
+    hosts). The add sequence is a single rounding, so the fused pipeline
+    stays bitwise identical to the XLA ``_accum_f64`` reference path
+    (power-of-two scaling commutes with rounding).
+
+The exponent application is deferred in both: products are accumulated
+against the scalar ``2^{-(t+2)w}`` only; the per-element ``e_A + e_B`` is
+applied once by the caller at the end (see ``core.ozaki``). This keeps the
 kernel's scale a compile-time scalar.
 
-In/out aliasing: C_hi / C_lo are donated and updated in place.
+In/out aliasing: the C operand(s) are donated and updated in place.
 """
 from __future__ import annotations
 
@@ -23,14 +31,22 @@ from jax.experimental import pallas as pl
 
 from repro.core.xmath import two_sum
 
+from .launch import LANE, SUBLANE_F32, grid_for, pad_tail, shrink_block
+
 
 def _accum_kernel(scale: float, p_ref, chi_ref, clo_ref, ohi_ref, olo_ref):
     p = p_ref[...]
-    # exact int32 -> df32 (16-bit split; no int64 anywhere)
+    # exact int32 -> df32 (16-bit split; no int64 anywhere), then
+    # normalize (fast_two_sum) so |lo| <= ulp(hi)/2 before the compensated
+    # add — skipping this costs ~3 decimal digits over a full scheme.
     low = jnp.bitwise_and(p, jnp.int32(0xFFFF))
     high = p - low
-    t_hi = high.astype(jnp.float32) * jnp.float32(scale)
-    t_lo = low.astype(jnp.float32) * jnp.float32(scale)
+    hi_f = high.astype(jnp.float32)
+    lo_f = low.astype(jnp.float32)
+    n_s = hi_f + lo_f
+    n_e = lo_f - (n_s - hi_f)
+    t_hi = n_s * jnp.float32(scale)
+    t_lo = n_e * jnp.float32(scale)
     # compensated (c_hi, c_lo) += (t_hi, t_lo)
     c_hi = chi_ref[...]
     c_lo = clo_ref[...]
@@ -46,24 +62,25 @@ def _accum_kernel(scale: float, p_ref, chi_ref, clo_ref, ohi_ref, olo_ref):
     olo_ref[...] = n_lo
 
 
+def _launch_blocks(m: int, n: int, bm: int, bn: int):
+    return shrink_block(bm, m, SUBLANE_F32), shrink_block(bn, n, LANE)
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "interpret"))
 def accum_scaled_dw(p: jax.Array, c_hi: jax.Array, c_lo: jax.Array, *,
                     scale: float, bm: int = 256, bn: int = 256,
                     interpret: bool = True) -> tuple[jax.Array, jax.Array]:
     """(c_hi, c_lo) += df32(p) * scale, elementwise, fused in VMEM."""
     m, n = p.shape
-    bm_ = min(bm, -(-m // 8) * 8)
-    bn_ = min(bn, -(-n // 128) * 128)
-    pm, pn = (-m) % bm_, (-n) % bn_
-    if pm or pn:
-        p = jnp.pad(p, ((0, pm), (0, pn)))
-        c_hi = jnp.pad(c_hi, ((0, pm), (0, pn)))
-        c_lo = jnp.pad(c_lo, ((0, pm), (0, pn)))
+    bm_, bn_ = _launch_blocks(m, n, bm, bn)
+    p = pad_tail(p, (bm_, bn_))
+    c_hi = pad_tail(c_hi, (bm_, bn_))
+    c_lo = pad_tail(c_lo, (bm_, bn_))
     mp, np_ = p.shape
     spec = pl.BlockSpec((bm_, bn_), lambda i, j: (i, j))
     o_hi, o_lo = pl.pallas_call(
         functools.partial(_accum_kernel, scale),
-        grid=(mp // bm_, np_ // bn_),
+        grid=grid_for((mp, np_), (bm_, bn_)),
         in_specs=[spec, spec, spec],
         out_specs=[spec, spec],
         out_shape=[jax.ShapeDtypeStruct((mp, np_), jnp.float32),
@@ -72,3 +89,37 @@ def accum_scaled_dw(p: jax.Array, c_hi: jax.Array, c_lo: jax.Array, *,
         interpret=interpret,
     )(p, c_hi, c_lo)
     return o_hi[:m, :n], o_lo[:m, :n]
+
+
+def _accum_sw_kernel(scale: float, p_ref, c_ref, o_ref):
+    c = c_ref[...]
+    # int32 -> f64 is exact; scale is an exact power of two: ONE rounding.
+    o_ref[...] = c + p_ref[...].astype(c.dtype) * jnp.asarray(scale, c.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "interpret"))
+def accum_scaled_sw(p: jax.Array, c: jax.Array, *, scale: float,
+                    bm: int = 256, bn: int = 256,
+                    interpret: bool = True) -> jax.Array:
+    """c += p * scale in c's (single-word) dtype, fused in VMEM.
+
+    Used by the ``pallas_fused`` pipeline when ``accum="f64"``: the single
+    rounded add per element matches the XLA reference accumulation
+    bitwise, because the deferred ``ldexp(·, e_A + e_B)`` is exact.
+    """
+    m, n = p.shape
+    bm_, bn_ = _launch_blocks(m, n, bm, bn)
+    p = pad_tail(p, (bm_, bn_))
+    c = pad_tail(c, (bm_, bn_))
+    mp, np_ = p.shape
+    spec = pl.BlockSpec((bm_, bn_), lambda i, j: (i, j))
+    out = pl.pallas_call(
+        functools.partial(_accum_sw_kernel, scale),
+        grid=grid_for((mp, np_), (bm_, bn_)),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), c.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(p, c)
+    return out[:m, :n]

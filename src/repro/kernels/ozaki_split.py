@@ -6,9 +6,14 @@ VMEM and emits all ``s`` int8 slices from registers, turning the split
 stage from ``s``-pass to 1-pass (the split stage is memory-bound; see the
 paper's Fig. 9 breakdown).
 
-Input is the TPU-native double-float32 pair (hi, lo) plus the precomputed
-per-row exponent vector. Output block is (s, bm, bk) int8 — for s = 13,
-bm = bk = 256 that is 852 KiB VMEM, well inside budget.
+Input is a double-word pair (hi, lo) plus the precomputed per-row exponent
+vector. The arithmetic is dtype-generic: the TPU deployment feeds the
+native df32 pair, while the FP64 entry point (``core.ozaki`` with
+``backend="pallas_fused"`` and f64 operands) passes ``(a, 0.0)`` — with a
+zero low word the two_sum chain degenerates to exactly Algorithm 4's
+sign-magnitude extraction, so the slices are bitwise identical to
+``core.splitting.split_int``. Output block is (s, bm, bk) int8 — for
+s = 13, bm = bk = 256 that is 852 KiB VMEM, well inside budget.
 
 Validated on CPU in interpret mode against ``repro.core.splitting``.
 """
@@ -22,6 +27,8 @@ from jax.experimental import pallas as pl
 
 from repro.core.xmath import two_sum
 
+from .launch import LANE, SUBLANE_I8, grid_for, pad_tail, shrink_block
+
 
 def _split_kernel(num_splits: int, w: int, hi_ref, lo_ref, exp_ref, out_ref):
     hi = hi_ref[...]
@@ -32,11 +39,11 @@ def _split_kernel(num_splits: int, w: int, hi_ref, lo_ref, exp_ref, out_ref):
     sign = jnp.where(neg, -1, 1).astype(jnp.int8)
     a_hi = jnp.where(neg, -hi, hi)
     a_lo = jnp.where(neg, -lo, lo)
-    # exp2 of an int-valued f32 is an exact power of two (normal range)
-    inv_scale = jnp.exp2(-exp[:, None].astype(jnp.float32))
-    r_hi = a_hi * inv_scale
-    r_lo = a_lo * inv_scale
-    scale = jnp.float32(2.0 ** w)
+    # ldexp is exact (XLA's exp2 is not, even at integer arguments); the
+    # scaled residual lands in [0, 1) like Algorithm 4 requires.
+    r_hi = jnp.ldexp(a_hi, -exp[:, None])
+    r_lo = jnp.ldexp(a_lo, -exp[:, None])
+    scale = jnp.asarray(2.0 ** w, hi.dtype)
 
     for p in range(num_splits):
         t = r_hi * scale
@@ -56,17 +63,16 @@ def fused_split_dw(hi: jax.Array, lo: jax.Array, exp: jax.Array, *,
                    interpret: bool = True) -> jax.Array:
     """All-slices-in-one-pass SplitInt. Returns (s, m, k) int8."""
     m, k = hi.shape
-    bm_ = min(bm, -(-m // 8) * 8)
-    bk_ = min(bk, -(-k // 128) * 128)
-    pm, pk = (-m) % bm_, (-k) % bk_
-    if pm or pk:
-        hi = jnp.pad(hi, ((0, pm), (0, pk)))
-        lo = jnp.pad(lo, ((0, pm), (0, pk)))
-        exp = jnp.pad(exp, (0, pm))
+    # bm is the second-to-last dim of the int8 OUTPUT block: 32-sublane.
+    bm_ = shrink_block(bm, m, SUBLANE_I8)
+    bk_ = shrink_block(bk, k, LANE)
+    hi = pad_tail(hi, (bm_, bk_))
+    lo = pad_tail(lo, (bm_, bk_))
+    exp = pad_tail(exp, (bm_,))
     mp, kp = hi.shape
     out = pl.pallas_call(
         functools.partial(_split_kernel, num_splits, w),
-        grid=(mp // bm_, kp // bk_),
+        grid=grid_for((mp, kp), (bm_, bk_)),
         in_specs=[
             pl.BlockSpec((bm_, bk_), lambda i, j: (i, j)),
             pl.BlockSpec((bm_, bk_), lambda i, j: (i, j)),

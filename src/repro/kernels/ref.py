@@ -10,13 +10,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.splitting import split_int_dw
-from repro.core.xmath import DW, dw_add
+from repro.core.xmath import DW, dw_add, dw_normalize
 
 
 def int8_matmul_nt_ref(a: jax.Array, b_t: jax.Array) -> jax.Array:
     """C[m,n] = sum_k A[m,k] * B_t[n,k], exact int32."""
     return jax.lax.dot_general(
         a, b_t, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def int8_matmul_nt_batched_ref(a: jax.Array, b_t: jax.Array) -> jax.Array:
+    """C[b,m,n] = sum_k A[b,m,k] * B_t[b,n,k], exact int32."""
+    return jax.lax.dot_general(
+        a, b_t, dimension_numbers=(((2,), (2,)), ((0,), (0,))),
         preferred_element_type=jnp.int32)
 
 
@@ -33,7 +40,13 @@ def accum_scaled_dw_ref(p: jax.Array, c_hi: jax.Array, c_lo: jax.Array, *,
                         scale: float) -> tuple[jax.Array, jax.Array]:
     low = jnp.bitwise_and(p, jnp.int32(0xFFFF))
     high = p - low
-    t_hi = high.astype(jnp.float32) * jnp.float32(scale)
-    t_lo = low.astype(jnp.float32) * jnp.float32(scale)
-    out = dw_add(DW(c_hi, c_lo), DW(t_hi, t_lo))
+    term = dw_normalize(high.astype(jnp.float32), low.astype(jnp.float32))
+    out = dw_add(DW(c_hi, c_lo),
+                 DW(term.hi * jnp.float32(scale),
+                    term.lo * jnp.float32(scale)))
     return out.hi, out.lo
+
+
+def accum_scaled_sw_ref(p: jax.Array, c: jax.Array, *,
+                        scale: float) -> jax.Array:
+    return c + p.astype(c.dtype) * jnp.asarray(scale, c.dtype)

@@ -189,11 +189,12 @@ def abstract_gemm_cell(shape_name: str, mesh, num_splits: int = 9,
     single-GPU GEMM scaled onto the pod grid). ``schedule`` / ``fuse`` /
     ``num_splits`` are the §Perf hillclimb knobs.
     """
+    from repro.configs.ozimmu_gemm import CONFIG as GEMM_CONFIG
     from repro.core.ozaki import OzakiConfig
     from repro.core.xmath import DW
     from repro.parallel.ozaki_shard import distributed_ozaki_matmul
     n = GEMM_SHAPES[shape_name]
-    cfg = OzakiConfig(num_splits=num_splits, accum="df32",
+    cfg = OzakiConfig(num_splits=num_splits, accum=GEMM_CONFIG.accum,
                       fuse_diagonals=fuse)
     fn = functools.partial(distributed_ozaki_matmul, mesh=mesh, cfg=cfg,
                            axis="model", m_axis="data", schedule=schedule)
@@ -329,12 +330,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         "grad_accum": grad_accum,
     }
     if arch == "ozimmu-gemm":
+        from repro.configs.ozimmu_gemm import CONFIG as GEMM_CONFIG
         gemm_opts = rules or {}
-        s = int(gemm_opts.get("splits", 9))
+        s = int(gemm_opts.get("splits", GEMM_CONFIG.num_splits))
         fn, args, donate, out_sh = abstract_gemm_cell(
             shape_name, mesh, num_splits=s,
             schedule=gemm_opts.get("schedule", "psum"),
-            fuse=bool(gemm_opts.get("fuse", True)))
+            fuse=bool(gemm_opts.get("fuse", GEMM_CONFIG.fuse_diagonals)))
         n = GEMM_SHAPES[shape_name]
         mf = 2.0 * n * n * n       # the FP64 GEMM being emulated
         record["model_flops_note"] = "2mnk of the emulated DGEMM"

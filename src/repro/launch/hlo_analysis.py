@@ -254,8 +254,10 @@ class HLOStats:
 
     @property
     def int_flops(self) -> float:
+        # any signed/unsigned integer operand dtype counts as IMMU work —
+        # including s32: XLA:CPU lowers an int8 dot as convert + s32 dot.
         return float(sum(v for k, v in self.dot_flops.items()
-                         if k in ("s8", "u8", "s4", "u4", "s16")))
+                         if k.startswith(("s", "u"))))
 
 
 def analyze(hlo: str) -> HLOStats:
@@ -280,6 +282,30 @@ def analyze(hlo: str) -> HLOStats:
                 o.opcode in ("dynamic-update-slice", "scatter")
                 for o in body.ops)
             return not has_dus
+        if op.opcode == "call":
+            # XLA:CPU wraps fused elementwise expressions in `call`s to
+            # parallel_* computations (thread-level parallelism). Treat a
+            # call whose body is elementwise/reduction-only as a fusion so
+            # softmax-style chains merge across the calls; calls hiding
+            # in-place updates or contractions keep their own traffic
+            # (including DUS/scatter nested inside a fusion in the body —
+            # e.g. a KV-cache update — which must keep the 2x-slice model).
+            called = dict(_called_comps(op.line))
+            body = comps.get(called.get("to_apply", ""))
+            if body is None:
+                return False
+            forbidden = ("dynamic-update-slice", "scatter", "dot",
+                         "convolution")
+            for o in body.ops:
+                if o.opcode in forbidden + ("while", "call"):
+                    return False
+                if o.opcode == "fusion":
+                    fused = comps.get(
+                        dict(_called_comps(o.line)).get("calls", ""))
+                    if fused is not None and any(
+                            oo.opcode in forbidden for oo in fused.ops):
+                        return False
+            return True
         return False
 
     def _comp_traffic(comp: Computation) -> float:
@@ -334,8 +360,10 @@ def analyze(hlo: str) -> HLOStats:
         for op in comp.ops:
             oc = op.opcode
             if oc in _NO_TRAFFIC or oc.endswith("-done") or \
-                    oc in ("while", "conditional", "call"):
+                    oc in ("while", "conditional"):
                 continue
+            if oc == "call" and not _is_fusable(op):
+                continue        # body walked with traffic accounting
             operands = [_shape_bytes(t) for t in _operand_types(op, comp)]
             res = _shape_bytes(op.result)
             g = find(op.name)
@@ -404,6 +432,8 @@ def analyze(hlo: str) -> HLOStats:
                     continue
                 if attr == "calls":                 # fusion body
                     walk(cn, mult, False)
+                elif attr == "to_apply" and oc == "call" and _is_fusable(op):
+                    walk(cn, mult, False)           # charged at the call site
                 elif attr in ("branch_computations", "to_apply"):
                     walk(cn, mult, traffic)
             if oc == "dot":

@@ -8,26 +8,40 @@ Single-pod mesh (16, 16) = ("data", "model"); multi-pod adds a leading
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                    # jax >= 0.5 has explicit axis types
+    from jax.sharding import AxisType
+except ImportError:                     # jax 0.4.x: meshes are Auto already
+    AxisType = None
 
 
-def _auto(n: int):
-    return (AxisType.Auto,) * n
+def _axis_kwargs(n: int) -> dict:
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n}
+
+
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the API supports them.
+
+    The single place the repo constructs meshes, so the jax-version
+    dance happens once (``axis_types`` only exists in newer jax).
+    """
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **_axis_kwargs(len(tuple(axes))))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh_compat(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1, pod: int = 0):
     """Small mesh over however many (CPU) devices the test session has."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=_auto(3))
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+        return make_mesh_compat((pod, data, model), ("pod", "data", "model"))
+    return make_mesh_compat((data, model), ("data", "model"))
 
 
 # TPU v5e hardware constants (per chip) — the roofline denominators.

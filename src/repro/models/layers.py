@@ -97,24 +97,34 @@ def _matmul_int8_quant(x, w):
     return acc.astype(jnp.float32) * xs * ws
 
 
-def _matmul_ozaki(x, w, num_splits: int):
+def _matmul_ozaki(x, w, num_splits: int, backend: str = "xla"):
     """The paper's path: FP64-accurate x @ w out of int8 MXU GEMMs.
 
-    x: (..., k) f32, w: (k, n) f32. Flattens leading dims, runs the df32
-    Ozaki matmul (deployable on TPU: {int8, int32, f32} only), returns f32
-    rounded from the df32 result.
+    x: (..., k) f32, w: (k, n) f32, deployable on TPU ({int8, int32, f32}
+    only), f32 result rounded from df32. 3-D activations — the serving
+    engine's (slots, seq, k) decode/prefill shape — go through
+    ``ozaki_matmul_batched``'s broadcast-weights route (the batch folds
+    into rows: ONE slice GEMM per anti-diagonal for the whole batch);
+    other ranks flatten leading dims onto the df32 matmul directly.
     """
-    from repro.core.ozaki import OzakiConfig, ozaki_matmul_dw
+    from repro.core.ozaki import (OzakiConfig, ozaki_matmul_batched,
+                                  ozaki_matmul_dw)
     from repro.core.xmath import DW, dw_to_single
+    from repro.kernels.ops import INTERPRET
 
+    # INTERPRET follows the backend: interpret-mode on CPU validation
+    # hosts, real Mosaic lowering on TPU deployments.
+    cfg = OzakiConfig(num_splits=num_splits, accum="df32", backend=backend,
+                      fuse_diagonals=True, interpret=INTERPRET)
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    if x.ndim == 3:
+        return ozaki_matmul_batched(x, w, cfg)
     lead = x.shape[:-1]
     k = x.shape[-1]
-    x2 = x.reshape(-1, k).astype(jnp.float32)
-    cfg = OzakiConfig(num_splits=num_splits, accum="df32", backend="xla",
-                      fuse_diagonals=True)
+    x2 = x.reshape(-1, k)
     out = ozaki_matmul_dw(DW(x2, jnp.zeros_like(x2)),
-                          DW(w.T.astype(jnp.float32),
-                             jnp.zeros_like(w.T, jnp.float32)), cfg)
+                          DW(w.T, jnp.zeros_like(w.T)), cfg)
     return dw_to_single(out).reshape(*lead, w.shape[1])
 
 
@@ -130,7 +140,8 @@ def policy_matmul(cfg, x: jax.Array, w: jax.Array) -> jax.Array:
                                   w.astype(jnp.float32))
     if p == "ozaki_fp64":
         return _matmul_ozaki(x.astype(jnp.float32), w.astype(jnp.float32),
-                             cfg.ozaki_splits)
+                             cfg.ozaki_splits,
+                             getattr(cfg, "ozaki_backend", "xla"))
     raise ValueError(f"unknown matmul_precision {p!r}")
 
 

@@ -8,6 +8,15 @@ its caches into a free slot; every engine tick decodes ALL slots in one
 jitted step (idle slots compute masked garbage — the static-shape tax).
 Finished rows free their slot immediately, so new requests join mid-
 flight without draining the batch.
+
+Matmul precision: the engine can override the model config's
+``matmul_precision`` / ``ozaki_backend`` per deployment (e.g. serve an
+FP64-accurate variant of a checkpoint without a new config). With
+``matmul_precision="ozaki_fp64"`` every dense projection in the batched
+decode step is a ``(num_slots, 1, k) @ (k, n)`` matmul against shared
+weights — exactly ``ozaki_matmul_batched``'s broadcast-weights case, so
+the whole batch shares one set of slice GEMMs per projection
+(``models.layers._matmul_ozaki`` routes 3-D activations there).
 """
 from __future__ import annotations
 
@@ -56,7 +65,16 @@ def _insert_row(batched, single, row: int):
 class ServingEngine:
     def __init__(self, cfg, params, *, num_slots: int = 4,
                  max_len: int = 256, cache_dtype=jnp.float32,
-                 sample_fn: Callable = greedy_sample):
+                 sample_fn: Callable = greedy_sample,
+                 matmul_precision: Optional[str] = None,
+                 ozaki_backend: Optional[str] = None):
+        overrides = {}
+        if matmul_precision is not None:
+            overrides["matmul_precision"] = matmul_precision
+        if ozaki_backend is not None:
+            overrides["ozaki_backend"] = ozaki_backend
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots

@@ -1,0 +1,102 @@
+"""Batched Ozaki GEMM API — deterministic coverage.
+
+(The hypothesis property-test versions of these claims live in
+``test_batched_props.py``; this module keeps the guarantees exercised
+even where hypothesis is not installed.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ozaki import OzakiConfig, ozaki_matmul, ozaki_matmul_batched
+
+
+def _phi_stack(rng, bsz, m, k, phi=1.0):
+    return jnp.asarray(rng.uniform(-0.5, 0.5, (bsz, m, k))
+                       * np.exp(phi * rng.standard_normal((bsz, m, k))))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_fused"])
+def test_batch_of_one_equals_unbatched(rng, backend):
+    cfg = OzakiConfig(num_splits=9, backend=backend)
+    a = _phi_stack(rng, 1, 16, 64)
+    b = _phi_stack(rng, 1, 64, 8)
+    batched = np.asarray(ozaki_matmul_batched(a, b, cfg))
+    single = np.asarray(ozaki_matmul(a[0], b[0], cfg))
+    np.testing.assert_array_equal(batched[0], single)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_fused"])
+def test_broadcast_weights_equals_loop(rng, backend):
+    """(B, m, k) @ (k, n) must equal a Python loop over ozaki_matmul."""
+    cfg = OzakiConfig(num_splits=9, backend=backend)
+    a = _phi_stack(rng, 3, 8, 48)
+    w = _phi_stack(rng, 1, 48, 8)[0]
+    got = np.asarray(ozaki_matmul_batched(a, w, cfg))
+    want = np.stack([np.asarray(ozaki_matmul(a[i], w, cfg))
+                     for i in range(3)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fully_batched_equals_loop(rng):
+    cfg = OzakiConfig(num_splits=9)
+    a = _phi_stack(rng, 3, 8, 48)
+    b = _phi_stack(rng, 3, 48, 8)
+    got = np.asarray(ozaki_matmul_batched(a, b, cfg))
+    want = np.stack([np.asarray(ozaki_matmul(a[i], b[i], cfg))
+                     for i in range(3)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_f32_inputs_take_df32_path(rng):
+    """f32 operands run the TPU-native pipeline and return f32."""
+    cfg = OzakiConfig(num_splits=9, accum="df32")
+    a = _phi_stack(rng, 2, 8, 32, 0.5).astype(jnp.float32)
+    w = _phi_stack(rng, 1, 32, 8, 0.5)[0].astype(jnp.float32)
+    out = ozaki_matmul_batched(a, w, cfg)
+    assert out.dtype == jnp.float32
+    ref = np.einsum("bmk,kn->bmn", np.asarray(a, np.float64),
+                    np.asarray(w, np.float64))
+    err = np.abs(np.asarray(out) - ref).max() / np.abs(ref).max()
+    assert err < 1e-6, err          # f32 result carries full f32 precision
+
+
+def test_jit_and_grad(rng):
+    """dtypes and gradients survive jax.jit (exact-product JVP)."""
+    cfg = OzakiConfig(num_splits=9)
+    a = _phi_stack(rng, 2, 8, 32, 0.5)
+    w = _phi_stack(rng, 1, 32, 8, 0.5)[0]
+
+    fn = jax.jit(lambda x, y: ozaki_matmul_batched(x, y, cfg))
+    out = fn(a, w)
+    assert out.dtype == jnp.float64 and out.shape == (2, 8, 8)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ozaki_matmul_batched(a, w, cfg)))
+
+    loss = jax.jit(jax.grad(
+        lambda x, y: jnp.sum(ozaki_matmul_batched(x, y, cfg) ** 2),
+        argnums=(0, 1)))
+    ga, gw = loss(a, w)
+    assert ga.shape == a.shape and gw.shape == w.shape
+    # exact-product rule: grads equal those of the plain matmul
+    ga_ref, gw_ref = jax.grad(
+        lambda x, y: jnp.sum(jnp.matmul(x, y) ** 2), argnums=(0, 1))(a, w)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ga_ref),
+                               rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_ref),
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_shape_and_dtype_validation(rng):
+    cfg = OzakiConfig()
+    a = _phi_stack(rng, 2, 4, 8)
+    with pytest.raises(ValueError, match="batch, m, k"):
+        ozaki_matmul_batched(a[0], a[0].T, cfg)
+    with pytest.raises(ValueError, match="batch mismatch"):
+        ozaki_matmul_batched(a, _phi_stack(rng, 3, 8, 4), cfg)
+    with pytest.raises(ValueError, match="contraction mismatch"):
+        ozaki_matmul_batched(a, _phi_stack(rng, 2, 9, 4), cfg)
+    with pytest.raises(TypeError, match="dtype mismatch"):
+        ozaki_matmul_batched(a, _phi_stack(rng, 2, 8, 4).astype(jnp.float32),
+                             cfg)

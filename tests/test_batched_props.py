@@ -1,0 +1,72 @@
+"""Property-based accuracy tests for the batched Ozaki API (hypothesis).
+
+Randomized shapes/batch sizes/exponent spreads; skipped cleanly when
+hypothesis is unavailable (deterministic counterparts of the same claims
+run in ``test_batched_api.py``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-test.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.ozaki import (OzakiConfig, ozaki_matmul,  # noqa: E402
+                              ozaki_matmul_batched)
+
+dims = st.integers(1, 24)
+batches = st.integers(1, 4)
+phis = st.floats(0.0, 2.0)
+
+
+def _stack(seed, bsz, m, k, phi):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-0.5, 0.5, (bsz, m, k))
+                       * np.exp(phi * rng.standard_normal((bsz, m, k))))
+
+
+@given(seed=st.integers(0, 2 ** 31), m=dims, k=dims, n=dims, phi=phis)
+@settings(max_examples=20, deadline=None)
+def test_batch_of_one_equals_unbatched(seed, m, k, n, phi):
+    cfg = OzakiConfig(num_splits=9)
+    a = _stack(seed, 1, m, k, phi)
+    b = _stack(seed + 1, 1, k, n, phi)
+    got = np.asarray(ozaki_matmul_batched(a, b, cfg))
+    np.testing.assert_array_equal(got[0],
+                                  np.asarray(ozaki_matmul(a[0], b[0], cfg)))
+
+
+@given(seed=st.integers(0, 2 ** 31), bsz=batches, m=dims, k=dims, n=dims,
+       phi=phis)
+@settings(max_examples=20, deadline=None)
+def test_broadcast_weights_equals_loop(seed, bsz, m, k, n, phi):
+    cfg = OzakiConfig(num_splits=9)
+    a = _stack(seed, bsz, m, k, phi)
+    w = _stack(seed + 1, 1, k, n, phi)[0]
+    got = np.asarray(ozaki_matmul_batched(a, w, cfg))
+    want = np.stack([np.asarray(ozaki_matmul(a[i], w, cfg))
+                     for i in range(bsz)])
+    np.testing.assert_array_equal(got, want)
+
+
+@given(seed=st.integers(0, 2 ** 31), bsz=batches, m=dims, k=dims, n=dims)
+@settings(max_examples=10, deadline=None)
+def test_jit_grad_dtypes_survive(seed, bsz, m, k, n):
+    cfg = OzakiConfig(num_splits=9)
+    a = _stack(seed, bsz, m, k, 0.5)
+    w = _stack(seed + 1, 1, k, n, 0.5)[0]
+    out = jax.jit(lambda x, y: ozaki_matmul_batched(x, y, cfg))(a, w)
+    assert out.dtype == jnp.float64 and out.shape == (bsz, m, n)
+    ga, gw = jax.jit(jax.grad(
+        lambda x, y: jnp.sum(ozaki_matmul_batched(x, y, cfg)),
+        argnums=(0, 1)))(a, w)
+    assert ga.dtype == a.dtype and ga.shape == a.shape
+    assert gw.dtype == w.dtype and gw.shape == w.shape
+    # d/dA sum(A @ w) = broadcast of row sums of w
+    np.testing.assert_allclose(
+        np.asarray(ga),
+        np.broadcast_to(np.asarray(w).sum(axis=1), (bsz, m, k)),
+        rtol=1e-12, atol=1e-12)

@@ -10,6 +10,7 @@ import jax
 jax.config.update('jax_enable_x64', True)
 import numpy as np, jax.numpy as jnp
 from repro.core.ozaki import OzakiConfig
+from repro.launch.mesh import make_mesh_compat
 from repro.parallel.ozaki_shard import distributed_ozaki_matmul
 rng = np.random.default_rng(0)
 a = jnp.asarray(rng.uniform(-0.5, 0.5, (64, 256))
@@ -18,8 +19,7 @@ b = jnp.asarray(rng.uniform(-0.5, 0.5, (256, 48)))
 cfg = OzakiConfig(num_splits=11)
 outs = []
 for shape in ((2, 4), (4, 2), (1, 8)):
-    mesh = jax.make_mesh(shape, ('data', 'model'),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat(shape, ('data', 'model'))
     outs.append(np.asarray(distributed_ozaki_matmul(a, b, mesh, cfg)))
 assert np.array_equal(outs[0], outs[1]), 'mesh 2x4 vs 4x2'
 assert np.array_equal(outs[0], outs[2]), 'mesh 2x4 vs 1x8'
@@ -28,8 +28,7 @@ err = np.abs(outs[0] - ref).max() / np.abs(ref).max()
 assert err < 1e-14, err
 # overlap schedule identical (int32 psum exactness)
 o2 = np.asarray(distributed_ozaki_matmul(
-    a, b, jax.make_mesh((2, 4), ('data', 'model'),
-                        axis_types=(jax.sharding.AxisType.Auto,) * 2),
+    a, b, make_mesh_compat((2, 4), ('data', 'model')),
     cfg, schedule='overlap'))
 assert np.array_equal(outs[0], o2)
 print('OK')
@@ -44,12 +43,12 @@ jax.config.update('jax_enable_x64', True)
 import numpy as np, jax.numpy as jnp
 from repro.core.ozaki import OzakiConfig
 from repro.core.xmath import df32_to_f64
+from repro.launch.mesh import make_mesh_compat
 from repro.parallel.ozaki_shard import distributed_ozaki_matmul
 rng = np.random.default_rng(1)
 a = jnp.asarray(rng.uniform(-0.5, 0.5, (64, 128)))
 b = jnp.asarray(rng.uniform(-0.5, 0.5, (128, 32)))
-mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh_compat((2, 4), ('data', 'model'))
 c = np.asarray(distributed_ozaki_matmul(a, b, mesh,
                OzakiConfig(num_splits=9), m_axis='data'))
 ref = np.asarray(a) @ np.asarray(b)
@@ -110,10 +109,10 @@ import jax, numpy as np, jax.numpy as jnp
 from functools import partial
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh_compat
 from repro.parallel.compression import (compress_psum, init_ef_state)
 
-mesh = jax.make_mesh((8,), ('data',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh_compat((8,), ('data',))
 rng = np.random.default_rng(0)
 g_all = jnp.asarray(rng.standard_normal((8, 256)), jnp.float32)
 

@@ -8,11 +8,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.splitting import row_exponents, split_int_dw
+from repro.core.splitting import row_exponents, split_int, split_int_dw
 from repro.core.xmath import DW, df32_from_f64
 from repro.kernels import ref
-from repro.kernels.int8_gemm import int8_matmul_nt
-from repro.kernels.ozaki_accum import accum_scaled_dw
+from repro.kernels.int8_gemm import int8_matmul_nt, int8_matmul_nt_batched
+from repro.kernels.ozaki_accum import accum_scaled_dw, accum_scaled_sw
 from repro.kernels.ozaki_split import fused_split_dw
 
 
@@ -62,6 +62,46 @@ def test_accum_scaled_sweep(rng, m, n, scale_pow):
     wh, wl = ref.accum_scaled_dw_ref(p, c_hi, c_lo, scale=scale)
     np.testing.assert_array_equal(np.asarray(gh), np.asarray(wh))
     np.testing.assert_array_equal(np.asarray(gl), np.asarray(wl))
+
+
+@pytest.mark.parametrize("b,m,n,k", [
+    (1, 8, 8, 8), (3, 16, 24, 32), (2, 100, 60, 130)])
+def test_int8_gemm_batched_sweep(rng, b, m, n, k):
+    a = jnp.asarray(rng.integers(-128, 128, (b, m, k)), jnp.int8)
+    bt = jnp.asarray(rng.integers(-128, 128, (b, n, k)), jnp.int8)
+    got = np.asarray(int8_matmul_nt_batched(a, bt, interpret=True))
+    want = np.asarray(ref.int8_matmul_nt_batched_ref(a, bt))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_int8_gemm_batched_matches_unbatched(rng):
+    a = jnp.asarray(rng.integers(-128, 128, (4, 32, 64)), jnp.int8)
+    bt = jnp.asarray(rng.integers(-128, 128, (4, 16, 64)), jnp.int8)
+    got = np.asarray(int8_matmul_nt_batched(a, bt, interpret=True))
+    for i in range(4):
+        np.testing.assert_array_equal(
+            got[i], np.asarray(int8_matmul_nt(a[i], bt[i], interpret=True)))
+
+
+@pytest.mark.parametrize("m,n,scale_pow", [(16, 128, -14), (100, 200, -28)])
+def test_accum_scaled_sw_sweep(rng, m, n, scale_pow):
+    p = jnp.asarray(rng.integers(-2 ** 30, 2 ** 30, (m, n)), jnp.int32)
+    c = jnp.asarray(rng.standard_normal((m, n)), jnp.float64)
+    scale = float(2.0 ** scale_pow)
+    got = accum_scaled_sw(p, c, scale=scale, interpret=True)
+    want = ref.accum_scaled_sw_ref(p, c, scale=scale)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,k,s,w", [(8, 128, 9, 7), (33, 130, 13, 6)])
+def test_fused_split_f64_zero_lo_equals_split_int(rng, m, k, s, w):
+    """(f64, 0) through the dw kernel == Algorithm 4 on the f64 matrix."""
+    x = jnp.asarray(rng.uniform(-0.5, 0.5, (m, k))
+                    * np.exp(rng.standard_normal((m, k))))
+    want = split_int(x, s, w)
+    got = fused_split_dw(x, jnp.zeros_like(x), want.exp, num_splits=s, w=w,
+                         interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want.slices))
 
 
 def test_int8_gemm_jit_composes(rng):

@@ -4,7 +4,11 @@ from fractions import Fraction
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-test.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.xmath import (DW, dd_matmul_f64, dd_matmul_np, df32_from_f64,
                               df32_to_f64, dw_add, dw_mul, dw_to_single,

@@ -56,7 +56,7 @@ def run(n: int | None = None, quick: bool = False):
     w = cfg.width_for(n)
     t_split = time_fn(lambda: split_int(a, 9, w))
     t_total = time_fn(lambda: ozaki_matmul(a, b, cfg))
-    from repro.core.ozaki import _gemm_xla
+    from repro.core.executors import gemm_xla as _gemm_xla
     sa = split_int(a, 9, w)
     sb = split_int(jnp.asarray(b).T, 9, w)
     t_one_gemm = time_fn(lambda: _gemm_xla(sa.slices[0], sb.slices[0]))

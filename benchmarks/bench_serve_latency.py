@@ -1,0 +1,100 @@
+"""End-to-end serving decode latency: ozaki_fp64 + pallas_fused vs bf16.
+
+The serving claim of the Ozaki scheme is that FP64-accurate projections
+can ride the int8 MXU path at deployment time. This benchmark drives the
+REAL serving engine (continuous batching, slot admission, jitted batched
+decode) through full request lifecycles and reports per-tick decode
+latency for
+
+  * ``bf16``                       — the TPU-native baseline policy,
+  * ``ozaki_fp64 + pallas_fused``  — the paper's path on the stage-fused
+                                     kernel pipeline,
+  * ``ozaki_fp64 + epilogue``      — the epilogue-fused GEMM+accumulate
+                                     pipeline (int32 products stay in
+                                     VMEM).
+
+Every dense projection in the decode step is a ``(slots, 1, k) @ (k, n)``
+broadcast-weights matmul, i.e. ``ozaki_matmul_batched``'s rows layout —
+one set of slice GEMMs per projection for the whole batch. CPU interpret
+mode makes the absolute numbers indicative only (the kernels lower to
+Mosaic unchanged on TPU); the per-tick latency RATIO and the engine
+overhead split are the portable signal.
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_model
+from repro.serving.engine import Request, ServingEngine
+
+from .common import emit
+
+VARIANTS = {
+    "bf16": dict(matmul_precision="bf16"),
+    "ozaki_fused": dict(matmul_precision="ozaki_fp64",
+                        ozaki_backend="pallas_fused"),
+    "ozaki_epilogue": dict(matmul_precision="ozaki_fp64",
+                           ozaki_backend="pallas_fused",
+                           ozaki_fuse_epilogue=True),
+}
+
+
+def _drive(cfg, params, overrides, *, num_slots: int, new_tokens: int,
+           prompts) -> dict:
+    engine = ServingEngine(cfg, params, num_slots=num_slots, max_len=64,
+                           **overrides)
+    for rid, prompt in enumerate(prompts):
+        engine.submit(Request(rid=rid, prompt=prompt,
+                              max_new_tokens=new_tokens))
+    engine.step()                       # admission + warmup (jit compile)
+    ticks = []
+    while engine.waiting or any(r is not None for r in engine.slot_req):
+        t0 = time.perf_counter()
+        engine.step()
+        ticks.append((time.perf_counter() - t0) * 1e6)
+        if len(ticks) > 10_000:
+            raise TimeoutError("engine did not drain")
+    done = sorted(engine.finished, key=lambda r: r.rid)
+    return {"tick_us": float(np.median(ticks)) if ticks else 0.0,
+            "ticks": len(ticks),
+            "tokens": [r.generated for r in done]}
+
+
+def run(arch: str = "llama3.2-3b", quick: bool = False):
+    cfg = get_config(arch).reduced()
+    new_tokens = 4 if quick else 8
+    num_slots = 2
+    rng = np.random.default_rng(11)
+    params, _ = init_model(cfg, jax.random.key(0))
+    prompts = [rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(3)]           # 3 requests, 2 slots: one queues
+    results = {}
+    for name, overrides in VARIANTS.items():
+        if quick and name == "ozaki_fused":
+            continue                        # CI smoke: baseline + epilogue
+        r = _drive(cfg, params, overrides, num_slots=num_slots,
+                   new_tokens=new_tokens, prompts=prompts)
+        results[name] = r
+        emit(f"serve_latency/{name}/slots={num_slots}", r["tick_us"],
+             f"decode_ticks={r['ticks']};new_tokens={new_tokens}")
+    if "bf16" in results:
+        base = results["bf16"]["tick_us"] or 1.0
+        for name, r in results.items():
+            if name == "bf16":
+                continue
+            emit(f"serve_latency/{name}_vs_bf16", 0.0,
+                 f"tick_ratio={r['tick_us'] / base:.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer tokens/variants (CI smoke run)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=args.quick)

@@ -13,13 +13,15 @@ def main() -> None:
     print("name,us_per_call,derived")
     from . import (bench_fig4_analytic, bench_fig6_accuracy,
                    bench_fig7_zerocancel, bench_fig8_throughput,
-                   bench_fused_pipeline, bench_quantum_sim)
+                   bench_fused_pipeline, bench_quantum_sim,
+                   bench_serve_latency)
     bench_fig4_analytic.run()
     bench_fig6_accuracy.run()
     bench_fig7_zerocancel.run()
     bench_fig8_throughput.run()
     bench_fused_pipeline.run()
     bench_quantum_sim.run()
+    bench_serve_latency.run()
 
 
 if __name__ == "__main__":

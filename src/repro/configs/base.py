@@ -73,6 +73,11 @@ class ArchConfig:
     matmul_precision: str = "bf16"  # bf16 | int8_quant | ozaki_fp64
     ozaki_splits: int = 9
     ozaki_backend: str = "xla"      # xla | pallas | pallas_fused
+    ozaki_fuse_epilogue: bool = False   # pallas_fused: GEMM+accum in one
+                                        # kernel (int32 stays in VMEM)
+    ozaki_shard_axis: str = ""      # mesh axis to k-shard ozaki matmuls
+                                    # over ("" = unsharded); needs a mesh
+                                    # registered via parallel.ozaki_shard
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
     accum_dtype: str = "float32"    # matmul partial sums; bf16 halves the

@@ -3,29 +3,37 @@ from .analytic import (ALL_MMUS, DGEMM_MANTISSA_SPACE, FP16_FP32, INT4_INT32,
                        INT8_INT32, INT12_INT32, MMUSpec, ozaki_flops,
                        ozaki_hp_accum_ops)
 from .auto_split import auto_num_splits, auto_num_splits_complex
+from .executors import (EpilogueExecutor, FusedExecutor, PallasExecutor,
+                        XlaExecutor, get_executor)
 from .ozaki import (BACKENDS, OzakiConfig, dgemm_f64, gemm_fp32_pass,
                     int32_to_dw, ozaki_matmul, ozaki_matmul_batched,
                     ozaki_matmul_complex, ozaki_matmul_dw)
 from .splitting import (SplitResult, compute_alpha, reconstruct, row_exponents,
                         slice_width, split_int, split_int_dw, split_tail)
-from .tuning import (TilePlan, apply_plan, hbm_pass_model, select_num_splits,
-                     select_plan)
+from .tuning import (BATCH_LAYOUTS, FUSION_MODES, PipelinePlan, TilePlan,
+                     apply_pipeline_plan, apply_plan, diagonal_groups,
+                     hbm_pass_model, plan_for, select_num_splits, select_plan,
+                     select_pipeline_plan)
 from .xmath import (DW, dd_matmul_f64, dd_matmul_np, df32_from_f64,
                     df32_to_f64, dw_add, dw_add_single, dw_mul, dw_mul_single,
                     dw_normalize, dw_sub, dw_to_single, dw_zeros,
                     fast_two_sum, rel_error_vs_dd, two_prod, two_sum)
 
 __all__ = [
-    "ALL_MMUS", "BACKENDS", "DGEMM_MANTISSA_SPACE", "DW", "FP16_FP32",
+    "ALL_MMUS", "BACKENDS", "BATCH_LAYOUTS", "DGEMM_MANTISSA_SPACE", "DW",
+    "EpilogueExecutor", "FP16_FP32", "FUSION_MODES", "FusedExecutor",
     "INT12_INT32", "INT4_INT32", "INT8_INT32", "MMUSpec", "OzakiConfig",
-    "SplitResult", "TilePlan", "apply_plan", "auto_num_splits",
+    "PallasExecutor", "PipelinePlan", "SplitResult", "TilePlan",
+    "XlaExecutor", "apply_pipeline_plan", "apply_plan", "auto_num_splits",
     "auto_num_splits_complex", "compute_alpha", "dd_matmul_f64",
-    "dd_matmul_np", "df32_from_f64", "df32_to_f64", "dgemm_f64", "dw_add",
-    "dw_add_single", "dw_mul", "dw_mul_single", "dw_normalize", "dw_sub",
-    "dw_to_single", "dw_zeros", "fast_two_sum", "gemm_fp32_pass",
-    "hbm_pass_model", "int32_to_dw", "ozaki_flops", "ozaki_hp_accum_ops",
-    "ozaki_matmul", "ozaki_matmul_batched", "ozaki_matmul_complex",
-    "ozaki_matmul_dw", "reconstruct", "rel_error_vs_dd", "row_exponents",
-    "select_num_splits", "select_plan", "slice_width", "split_int",
-    "split_int_dw", "split_tail", "two_prod", "two_sum",
+    "dd_matmul_np", "df32_from_f64", "df32_to_f64", "dgemm_f64",
+    "diagonal_groups", "dw_add", "dw_add_single", "dw_mul", "dw_mul_single",
+    "dw_normalize", "dw_sub", "dw_to_single", "dw_zeros", "fast_two_sum",
+    "gemm_fp32_pass", "get_executor", "hbm_pass_model", "int32_to_dw",
+    "ozaki_flops", "ozaki_hp_accum_ops", "ozaki_matmul",
+    "ozaki_matmul_batched", "ozaki_matmul_complex", "ozaki_matmul_dw",
+    "plan_for", "reconstruct", "rel_error_vs_dd", "row_exponents",
+    "select_num_splits", "select_pipeline_plan", "select_plan",
+    "slice_width", "split_int", "split_int_dw", "split_tail", "two_prod",
+    "two_sum",
 ]

@@ -1,0 +1,254 @@
+"""Pipeline executors — one class per backend/fusion strategy.
+
+``core.ozaki`` is the thin driver: it normalizes operands (transposes B,
+folds batches into rows for the "rows"/"grid" layouts), builds a
+``PipelinePlan`` (``core.tuning.plan_for``), and calls the executor the
+plan selects. Executors own the three pipeline stages:
+
+  * ``split``/``split_dw`` — stage 1, always on a 2-D matrix (the driver
+    folds a batch into rows first; splitting is row-independent, so the
+    fold is exact).
+  * ``gemm``/``products`` — stage 2, the slice GEMMs per anti-diagonal
+    group. Operands may be 2-D ``(m, k) x (n, k)`` or 3-D batched
+    ``(B, m, k) x (B, n, k)``; the 3-D case runs the explicit batch-grid
+    kernel (``int8_matmul_nt_batched``) on the Pallas executors and a
+    batch-dimension ``dot_general`` on XLA — never ``vmap``.
+  * ``accumulate`` — stage 3, the high-precision scaled accumulation,
+    ordered smallest terms first; the deferred per-element exponent
+    ``e_base`` is applied once at the end (exact power-of-two scaling).
+  * ``contract`` — stages 2+3. The epilogue executor overrides this
+    whole stage pair: GEMM and accumulation run in one kernel per group
+    and the int32 group products never materialize to HBM.
+
+Every executor is bitwise-compatible with ``XlaExecutor`` for both
+accumulation modes: integer stages are exact, and the float stages run
+identical rounding sequences (enforced by ``tests/test_backend_parity``).
+
+Kernel imports stay lazy (inside methods) to keep ``repro.core``
+importable without ``repro.kernels`` and cycle-free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .splitting import SplitResult, row_exponents, split_int, split_int_dw
+from .tuning import BACKENDS, PipelinePlan
+from .xmath import DW, dw_add, dw_normalize
+
+__all__ = ["BACKENDS", "XlaExecutor", "PallasExecutor", "FusedExecutor",
+           "EpilogueExecutor", "get_executor", "gemm_xla", "int32_to_dw"]
+
+
+def gemm_xla(a8: jax.Array, bt8: jax.Array) -> jax.Array:
+    """int8 NT GEMM as one XLA op; 3-D operands contract batched."""
+    if a8.ndim == 3:
+        return jax.lax.dot_general(
+            a8, bt8, dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32)
+    return jax.lax.dot_general(
+        a8, bt8, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def int32_to_dw(p: jax.Array) -> DW:
+    """Exact int32 -> df32 conversion (no int64 anywhere: TPU/x32 safe)."""
+    low = jnp.bitwise_and(p, jnp.int32(0xFFFF))        # [0, 65535]
+    high = p - low                                      # multiple of 2^16
+    hi_f = high.astype(jnp.float32)                     # <= 15 sig bits: exact
+    lo_f = low.astype(jnp.float32)                      # <= 16 sig bits: exact
+    return dw_normalize(hi_f, lo_f)
+
+
+def _ordered(products):
+    return sorted(products, key=lambda tp: -tp[0])      # small terms first
+
+
+class XlaExecutor:
+    """Reference executor: every stage as composite XLA ops."""
+
+    def __init__(self, plan: PipelinePlan):
+        self.plan = plan
+
+    # ---- stage 1: split -------------------------------------------------
+    def split(self, x: jax.Array, w: int) -> SplitResult:
+        return split_int(x, self.plan.num_splits, w)
+
+    def split_dw(self, x: DW, w: int) -> SplitResult:
+        return split_int_dw(x, self.plan.num_splits, w)
+
+    # ---- stage 2: slice GEMMs ------------------------------------------
+    def gemm(self, a8: jax.Array, bt8: jax.Array) -> jax.Array:
+        return gemm_xla(a8, bt8)
+
+    def products(self, sa: SplitResult,
+                 sb: SplitResult) -> list[tuple[int, jax.Array]]:
+        """[(t, P_t int32)] per anti-diagonal group."""
+        plan = self.plan
+        out = []
+        for t, pairs in plan.diagonals():
+            if plan.concat_k:
+                a_cat = jnp.concatenate([sa.slices[p] for p, _ in pairs],
+                                        axis=-1)
+                b_cat = jnp.concatenate([sb.slices[q] for _, q in pairs],
+                                        axis=-1)
+                out.append((t, self.gemm(a_cat, b_cat)))
+            elif plan.fuse_diagonals:
+                p_t = self.gemm(sa.slices[pairs[0][0]], sb.slices[pairs[0][1]])
+                for p, q in pairs[1:]:
+                    p_t = p_t + self.gemm(sa.slices[p], sb.slices[q])
+                out.append((t, p_t))
+            else:
+                # paper-faithful: pair products stay separate
+                out.extend((t, self.gemm(sa.slices[p], sb.slices[q]))
+                           for p, q in pairs)
+        return out
+
+    # ---- stage 3: high-precision scaled accumulation -------------------
+    def accumulate(self, products, e_base: jax.Array, w: int, shape):
+        if self.plan.accum == "f64":
+            c = jnp.zeros(shape, jnp.float64)
+            for t, p_t in _ordered(products):
+                c = c + jnp.ldexp(p_t.astype(jnp.float64),
+                                  e_base - (t + 2) * w)
+            return c
+        acc = DW(jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32))
+        for t, p_t in _ordered(products):
+            scale = jnp.float32(2.0 ** (-(t + 2) * w))  # exact power of two
+            term = int32_to_dw(p_t)
+            acc = dw_add(acc, DW(term.hi * scale, term.lo * scale))
+        return DW(jnp.ldexp(acc.hi, e_base), jnp.ldexp(acc.lo, e_base))
+
+    # ---- stages 2+3 -----------------------------------------------------
+    def contract(self, sa: SplitResult, sb: SplitResult, w: int,
+                 e_base: jax.Array, shape):
+        return self.accumulate(self.products(sa, sb), e_base, w, shape)
+
+
+class PallasExecutor(XlaExecutor):
+    """Slice GEMMs on the Pallas MXU kernels; split/accumulate stay XLA.
+
+    3-D operands run the explicit batch-grid GEMM (the batch is the
+    outermost grid dimension of ONE kernel launch — no vmap wrapper).
+    """
+
+    def gemm(self, a8: jax.Array, bt8: jax.Array) -> jax.Array:
+        from repro.kernels import int8_matmul_nt, int8_matmul_nt_batched
+        tile = self.plan.tile
+        kw = dict(bm=tile.bm, bn=tile.bn, bk=tile.bk,
+                  interpret=self.plan.interpret)
+        if a8.ndim == 3:
+            return int8_matmul_nt_batched(a8, bt8, **kw)
+        return int8_matmul_nt(a8, bt8, **kw)
+
+
+class FusedExecutor(PallasExecutor):
+    """The PR 1 ``pallas_fused`` pipeline (``fusion="stages"``): one-pass
+    SplitInt kernel, Pallas GEMMs, fused scaled-accumulation kernels.
+    Batched accumulation folds ``(B, m, n)`` onto ``(B*m, n)`` — the
+    kernels are elementwise, so the fold is exact.
+    """
+
+    def split(self, x: jax.Array, w: int) -> SplitResult:
+        from repro.kernels import fused_split_dw
+        exp = row_exponents(x)
+        tile = self.plan.tile
+        slices = fused_split_dw(x, jnp.zeros_like(x), exp,
+                                num_splits=self.plan.num_splits, w=w,
+                                bm=tile.split_bm, bk=tile.split_bk,
+                                interpret=self.plan.interpret)
+        return SplitResult(slices, exp, w)
+
+    def split_dw(self, x: DW, w: int) -> SplitResult:
+        from repro.kernels import fused_split_dw
+        exp = row_exponents(x.hi)
+        tile = self.plan.tile
+        slices = fused_split_dw(x.hi, x.lo, exp,
+                                num_splits=self.plan.num_splits, w=w,
+                                bm=tile.split_bm, bk=tile.split_bk,
+                                interpret=self.plan.interpret)
+        return SplitResult(slices, exp, w)
+
+    def accumulate(self, products, e_base: jax.Array, w: int, shape):
+        from repro.kernels import accum_scaled_dw, accum_scaled_sw
+        tile = self.plan.tile
+        kw = dict(bm=tile.accum_bm, bn=tile.accum_bn,
+                  interpret=self.plan.interpret)
+        fold = len(shape) > 2
+        flat = (-1, shape[-1])
+
+        def fold2d(x):
+            return x.reshape(flat) if fold else x
+
+        if self.plan.accum == "f64":
+            c = fold2d(jnp.zeros(shape, jnp.float64))
+            for t, p_t in _ordered(products):
+                c = accum_scaled_sw(fold2d(p_t), c,
+                                    scale=2.0 ** (-(t + 2) * w), **kw)
+            return jnp.ldexp(c.reshape(shape), e_base)
+        c_hi = fold2d(jnp.zeros(shape, jnp.float32))
+        c_lo = fold2d(jnp.zeros(shape, jnp.float32))
+        for t, p_t in _ordered(products):
+            c_hi, c_lo = accum_scaled_dw(fold2d(p_t), c_hi, c_lo,
+                                         scale=2.0 ** (-(t + 2) * w), **kw)
+        return DW(jnp.ldexp(c_hi.reshape(shape), e_base),
+                  jnp.ldexp(c_lo.reshape(shape), e_base))
+
+
+class EpilogueExecutor(FusedExecutor):
+    """``fusion="epilogue"``: GEMM + scaled accumulation in one kernel.
+
+    One launch per anti-diagonal group; the group's int32 product lives
+    only in a VMEM scratch block (``tuning.hbm_pass_model`` drops the
+    per-group P read). ``concat_k`` needs no concatenated operands here —
+    the pair grid dimension accumulates the same exact int32 sum.
+    """
+
+    def _groups(self):
+        """(t, p_lo, npairs) in accumulation order: t descending, and for
+        the unfused schedule pairs in ``diagonals()`` order (matching the
+        stable ``_ordered`` sort of the reference products list)."""
+        plan = self.plan
+        groups = []
+        for t, pairs in plan.diagonals():
+            if plan.fuse_diagonals or plan.concat_k:
+                groups.append((t, pairs[0][0], len(pairs)))
+            else:
+                groups.extend((t, p, 1) for p, _ in pairs)
+        return sorted(groups, key=lambda g: -g[0])
+
+    def contract(self, sa: SplitResult, sb: SplitResult, w: int,
+                 e_base: jax.Array, shape):
+        from repro.kernels import (int8_matmul_nt_epilogue_dw,
+                                   int8_matmul_nt_epilogue_sw)
+        assert len(shape) == 2, "epilogue fusion is 2-D (plan invariant)"
+        tile = self.plan.tile
+        kw = dict(bm=tile.bm, bn=tile.bn, bk=tile.bk,
+                  interpret=self.plan.interpret)
+        if self.plan.accum == "f64":
+            c = jnp.zeros(shape, jnp.float64)
+            for t, p_lo, npairs in self._groups():
+                c = int8_matmul_nt_epilogue_sw(
+                    sa.slices, sb.slices, c, p_lo=p_lo, t=t, npairs=npairs,
+                    scale=2.0 ** (-(t + 2) * w), **kw)
+            return jnp.ldexp(c, e_base)
+        c_hi = jnp.zeros(shape, jnp.float32)
+        c_lo = jnp.zeros(shape, jnp.float32)
+        for t, p_lo, npairs in self._groups():
+            c_hi, c_lo = int8_matmul_nt_epilogue_dw(
+                sa.slices, sb.slices, c_hi, c_lo, p_lo=p_lo, t=t,
+                npairs=npairs, scale=2.0 ** (-(t + 2) * w), **kw)
+        return DW(jnp.ldexp(c_hi, e_base), jnp.ldexp(c_lo, e_base))
+
+
+def get_executor(plan: PipelinePlan) -> XlaExecutor:
+    if plan.backend == "xla":
+        return XlaExecutor(plan)
+    if plan.backend == "pallas":
+        return PallasExecutor(plan)
+    if plan.backend == "pallas_fused":
+        if plan.fusion == "epilogue":
+            return EpilogueExecutor(plan)
+        return FusedExecutor(plan)
+    raise ValueError(f"unknown backend {plan.backend!r}; "
+                     f"expected one of {BACKENDS}")

@@ -4,22 +4,31 @@
 matrix multiplications with int32 accumulation (the TPU MXU int8 path) plus
 a high-precision scaled accumulation of the slice products.
 
-The driver is a three-stage pipeline — split, slice GEMMs, accumulate —
-and each stage dispatches on ``OzakiConfig.backend``:
+This module is the thin *driver* of a planner/executor architecture:
 
-  * ``xla``          — every stage as composite XLA ops (lax primitives).
-    The reference path: s-pass splitting, dot_general GEMMs, multi-op
-    accumulation.
+  * ``core.tuning.PipelinePlan`` — the execution strategy for one shape
+    (tiles, split count, fusion mode, batch layout, shard axis), built
+    once per shape by ``plan_for`` (reflecting the ``OzakiConfig``) or
+    ``select_pipeline_plan`` (from shapes alone).
+  * ``core.executors`` — one executor class per strategy; the driver
+    normalizes operands (transpose, batch folding), computes the deferred
+    exponent base, and hands the three-stage pipeline (split, slice
+    GEMMs, accumulate) to ``get_executor(plan)``.
+
+Backends (``OzakiConfig.backend`` — executor families):
+
+  * ``xla``          — every stage as composite XLA ops. The reference.
   * ``pallas``       — the int8 GEMMs run on the Pallas MXU kernel; split
     and accumulation stay XLA ops.
-  * ``pallas_fused`` — the full fused pipeline: one-pass SplitInt kernel
-    (all s slices per HBM read), Pallas MXU GEMMs, and the fused scaled
-    accumulation kernel (int32→float convert + scale + compensated add in
-    one VMEM pass). This is the deployment path; the memory-bound split
-    and accumulate stages the paper's Fig. 9 profiles drop from s-pass /
-    5-pass to 1-pass / 3-pass (see ``core.tuning.hbm_pass_model``).
-    Results are bitwise identical to ``xla`` for both accumulation modes
-    (the kernels run the same rounding sequences).
+  * ``pallas_fused`` — the deployment path. With ``fuse_epilogue=False``
+    (fusion mode "stages"): one-pass SplitInt kernel, Pallas MXU GEMMs,
+    fused scaled-accumulation kernels. With ``fuse_epilogue=True``
+    (fusion mode "epilogue"): GEMM and accumulation run in ONE kernel per
+    anti-diagonal group — the int32 slice products accumulate in a VMEM
+    scratch block and never round-trip to HBM (the remaining accumulation
+    traffic ``core.tuning.hbm_pass_model`` charges the "stages" mode).
+    Both modes are bitwise identical to ``xla`` for both accumulation
+    modes (the kernels run the same rounding sequences).
 
 Accumulation modes:
   * ``accum="f64"``  — the paper's mode (CPU validation; x64 required).
@@ -28,46 +37,42 @@ Accumulation modes:
 
 Scheduling modes (see DESIGN.md §4):
   * paper-faithful: each slice pair (i, j) with i + j <= s + 1 is a
-    separate int8 GEMM followed by a scaled high-precision accumulation —
-    s(s+1)/2 GEMMs and as many accumulations (Alg. 3 verbatim).
+    separate int8 GEMM followed by a scaled high-precision accumulation.
   * ``fuse_diagonals`` (O1): pairs on an anti-diagonal share their scale,
-    so their int32 products are summed exactly in int32 first; the number
-    of high-precision accumulations drops to s. Requires slack bits in
-    alpha (handled by ``compute_alpha(..., fuse_terms=...)``).
+    so their int32 products are summed exactly in int32 first. Requires
+    slack bits in alpha (``compute_alpha(..., fuse_terms=...)``).
   * ``concat_k`` (O2): realizes each anti-diagonal sum as ONE int8 GEMM
-    over a k-concatenated operand pair — fewer, larger MXU launches.
+    over a k-concatenated operand pair (the epilogue-fused executor gets
+    the same exact sum from its pair grid dimension instead).
 
 Batched entry point: ``ozaki_matmul_batched`` handles ``(B, m, k) @
 (B, k, n)`` stacks and the serving case ``(B, m, k) @ (k, n)`` (broadcast
 weights). Broadcast weights collapse the batch into rows — one big GEMM,
-bitwise identical to a Python loop over ``ozaki_matmul`` because every
-per-row quantity (exponent, slices, accumulation) is row-independent.
-Fully-batched operands go through ``jax.vmap`` over the pipeline (all
-three Pallas kernels are vmap-compatible; the batch becomes a leading
-grid dimension). Gradients are defined via ``jax.custom_jvp`` with the
-exact-product rule ``dC = dA·B + A·dB`` — correct because the scheme is
-an error-free rewrite of the true product, not a lossy quantizer.
+bitwise identical to a Python loop over ``ozaki_matmul``. Fully-batched
+operands run the SAME pipeline with an explicit batch dimension: the
+split stage folds the stack into rows (row-independent, exact), the
+GEMMs run the explicit batch-grid kernel (one launch per group, batch
+outermost in the grid — no vmap), and the accumulation broadcasts the
+per-(batch, row, col) exponent base. Gradients are defined via
+``jax.custom_jvp`` with the exact-product rule ``dC = dA·B + A·dB``.
 
-Block shapes and split counts for the Pallas paths come from
-``OzakiConfig.tile`` (a ``core.tuning.TilePlan``); ``tile=None`` uses the
-kernels' MXU-aligned defaults.
+Sharding: ``OzakiConfig.shard_axis`` names a mesh axis the k (reduction)
+dimension is sharded over; ``parallel.ozaki_shard`` composes the batched
+API with that axis (the plan carries it; GSPMD inserts the collectives).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from .splitting import (SplitResult, row_exponents, slice_width, split_int,
-                        split_int_dw)
-from .tuning import TilePlan
-from .xmath import DW, dw_add, dw_normalize, dw_to_single
-
-BACKENDS = ("xla", "pallas", "pallas_fused")
-
+from .executors import get_executor, int32_to_dw
+from .splitting import SplitResult, slice_width
+from .tuning import BACKENDS, PipelinePlan, TilePlan, diagonal_groups, plan_for
+from .xmath import DW, dw_to_single
 
 @dataclasses.dataclass(frozen=True)
 class OzakiConfig:
@@ -76,10 +81,16 @@ class OzakiConfig:
     num_splits: s in the paper (INT8x{s}).
     accum: "f64" | "df32".
     backend: "xla" (lax ops) | "pallas" (MXU GEMM kernel only) |
-        "pallas_fused" (full split/GEMM/accumulate kernel pipeline).
+        "pallas_fused" (fused split/GEMM/accumulate kernel pipeline).
+    fuse_epilogue: with ``backend="pallas_fused"``, run GEMM + scaled
+        accumulation in one kernel per group (int32 products stay in
+        VMEM). Ignored by other backends; batch-grid plans fall back to
+        the stage-fused pipeline.
     fuse_diagonals: O1 — exact int32 pre-accumulation per anti-diagonal.
     concat_k: O2 — one GEMM per anti-diagonal via k-concatenation.
     full_pairs: compute all s*s pairs (paper computes i+j <= s+1 only).
+    shard_axis: mesh axis name to shard the reduction (k) dim over, or
+        None. Consumed by ``parallel.ozaki_shard`` / the serving layer.
     ell_acc / ell_in: accumulator / input mantissa widths (Table 2).
     interpret: run Pallas kernels in interpret mode (CPU validation).
     tile: optional TilePlan with per-stage block shapes (core.tuning).
@@ -88,9 +99,11 @@ class OzakiConfig:
     num_splits: int = 9
     accum: str = "f64"
     backend: str = "xla"
+    fuse_epilogue: bool = False
     fuse_diagonals: bool = True
     concat_k: bool = False
     full_pairs: bool = False
+    shard_axis: Optional[str] = None
     ell_acc: int = 31
     ell_in: int = 7
     interpret: bool = True
@@ -109,180 +122,55 @@ class OzakiConfig:
 
     def diagonals(self) -> Sequence[tuple[int, Sequence[tuple[int, int]]]]:
         """0-based (t, [(p, q)...]) groups with t = p + q ascending."""
-        s = self.num_splits
-        t_max = 2 * s - 2 if self.full_pairs else s - 1
-        out = []
-        for t in range(t_max + 1):
-            pairs = [(p, t - p) for p in range(max(0, t - s + 1),
-                                               min(s - 1, t) + 1)]
-            out.append((t, pairs))
-        return out
+        return diagonal_groups(self.num_splits, self.full_pairs)
 
     @property
     def num_gemms(self) -> int:
         return sum(len(p) for _, p in self.diagonals())
 
-
-# ----------------------------------------------------------------------------
-# Stage 1 — split: f64/df32 matrix -> (s, m, k) int8 slices + row exponents
-# ----------------------------------------------------------------------------
-
-def _split_stage(m: jax.Array, cfg: OzakiConfig, w: int) -> SplitResult:
-    """Split a single-word float matrix (rows share the exponent)."""
-    if cfg.backend != "pallas_fused":
-        return split_int(m, cfg.num_splits, w)
-    from repro.kernels import fused_split_dw
-    exp = row_exponents(m)
-    kw = {} if cfg.tile is None else {"bm": cfg.tile.split_bm,
-                                      "bk": cfg.tile.split_bk}
-    slices = fused_split_dw(m, jnp.zeros_like(m), exp,
-                            num_splits=cfg.num_splits, w=w,
-                            interpret=cfg.interpret, **kw)
-    return SplitResult(slices, exp, w)
-
-
-def _split_stage_dw(m: DW, cfg: OzakiConfig, w: int) -> SplitResult:
-    """Split a double-word (df32) matrix."""
-    if cfg.backend != "pallas_fused":
-        return split_int_dw(m, cfg.num_splits, w)
-    from repro.kernels import fused_split_dw
-    exp = row_exponents(m.hi)
-    kw = {} if cfg.tile is None else {"bm": cfg.tile.split_bm,
-                                      "bk": cfg.tile.split_bk}
-    slices = fused_split_dw(m.hi, m.lo, exp, num_splits=cfg.num_splits,
-                            w=w, interpret=cfg.interpret, **kw)
-    return SplitResult(slices, exp, w)
+    def plan(self, batch_layout: str = "none") -> PipelinePlan:
+        """The PipelinePlan this config resolves to (see ``tuning``)."""
+        return plan_for(self, batch_layout=batch_layout)
 
 
 # ----------------------------------------------------------------------------
-# Stage 2 — int8 GEMMs: (m,k) int8 x (n,k) int8 -> (m,n) int32, contract on k
+# Driver helpers
 # ----------------------------------------------------------------------------
 
-def _gemm_xla(a8: jax.Array, bt8: jax.Array) -> jax.Array:
-    return jax.lax.dot_general(
-        a8, bt8, dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.int32)
+def _e_base(ea: jax.Array, eb: jax.Array) -> jax.Array:
+    """Deferred per-element exponent: broadcast outer sum (int32).
 
-
-def _get_gemm(cfg: OzakiConfig) -> Callable[[jax.Array, jax.Array], jax.Array]:
-    if cfg.backend in ("pallas", "pallas_fused"):
-        from repro.kernels import int8_gemm
-        kw = {"interpret": cfg.interpret}
-        if cfg.tile is not None:
-            kw.update(bm=cfg.tile.bm, bn=cfg.tile.bn, bk=cfg.tile.bk)
-        return functools.partial(int8_gemm.int8_matmul_nt, **kw)
-    if cfg.backend != "xla":
-        raise ValueError(f"unknown backend {cfg.backend!r}; "
-                         f"expected one of {BACKENDS}")
-    return _gemm_xla
-
-
-def _pair_products(sa: SplitResult, sb: SplitResult, cfg: OzakiConfig,
-                   gemm) -> list[tuple[int, jax.Array]]:
-    """Return [(t, P_t int32)] per anti-diagonal, smallest scale first."""
-    out = []
-    for t, pairs in cfg.diagonals():
-        if cfg.concat_k:
-            a_cat = jnp.concatenate([sa.slices[p] for p, _ in pairs], axis=1)
-            b_cat = jnp.concatenate([sb.slices[q] for _, q in pairs], axis=1)
-            p_t = gemm(a_cat, b_cat)
-        elif cfg.fuse_diagonals:
-            p_t = gemm(sa.slices[pairs[0][0]], sb.slices[pairs[0][1]])
-            for p, q in pairs[1:]:
-                p_t = p_t + gemm(sa.slices[p], sb.slices[q])
-        else:
-            # paper-faithful: keep pair products separate (caller scales each)
-            for p, q in pairs:
-                out.append((t, gemm(sa.slices[p], sb.slices[q])))
-            continue
-        out.append((t, p_t))
-    return out
-
-
-# ----------------------------------------------------------------------------
-# int32 -> df32 exact conversion (no int64 anywhere: TPU/x32 safe)
-# ----------------------------------------------------------------------------
-
-def int32_to_dw(p: jax.Array) -> DW:
-    low = jnp.bitwise_and(p, jnp.int32(0xFFFF))        # [0, 65535]
-    high = p - low                                      # multiple of 2^16
-    hi_f = high.astype(jnp.float32)                     # <= 15 sig bits: exact
-    lo_f = low.astype(jnp.float32)                      # <= 16 sig bits: exact
-    return dw_normalize(hi_f, lo_f)
-
-
-# ----------------------------------------------------------------------------
-# Stage 3 — high-precision scaled accumulation (line 7 of Alg. 3)
-# ----------------------------------------------------------------------------
-
-def _ordered(products):
-    return sorted(products, key=lambda tp: -tp[0])      # small terms first
-
-
-def _accum_f64(products, sa, sb, w, shape):
-    c = jnp.zeros(shape, jnp.float64)
-    e_base = sa.exp[:, None].astype(jnp.int32) + sb.exp[None, :].astype(jnp.int32)
-    for t, p_t in _ordered(products):
-        c = c + jnp.ldexp(p_t.astype(jnp.float64), e_base - (t + 2) * w)
-    return c
-
-
-def _accum_df32(products, sa, sb, w, shape) -> DW:
-    acc = DW(jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32))
-    for t, p_t in _ordered(products):
-        scale = jnp.float32(2.0 ** (-(t + 2) * w))      # exact power of two
-        term = int32_to_dw(p_t)
-        acc = dw_add(acc, DW(term.hi * scale, term.lo * scale))
-    e_base = sa.exp[:, None] + sb.exp[None, :]
-    hi = jnp.ldexp(acc.hi, e_base)
-    lo = jnp.ldexp(acc.lo, e_base)
-    return DW(hi, lo)
-
-
-def _accum_fused_f64(products, sa, sb, w, shape, cfg):
-    """Fused-kernel f64 accumulation — bitwise equal to ``_accum_f64``.
-
-    The deferred per-element exponent is exact (power-of-two scaling
-    commutes with rounding), so accumulating against the scalar
-    ``2^{-(t+2)w}`` and applying ``ldexp(·, e_A + e_B)`` once reproduces
-    the reference sum bit for bit.
+    ea: (..., m) row exponents of A; eb: (..., n) row exponents of B^T.
     """
-    from repro.kernels import accum_scaled_sw
-    kw = {"interpret": cfg.interpret}
-    if cfg.tile is not None:
-        kw.update(bm=cfg.tile.accum_bm, bn=cfg.tile.accum_bn)
-    c = jnp.zeros(shape, jnp.float64)
-    for t, p_t in _ordered(products):
-        c = accum_scaled_sw(p_t, c, scale=2.0 ** (-(t + 2) * w), **kw)
-    e_base = sa.exp[:, None].astype(jnp.int32) + sb.exp[None, :].astype(jnp.int32)
-    return jnp.ldexp(c, e_base)
+    return (ea[..., :, None].astype(jnp.int32) +
+            eb[..., None, :].astype(jnp.int32))
 
 
-def _accum_fused_df32(products, sa, sb, w, shape, cfg) -> DW:
-    """Fused-kernel df32 accumulation — bitwise equal to ``_accum_df32``."""
-    from repro.kernels import accum_scaled_dw
-    kw = {"interpret": cfg.interpret}
-    if cfg.tile is not None:
-        kw.update(bm=cfg.tile.accum_bm, bn=cfg.tile.accum_bn)
-    c_hi = jnp.zeros(shape, jnp.float32)
-    c_lo = jnp.zeros(shape, jnp.float32)
-    for t, p_t in _ordered(products):
-        c_hi, c_lo = accum_scaled_dw(p_t, c_hi, c_lo,
-                                     scale=2.0 ** (-(t + 2) * w), **kw)
-    e_base = sa.exp[:, None] + sb.exp[None, :]
-    return DW(jnp.ldexp(c_hi, e_base), jnp.ldexp(c_lo, e_base))
-
-
-def _accum_stage(products, sa, sb, w, shape, cfg: OzakiConfig):
-    """Dispatch the accumulation stage; returns f64 array or DW."""
-    fused = cfg.backend == "pallas_fused"
+def _from_dw(out, cfg: OzakiConfig):
+    """df32 accumulator -> the f64 the paper-mode entry points return."""
     if cfg.accum == "f64":
-        if fused:
-            return _accum_fused_f64(products, sa, sb, w, shape, cfg)
-        return _accum_f64(products, sa, sb, w, shape)
-    if fused:
-        return _accum_fused_df32(products, sa, sb, w, shape, cfg)
-    return _accum_df32(products, sa, sb, w, shape)
+        return out
+    return out.hi.astype(jnp.float64) + out.lo.astype(jnp.float64)
+
+
+def _check_dw_schedule(cfg: OzakiConfig, w: int) -> None:
+    if (cfg.num_splits + 1) * w > 120:
+        raise ValueError("split schedule underflows f32 scale range")
+
+
+def _fold_rows(split_fn, x3, w: int) -> SplitResult:
+    """Split a (B, r, k) stack by folding the batch into rows (exact:
+    exponents, slices and accumulation are all row-independent)."""
+    if isinstance(x3, DW):
+        bsz, r, k = x3.hi.shape
+        res = split_fn(DW(x3.hi.reshape(bsz * r, k),
+                          x3.lo.reshape(bsz * r, k)), w)
+    else:
+        bsz, r, k = x3.shape
+        res = split_fn(x3.reshape(bsz * r, k), w)
+    s = res.slices.shape[0]
+    return SplitResult(res.slices.reshape(s, bsz, r, k),
+                       res.exp.reshape(bsz, r), res.w)
 
 
 # ----------------------------------------------------------------------------
@@ -297,14 +185,12 @@ def ozaki_matmul(a: jax.Array, b: jax.Array,
                         "the TPU df32 path")
     k = a.shape[1]
     w = cfg.width_for(k)
-    sa = _split_stage(a, cfg, w)
-    sb = _split_stage(b.T, cfg, w)
-    gemm = _get_gemm(cfg)
-    products = _pair_products(sa, sb, cfg, gemm)
-    out = _accum_stage(products, sa, sb, w, (a.shape[0], b.shape[1]), cfg)
-    if cfg.accum == "f64":
-        return out
-    return out.hi.astype(jnp.float64) + out.lo.astype(jnp.float64)
+    ex = get_executor(cfg.plan())
+    sa = ex.split(a, w)
+    sb = ex.split(b.T, w)
+    out = ex.contract(sa, sb, w, _e_base(sa.exp, sb.exp),
+                      (a.shape[0], b.shape[1]))
+    return _from_dw(out, cfg)
 
 
 def ozaki_matmul_dw(a: DW, b_t: DW, cfg: OzakiConfig = OzakiConfig()) -> DW:
@@ -318,13 +204,12 @@ def ozaki_matmul_dw(a: DW, b_t: DW, cfg: OzakiConfig = OzakiConfig()) -> DW:
         cfg = dataclasses.replace(cfg, accum="df32")   # dw path IS df32
     k = a.shape[1]
     w = cfg.width_for(k)
-    if (cfg.num_splits + 1) * w > 120:
-        raise ValueError("split schedule underflows f32 scale range")
-    sa = _split_stage_dw(a, cfg, w)
-    sb = _split_stage_dw(b_t, cfg, w)
-    gemm = _get_gemm(cfg)
-    products = _pair_products(sa, sb, cfg, gemm)
-    return _accum_stage(products, sa, sb, w, (a.shape[0], b_t.shape[0]), cfg)
+    _check_dw_schedule(cfg, w)
+    ex = get_executor(cfg.plan())
+    sa = ex.split_dw(a, w)
+    sb = ex.split_dw(b_t, w)
+    return ex.contract(sa, sb, w, _e_base(sa.exp, sb.exp),
+                       (a.shape[0], b_t.shape[0]))
 
 
 # ----------------------------------------------------------------------------
@@ -340,6 +225,36 @@ def _matmul_any(a: jax.Array, b: jax.Array, cfg: OzakiConfig) -> jax.Array:
     return dw_to_single(out)
 
 
+def _batched_grid(a: jax.Array, b: jax.Array, cfg: OzakiConfig) -> jax.Array:
+    """Fully-batched pipeline with an explicit batch dimension.
+
+    Split folds the stack into rows, the GEMMs run the batch-grid kernel
+    (Pallas backends) or a batch-dim dot_general (xla), accumulation
+    broadcasts the (B, m, n) exponent base — bitwise identical to a
+    Python loop over the unbatched pipeline.
+    """
+    f64 = a.dtype == jnp.float64
+    if not f64 and cfg.accum != "df32":
+        cfg = dataclasses.replace(cfg, accum="df32")
+    bsz, m, k = a.shape
+    n = b.shape[-1]
+    w = cfg.width_for(k)
+    if not f64:
+        _check_dw_schedule(cfg, w)
+    ex = get_executor(cfg.plan(batch_layout="grid"))
+    b_t = jnp.swapaxes(b, 1, 2)                        # (B, n, k)
+    if f64:
+        sa = _fold_rows(ex.split, a, w)
+        sb = _fold_rows(ex.split, b_t, w)
+    else:
+        sa = _fold_rows(ex.split_dw, DW(a, jnp.zeros_like(a)), w)
+        sb = _fold_rows(ex.split_dw, DW(b_t, jnp.zeros_like(b_t)), w)
+    out = ex.contract(sa, sb, w, _e_base(sa.exp, sb.exp), (bsz, m, n))
+    if f64:
+        return _from_dw(out, cfg)
+    return dw_to_single(out)
+
+
 @functools.partial(jax.custom_jvp, nondiff_argnums=(2,))
 def _batched_core(a: jax.Array, b: jax.Array, cfg: OzakiConfig) -> jax.Array:
     if b.ndim == 2:
@@ -349,7 +264,7 @@ def _batched_core(a: jax.Array, b: jax.Array, cfg: OzakiConfig) -> jax.Array:
         bsz, m, k = a.shape
         out = _matmul_any(a.reshape(bsz * m, k), b, cfg)
         return out.reshape(bsz, m, b.shape[1])
-    return jax.vmap(lambda x, y: _matmul_any(x, y, cfg))(a, b)
+    return _batched_grid(a, b, cfg)
 
 
 @_batched_core.defjvp
@@ -406,17 +321,15 @@ def ozaki_matmul_complex(a: jax.Array, b: jax.Array,
     br, bi = jnp.real(b), jnp.imag(b)
     k = a.shape[1]
     w = cfg.width_for(k)
-    gemm = _get_gemm(cfg)
+    ex = get_executor(cfg.plan())
 
     def real_mm(x_split, y_split, shape):
-        products = _pair_products(x_split, y_split, cfg, gemm)
-        out = _accum_stage(products, x_split, y_split, w, shape, cfg)
-        if cfg.accum == "f64":
-            return out
-        return out.hi.astype(jnp.float64) + out.lo.astype(jnp.float64)
+        out = ex.contract(x_split, y_split, w,
+                          _e_base(x_split.exp, y_split.exp), shape)
+        return _from_dw(out, cfg)
 
     def split(x):
-        return _split_stage(x, cfg, w)
+        return ex.split(x, w)
 
     shape = (a.shape[0], b.shape[1])
     if algo == "3mul":

@@ -1,4 +1,19 @@
-"""Tile/schedule selection for the Ozaki pipeline (fused-backend planner).
+"""Planner for the Ozaki pipeline: tiles, schedule, and execution strategy.
+
+Two layers of planning live here:
+
+* ``TilePlan`` / ``select_plan`` — block shapes and split count from
+  operand shapes (the PR 1 tile planner, unchanged contract).
+* ``PipelinePlan`` / ``plan_for`` / ``select_pipeline_plan`` — the full
+  execution strategy for one GEMM shape: which executor runs the pipeline
+  (``backend``), how stages are fused (``fusion``: separate kernels,
+  stage-fused kernels, or the epilogue-fused GEMM that never materializes
+  int32 products), how a batch is laid out (``batch_layout``: folded into
+  rows, an explicit batch grid dimension, or absent), and which mesh axis
+  the reduction is sharded over (``shard_axis``). ``core.ozaki`` is a
+  thin driver: it builds (or receives) a ``PipelinePlan`` once per shape
+  and hands execution to the executor the plan selects
+  (``core.executors.get_executor``).
 
 Given operand shapes, this module picks (a) the number of splits from the
 analytic model in ``core.analytic`` and (b) Pallas block shapes for the
@@ -35,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Optional, Sequence
 
 # alignment vocabulary is owned by the kernels' shared launch layer, so
 # the planner's choices match shrink_block's exactly (repro.core imports
@@ -48,6 +64,10 @@ from .analytic import DGEMM_MANTISSA_SPACE, INT8_INT32, MMUSpec
 VMEM_BYTES = 16 * 2 ** 20
 VMEM_BUDGET = VMEM_BYTES // 2      # leave half for double buffering
 CONCAT_K_MAX = 2048                 # below this, slice GEMMs are launch-bound
+
+BACKENDS = ("xla", "pallas", "pallas_fused")
+FUSION_MODES = ("none", "stages", "epilogue")
+BATCH_LAYOUTS = ("none", "rows", "grid")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,8 +156,186 @@ def apply_plan(cfg, plan: TilePlan):
                                concat_k=plan.concat_k, tile=plan)
 
 
+# ----------------------------------------------------------------------------
+# Pipeline planning: the full execution strategy for one GEMM shape
+# ----------------------------------------------------------------------------
+
+def diagonal_groups(num_splits: int,
+                    full_pairs: bool = False
+                    ) -> Sequence[tuple[int, Sequence[tuple[int, int]]]]:
+    """0-based (t, [(p, q)...]) anti-diagonal groups with t = p + q.
+
+    The schedule vocabulary shared by ``OzakiConfig`` and ``PipelinePlan``:
+    the paper computes pairs with i + j <= s + 1 (``t <= s - 1`` 0-based);
+    ``full_pairs`` keeps all 2s - 1 diagonals.
+    """
+    s = num_splits
+    t_max = 2 * s - 2 if full_pairs else s - 1
+    out = []
+    for t in range(t_max + 1):
+        pairs = [(p, t - p) for p in range(max(0, t - s + 1),
+                                           min(s - 1, t) + 1)]
+        out.append((t, pairs))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    """Execution strategy for one Ozaki GEMM shape (hashable, serializable).
+
+    Built once per shape — by ``plan_for`` (reflecting an ``OzakiConfig``)
+    or ``select_pipeline_plan`` (from shapes alone) — and consumed by
+    ``core.executors``:
+
+    num_splits:   s (INT8xs operating point).
+    tile:         block shapes for every kernel launch (``TilePlan``; its
+                  own num_splits/schedule fields are advisory — the plan's
+                  top-level fields below are authoritative).
+    backend:      "xla" | "pallas" | "pallas_fused" — executor family.
+    fusion:       "none"     — every stage a separate op/kernel;
+                  "stages"   — one-pass split + fused accumulation kernels
+                               (the PR 1 ``pallas_fused`` pipeline);
+                  "epilogue" — GEMM and scaled accumulation in ONE kernel:
+                               int32 group products never reach HBM.
+    batch_layout: "none" — unbatched (m, k) x (k, n);
+                  "rows" — broadcast weights, batch folded into rows;
+                  "grid" — explicit batch grid dimension on every stage.
+    shard_axis:   mesh axis name the k (reduction) dim is sharded over, or
+                  None. Consumed by ``parallel.ozaki_shard`` composition
+                  and the model/serving layers; the executors themselves
+                  stay single-device (GSPMD inserts the collectives).
+    fuse_diagonals / concat_k / full_pairs / accum / interpret: the
+    schedule and numeric knobs, verbatim from the config.
+    """
+
+    num_splits: int = 9
+    tile: TilePlan = TilePlan()
+    backend: str = "xla"
+    fusion: str = "none"
+    batch_layout: str = "none"
+    shard_axis: Optional[str] = None
+    fuse_diagonals: bool = True
+    concat_k: bool = False
+    full_pairs: bool = False
+    accum: str = "f64"
+    interpret: bool = True
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"expected one of {BACKENDS}")
+        if self.fusion not in FUSION_MODES:
+            raise ValueError(f"unknown fusion {self.fusion!r}; "
+                             f"expected one of {FUSION_MODES}")
+        if self.batch_layout not in BATCH_LAYOUTS:
+            raise ValueError(f"unknown batch_layout {self.batch_layout!r}; "
+                             f"expected one of {BATCH_LAYOUTS}")
+        if self.accum not in ("f64", "df32"):
+            raise ValueError(f"unknown accum {self.accum!r}")
+        if self.fusion == "epilogue" and self.batch_layout == "grid":
+            raise ValueError("epilogue fusion has no batch-grid kernel; "
+                             "plan builders downgrade grid plans to "
+                             "fusion='stages'")
+
+    def diagonals(self):
+        return diagonal_groups(self.num_splits, self.full_pairs)
+
+    @property
+    def num_gemms(self) -> int:
+        return sum(len(p) for _, p in self.diagonals())
+
+    # --- serialization (deployment caches / cross-process handoff) -----
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PipelinePlan":
+        d = dict(d)
+        tile = d.get("tile")
+        if isinstance(tile, dict):
+            d["tile"] = TilePlan(**tile)
+        return cls(**d)
+
+
+def _fusion_for(backend: str, fuse_epilogue: bool, batch_layout: str) -> str:
+    if backend != "pallas_fused":
+        return "none"
+    # the epilogue kernel family is 2-D; a batch grid falls back to the
+    # stage-fused pipeline (batched GEMM kernel + fused accumulation)
+    if fuse_epilogue and batch_layout != "grid":
+        return "epilogue"
+    return "stages"
+
+
+def plan_for(cfg, *, batch_layout: str = "none") -> PipelinePlan:
+    """Reflect an ``OzakiConfig`` (duck-typed) into a ``PipelinePlan``.
+
+    ``cfg.tile=None`` keeps the kernels' MXU-aligned default blocks
+    (``TilePlan()`` matches the kernel defaults exactly); schedule flags
+    come from the config, never from the tile.
+    """
+    tile = cfg.tile if cfg.tile is not None else TilePlan(
+        num_splits=cfg.num_splits, fuse_diagonals=cfg.fuse_diagonals,
+        concat_k=cfg.concat_k)
+    return PipelinePlan(
+        num_splits=cfg.num_splits, tile=tile, backend=cfg.backend,
+        fusion=_fusion_for(cfg.backend, getattr(cfg, "fuse_epilogue", False),
+                           batch_layout),
+        batch_layout=batch_layout,
+        shard_axis=getattr(cfg, "shard_axis", None),
+        fuse_diagonals=cfg.fuse_diagonals, concat_k=cfg.concat_k,
+        full_pairs=cfg.full_pairs, accum=cfg.accum, interpret=cfg.interpret)
+
+
+def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
+                         broadcast_weights: bool = False,
+                         backend: str = "pallas_fused", accum: str = "df32",
+                         num_splits: int | None = None,
+                         fuse_epilogue: bool = True,
+                         shard_axis: Optional[str] = None,
+                         interpret: bool = True,
+                         mantissa_space: int = DGEMM_MANTISSA_SPACE,
+                         mmu: MMUSpec = INT8_INT32,
+                         vmem_budget: int = VMEM_BUDGET) -> PipelinePlan:
+    """Build the full execution strategy from shapes alone.
+
+    ``batch``/``broadcast_weights`` describe the batched API's operands:
+    broadcast weights fold the batch into rows (tiles are sized for the
+    folded ``batch * m`` row extent — one big GEMM), a stacked-weights
+    batch becomes an explicit grid dimension (and disables ``concat_k``,
+    whose concatenated operands would be materialized per batch row).
+    """
+    if batch <= 1 and not broadcast_weights:
+        layout = "none"
+    elif broadcast_weights:
+        layout = "rows"
+    else:
+        layout = "grid"
+    m_eff = m * batch if layout == "rows" else m
+    tile = select_plan(m_eff, n, k, batch=batch if layout == "grid" else 1,
+                       num_splits=num_splits, mantissa_space=mantissa_space,
+                       mmu=mmu, vmem_budget=vmem_budget)
+    return PipelinePlan(
+        num_splits=tile.num_splits, tile=tile, backend=backend,
+        fusion=_fusion_for(backend, fuse_epilogue, layout),
+        batch_layout=layout, shard_axis=shard_axis,
+        fuse_diagonals=tile.fuse_diagonals, concat_k=tile.concat_k,
+        accum=accum, interpret=interpret)
+
+
+def apply_pipeline_plan(cfg, plan: PipelinePlan):
+    """Fold a PipelinePlan back into an OzakiConfig-shaped dataclass."""
+    return dataclasses.replace(
+        cfg, num_splits=plan.num_splits, backend=plan.backend,
+        fuse_diagonals=plan.fuse_diagonals, concat_k=plan.concat_k,
+        full_pairs=plan.full_pairs, accum=plan.accum, tile=plan.tile,
+        fuse_epilogue=(plan.fusion == "epilogue"),
+        shard_axis=plan.shard_axis, interpret=plan.interpret)
+
+
 def hbm_pass_model(num_splits: int, *, fused: bool,
-                   fuse_diagonals: bool = True) -> dict:
+                   fuse_diagonals: bool = True,
+                   fuse_epilogue: bool = False) -> dict:
     """Modeled HBM round-trips per stage for one operand/output matrix.
 
     Counts *array passes* (each read or write of a full matrix-sized
@@ -148,13 +346,21 @@ def hbm_pass_model(num_splits: int, *, fused: bool,
       (``s`` passes) while the one-pass kernel reads the input once.
     * accum — the unfused path materializes the int32->float conversion
       and the scaled term before the compensated add (2 extra passes per
-      accumulation group); the fused kernel does conversion + scale +
-      add in registers within one VMEM pass.
+      accumulation group); the stage-fused kernel does conversion + scale
+      + add in registers within one VMEM pass but still reads the int32
+      group product the GEMM materialized; the epilogue-fused GEMM
+      (``fuse_epilogue=True``, implies ``fused``) accumulates inside the
+      GEMM grid so the int32 product never round-trips at all — only the
+      carried C read/write remains.
     """
+    fused = fused or fuse_epilogue      # epilogue fusion implies fused
     s = num_splits
     groups = s if fuse_diagonals else s * (s + 1) // 2
     split_passes = 1 if fused else s
-    # per group: read P + read/write C(hi,lo); unfused adds temp traffic
-    accum_passes = groups * (3 if fused else 5)
+    if fuse_epilogue:
+        accum_passes = groups * 2        # read C + write C, nothing else
+    else:
+        # per group: read P + read/write C(hi,lo); unfused adds temp traffic
+        accum_passes = groups * (3 if fused else 5)
     return {"split": split_passes, "accum": accum_passes,
             "total": split_passes + accum_passes}

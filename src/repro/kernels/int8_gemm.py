@@ -17,6 +17,16 @@ Ozaki API's fully-batched case); the per-(batch, m, n) k-loop is
 unchanged. Launch bookkeeping (block shrink, padding, grid) comes from
 the shared ``launch`` layer.
 
+``int8_matmul_nt_epilogue_{sw,dw}`` are the epilogue-fused variants used
+by the ``fusion="epilogue"`` executor: the int32 slice products of one
+anti-diagonal group accumulate in a VMEM scratch block across a
+(pairs, k) grid walk and are folded into the carried high-precision
+accumulator C inside the GEMM grid's epilogue — the int32 products never
+round-trip to HBM (see ``core.tuning.hbm_pass_model``). The epilogue
+runs the exact rounding sequence of the standalone accumulation kernels
+(``ozaki_accum.dw_accum_step`` / the single rounded f64 add), so results
+stay bitwise identical to the ``xla`` reference pipeline.
+
 Validated on CPU in interpret mode against ``ref.int8_matmul_nt_ref``.
 """
 from __future__ import annotations
@@ -26,8 +36,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from .launch import LANE, SUBLANE_I8, grid_for, pad_tail, shrink_block
+from .launch import gemm_blocks, grid_for, pad_tail
+from .ozaki_accum import dw_accum_step
 
 
 def _kernel(a_ref, b_ref, o_ref):
@@ -54,11 +66,7 @@ def int8_matmul_nt(a: jax.Array, b_t: jax.Array, *, bm: int = 256,
     m, k = a.shape
     n, k2 = b_t.shape
     assert k == k2, (a.shape, b_t.shape)
-    # bm: sublane of the int8 A tile (32); bn: sublane of the int8 B tile
-    # AND lane dim of the int32 C tile, so the stricter 128 applies.
-    bm_ = shrink_block(bm, m, SUBLANE_I8)
-    bn_ = shrink_block(bn, n, LANE)
-    bk_ = shrink_block(bk, k, LANE)
+    bm_, bn_, bk_ = gemm_blocks(m, n, k, bm, bn, bk)
     a_p = pad_tail(a, (bm_, bk_))
     b_p = pad_tail(b_t, (bn_, bk_))
     mp, kp = a_p.shape
@@ -107,9 +115,7 @@ def int8_matmul_nt_batched(a: jax.Array, b_t: jax.Array, *, bm: int = 256,
     B, m, k = a.shape
     B2, n, k2 = b_t.shape
     assert B == B2 and k == k2, (a.shape, b_t.shape)
-    bm_ = shrink_block(bm, m, SUBLANE_I8)
-    bn_ = shrink_block(bn, n, LANE)
-    bk_ = shrink_block(bk, k, LANE)
+    bm_, bn_, bk_ = gemm_blocks(m, n, k, bm, bn, bk)
     a_p = pad_tail(a, (bm_, bk_))
     b_p = pad_tail(b_t, (bn_, bk_))
     _, mp, kp = a_p.shape
@@ -127,3 +133,143 @@ def int8_matmul_nt_batched(a: jax.Array, b_t: jax.Array, *, bm: int = 256,
         interpret=interpret,
     )(a_p, b_p)
     return out[:, :m, :n]
+
+
+# ----------------------------------------------------------------------------
+# Epilogue-fused variants: GEMM + scaled high-precision accumulation in one
+# launch. One call per anti-diagonal group; the int32 group product lives
+# only in a VMEM scratch block.
+# ----------------------------------------------------------------------------
+#
+# Grid is (m/bm, n/bn, npairs, k/bk) with the C block index a function of
+# (i, j) only, so for each output block the whole (pairs, k) walk happens
+# while C stays resident. Slice operands are indexed affinely in the pair
+# dimension: A uses slice ``p_lo + pp``, B uses ``t - p_lo - pp`` — exactly
+# the anti-diagonal's (p, q = t - p) pairs. The int32 scratch accumulator
+# is exact (alpha reserves diagonal-fusion headroom), so the epilogue sees
+# the same group product P_t the unfused pipeline materializes to HBM.
+
+
+def _epilogue_kernel_sw(scale, npairs, nk, a_ref, b_ref, c_ref, o_ref,
+                        acc_ref):
+    pp = pl.program_id(2)
+    kk = pl.program_id(3)
+
+    @pl.when((pp == 0) & (kk == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[0], b_ref[0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when((pp == npairs - 1) & (kk == nk - 1))
+    def _epilogue():
+        c = c_ref[...]
+        # int32 -> f64 exact; scale an exact power of two: ONE rounding,
+        # matching ``_accum_f64`` / ``accum_scaled_sw`` bitwise.
+        o_ref[...] = c + acc_ref[...].astype(c.dtype) * jnp.asarray(
+            scale, c.dtype)
+
+
+def _epilogue_kernel_dw(scale, npairs, nk, a_ref, b_ref, chi_ref, clo_ref,
+                        ohi_ref, olo_ref, acc_ref):
+    pp = pl.program_id(2)
+    kk = pl.program_id(3)
+
+    @pl.when((pp == 0) & (kk == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[0], b_ref[0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when((pp == npairs - 1) & (kk == nk - 1))
+    def _epilogue():
+        n_hi, n_lo = dw_accum_step(acc_ref[...], chi_ref[...], clo_ref[...],
+                                   scale)
+        ohi_ref[...] = n_hi
+        olo_ref[...] = n_lo
+
+
+def _epilogue_launch(a_slices, b_slices, c_arrays, kernel, *, p_lo, t,
+                     npairs, scale, bm, bn, bk, interpret):
+    """Shared launch recipe for both epilogue variants.
+
+    c_arrays: list of (m, n) accumulator planes (1 for sw, 2 for dw),
+    donated and carried through ``input_output_aliases``.
+    """
+    s, m, k = a_slices.shape
+    s2, n, k2 = b_slices.shape
+    assert k == k2, (a_slices.shape, b_slices.shape)
+    assert 0 <= p_lo and p_lo + npairs <= s, (p_lo, npairs, s)
+    assert 0 <= t - p_lo - (npairs - 1) and t - p_lo < s2, (p_lo, t, npairs)
+    bm_, bn_, bk_ = gemm_blocks(m, n, k, bm, bn, bk)
+    a_p = pad_tail(a_slices, (bm_, bk_))
+    b_p = pad_tail(b_slices, (bn_, bk_))
+    c_p = [pad_tail(c, (bm_, bn_)) for c in c_arrays]
+    _, mp, kp = a_p.shape
+    _, np_, _ = b_p.shape
+    gm, gn, gk = grid_for((mp, np_, kp), (bm_, bn_, bk_))
+    nc = len(c_p)
+    c_spec = pl.BlockSpec((bm_, bn_), lambda i, j, pp, kk: (i, j))
+    outs = pl.pallas_call(
+        functools.partial(kernel, scale, npairs, gk),
+        grid=(gm, gn, npairs, gk),
+        in_specs=[
+            pl.BlockSpec((1, bm_, bk_),
+                         lambda i, j, pp, kk: (p_lo + pp, i, kk)),
+            pl.BlockSpec((1, bn_, bk_),
+                         lambda i, j, pp, kk: (t - p_lo - pp, j, kk)),
+        ] + [c_spec] * nc,
+        out_specs=[c_spec] * nc,
+        out_shape=[jax.ShapeDtypeStruct((mp, np_), c.dtype) for c in c_p],
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
+        input_output_aliases={2 + i: i for i in range(nc)},
+        interpret=interpret,
+    )(a_p, b_p, *c_p)
+    return [o[:m, :n] for o in outs]
+
+
+@functools.partial(jax.jit, static_argnames=("p_lo", "t", "npairs", "scale",
+                                             "bm", "bn", "bk", "interpret"))
+def int8_matmul_nt_epilogue_sw(a_slices: jax.Array, b_slices: jax.Array,
+                               c: jax.Array, *, p_lo: int, t: int,
+                               npairs: int, scale: float, bm: int = 256,
+                               bn: int = 256, bk: int = 512,
+                               interpret: bool = True) -> jax.Array:
+    """c += (sum_pp A[p_lo+pp] @ B[t-p_lo-pp].T) * scale, epilogue-fused.
+
+    a_slices: (s, m, k) int8; b_slices: (s, n, k) int8; c: (m, n) float
+    (f64 on CPU oracle hosts). One launch covers one anti-diagonal group.
+    """
+    assert a_slices.dtype == jnp.int8 and b_slices.dtype == jnp.int8
+    (out,) = _epilogue_launch(a_slices, b_slices, [c], _epilogue_kernel_sw,
+                              p_lo=p_lo, t=t, npairs=npairs, scale=scale,
+                              bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("p_lo", "t", "npairs", "scale",
+                                             "bm", "bn", "bk", "interpret"))
+def int8_matmul_nt_epilogue_dw(a_slices: jax.Array, b_slices: jax.Array,
+                               c_hi: jax.Array, c_lo: jax.Array, *,
+                               p_lo: int, t: int, npairs: int, scale: float,
+                               bm: int = 256, bn: int = 256, bk: int = 512,
+                               interpret: bool = True
+                               ) -> tuple[jax.Array, jax.Array]:
+    """(c_hi, c_lo) += df32(group product) * scale, epilogue-fused.
+
+    The compensated df32 add is ``ozaki_accum.dw_accum_step`` — the same
+    rounding sequence as the standalone fused accumulation kernel, so the
+    epilogue pipeline stays bitwise identical to the XLA reference.
+    """
+    assert a_slices.dtype == jnp.int8 and b_slices.dtype == jnp.int8
+    o_hi, o_lo = _epilogue_launch(a_slices, b_slices, [c_hi, c_lo],
+                                  _epilogue_kernel_dw, p_lo=p_lo, t=t,
+                                  npairs=npairs, scale=scale, bm=bm, bn=bn,
+                                  bk=bk, interpret=interpret)
+    return o_hi, o_lo

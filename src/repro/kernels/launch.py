@@ -52,3 +52,30 @@ def grid_for(shape: tuple[int, ...], blocks: tuple[int, ...]) -> tuple[int, ...]
     """Dense grid over padded ``shape`` (must divide exactly)."""
     assert all(d % b == 0 for d, b in zip(shape, blocks)), (shape, blocks)
     return tuple(d // b for d, b in zip(shape, blocks))
+
+
+# ----------------------------------------------------------------------------
+# Named block recipes — one per kernel family, so every launch site agrees
+# on the alignment rules (the planner in ``repro.core.tuning`` mirrors them).
+# ----------------------------------------------------------------------------
+
+def gemm_blocks(m: int, n: int, k: int, bm: int, bn: int,
+                bk: int) -> tuple[int, int, int]:
+    """Blocks for the int8 NT GEMM family: (m, k) x (n, k) -> (m, n).
+
+    bm/bn are sublane dims of int8 operand tiles; bn doubles as the lane
+    dim of the int32 (or float, for the epilogue-fused variants) output
+    tile, so the stricter 128 alignment applies to it and to bk.
+    """
+    return (shrink_block(bm, m, SUBLANE_I8), shrink_block(bn, n, LANE),
+            shrink_block(bk, k, LANE))
+
+
+def int8_tile_blocks(m: int, k: int, bm: int, bk: int) -> tuple[int, int]:
+    """Blocks for kernels tiled over an (m, k) int8-output matrix (split)."""
+    return shrink_block(bm, m, SUBLANE_I8), shrink_block(bk, k, LANE)
+
+
+def elementwise_blocks(m: int, n: int, bm: int, bn: int) -> tuple[int, int]:
+    """Blocks for elementwise (m, n) kernels over 4-byte dtypes (accum)."""
+    return shrink_block(bm, m, SUBLANE_F32), shrink_block(bn, n, LANE)

@@ -8,11 +8,15 @@ from __future__ import annotations
 
 import jax
 
-from .int8_gemm import int8_matmul_nt, int8_matmul_nt_batched
+from .int8_gemm import (int8_matmul_nt, int8_matmul_nt_batched,
+                        int8_matmul_nt_epilogue_dw,
+                        int8_matmul_nt_epilogue_sw)
 from .ozaki_accum import accum_scaled_dw, accum_scaled_sw
 from .ozaki_split import fused_split_dw
 
 INTERPRET = jax.default_backend() != "tpu"
 
-__all__ = ["int8_matmul_nt", "int8_matmul_nt_batched", "fused_split_dw",
-           "accum_scaled_dw", "accum_scaled_sw", "INTERPRET"]
+__all__ = ["int8_matmul_nt", "int8_matmul_nt_batched",
+           "int8_matmul_nt_epilogue_dw", "int8_matmul_nt_epilogue_sw",
+           "fused_split_dw", "accum_scaled_dw", "accum_scaled_sw",
+           "INTERPRET"]

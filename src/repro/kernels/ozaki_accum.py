@@ -31,14 +31,21 @@ from jax.experimental import pallas as pl
 
 from repro.core.xmath import two_sum
 
-from .launch import LANE, SUBLANE_F32, grid_for, pad_tail, shrink_block
+from .launch import elementwise_blocks, grid_for, pad_tail
 
 
-def _accum_kernel(scale: float, p_ref, chi_ref, clo_ref, ohi_ref, olo_ref):
-    p = p_ref[...]
-    # exact int32 -> df32 (16-bit split; no int64 anywhere), then
-    # normalize (fast_two_sum) so |lo| <= ulp(hi)/2 before the compensated
-    # add — skipping this costs ~3 decimal digits over a full scheme.
+def dw_accum_step(p, c_hi, c_lo, scale: float):
+    """One fused df32 accumulation: (c_hi, c_lo) += df32(p) * scale.
+
+    The exact rounding sequence shared by ``accum_scaled_dw`` and the
+    epilogue-fused GEMM (``int8_gemm.int8_matmul_nt_epilogue_dw``) — both
+    paths MUST stay bitwise identical to the XLA reference accumulation,
+    so the sequence lives in exactly one place.
+
+    Steps: exact int32 -> df32 (16-bit split; no int64 anywhere), then
+    normalize (fast_two_sum) so |lo| <= ulp(hi)/2 before the compensated
+    add — skipping the normalize costs ~3 decimal digits over a scheme.
+    """
     low = jnp.bitwise_and(p, jnp.int32(0xFFFF))
     high = p - low
     hi_f = high.astype(jnp.float32)
@@ -48,8 +55,6 @@ def _accum_kernel(scale: float, p_ref, chi_ref, clo_ref, ohi_ref, olo_ref):
     t_hi = n_s * jnp.float32(scale)
     t_lo = n_e * jnp.float32(scale)
     # compensated (c_hi, c_lo) += (t_hi, t_lo)
-    c_hi = chi_ref[...]
-    c_lo = clo_ref[...]
     s_hi, e_hi = two_sum(c_hi, t_hi)
     s_lo, e_lo = two_sum(c_lo, t_lo)
     c = e_hi + s_lo
@@ -58,12 +63,13 @@ def _accum_kernel(scale: float, p_ref, chi_ref, clo_ref, ohi_ref, olo_ref):
     w = e_lo + v_lo
     n_hi = v_hi + w
     n_lo = w - (n_hi - v_hi)
+    return n_hi, n_lo
+
+
+def _accum_kernel(scale: float, p_ref, chi_ref, clo_ref, ohi_ref, olo_ref):
+    n_hi, n_lo = dw_accum_step(p_ref[...], chi_ref[...], clo_ref[...], scale)
     ohi_ref[...] = n_hi
     olo_ref[...] = n_lo
-
-
-def _launch_blocks(m: int, n: int, bm: int, bn: int):
-    return shrink_block(bm, m, SUBLANE_F32), shrink_block(bn, n, LANE)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "interpret"))
@@ -72,7 +78,7 @@ def accum_scaled_dw(p: jax.Array, c_hi: jax.Array, c_lo: jax.Array, *,
                     interpret: bool = True) -> tuple[jax.Array, jax.Array]:
     """(c_hi, c_lo) += df32(p) * scale, elementwise, fused in VMEM."""
     m, n = p.shape
-    bm_, bn_ = _launch_blocks(m, n, bm, bn)
+    bm_, bn_ = elementwise_blocks(m, n, bm, bn)
     p = pad_tail(p, (bm_, bn_))
     c_hi = pad_tail(c_hi, (bm_, bn_))
     c_lo = pad_tail(c_lo, (bm_, bn_))
@@ -108,7 +114,7 @@ def accum_scaled_sw(p: jax.Array, c: jax.Array, *, scale: float,
     bitwise, because the deferred ``ldexp(·, e_A + e_B)`` is exact.
     """
     m, n = p.shape
-    bm_, bn_ = _launch_blocks(m, n, bm, bn)
+    bm_, bn_ = elementwise_blocks(m, n, bm, bn)
     p = pad_tail(p, (bm_, bn_))
     c = pad_tail(c, (bm_, bn_))
     mp, np_ = p.shape

@@ -27,7 +27,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.xmath import two_sum
 
-from .launch import LANE, SUBLANE_I8, grid_for, pad_tail, shrink_block
+from .launch import grid_for, int8_tile_blocks, pad_tail
 
 
 def _split_kernel(num_splits: int, w: int, hi_ref, lo_ref, exp_ref, out_ref):
@@ -64,8 +64,7 @@ def fused_split_dw(hi: jax.Array, lo: jax.Array, exp: jax.Array, *,
     """All-slices-in-one-pass SplitInt. Returns (s, m, k) int8."""
     m, k = hi.shape
     # bm is the second-to-last dim of the int8 OUTPUT block: 32-sublane.
-    bm_ = shrink_block(bm, m, SUBLANE_I8)
-    bk_ = shrink_block(bk, k, LANE)
+    bm_, bk_ = int8_tile_blocks(m, k, bm, bk)
     hi = pad_tail(hi, (bm_, bk_))
     lo = pad_tail(lo, (bm_, bk_))
     exp = pad_tail(exp, (bm_,))

@@ -97,7 +97,8 @@ def _matmul_int8_quant(x, w):
     return acc.astype(jnp.float32) * xs * ws
 
 
-def _matmul_ozaki(x, w, num_splits: int, backend: str = "xla"):
+def _matmul_ozaki(x, w, num_splits: int, backend: str = "xla",
+                  fuse_epilogue: bool = False, shard_axis: str = ""):
     """The paper's path: FP64-accurate x @ w out of int8 MXU GEMMs.
 
     x: (..., k) f32, w: (k, n) f32, deployable on TPU ({int8, int32, f32}
@@ -106,6 +107,18 @@ def _matmul_ozaki(x, w, num_splits: int, backend: str = "xla"):
     ``ozaki_matmul_batched``'s broadcast-weights route (the batch folds
     into rows: ONE slice GEMM per anti-diagonal for the whole batch);
     other ranks flatten leading dims onto the df32 matmul directly.
+    ``shard_axis`` k-shards the contraction over the registered shard
+    mesh (``parallel.ozaki_shard``) — a no-op when no mesh is active.
+
+    Sharding hints are applied ONLY to plain 2-D matmul calls, the path
+    verified bitwise-safe under the constraints. Projections inside the
+    transformer stack (3-D prefill AND decode shapes) run unsharded for
+    now: sharding constraints inside the model's layer/attention scans
+    produce wrong logits on the pinned jax version (an XLA SPMD
+    numerical bug, reproduced with pure-XLA backends too — see
+    ROADMAP.md). Pod-scale sharded serving of the GEMM itself goes
+    through ``parallel.ozaki_shard.ozaki_matmul_kshard_auto``, which
+    owns its jit and is bitwise-verified on the mesh.
     """
     from repro.core.ozaki import (OzakiConfig, ozaki_matmul_batched,
                                   ozaki_matmul_dw)
@@ -115,6 +128,8 @@ def _matmul_ozaki(x, w, num_splits: int, backend: str = "xla"):
     # INTERPRET follows the backend: interpret-mode on CPU validation
     # hosts, real Mosaic lowering on TPU deployments.
     cfg = OzakiConfig(num_splits=num_splits, accum="df32", backend=backend,
+                      fuse_epilogue=fuse_epilogue,
+                      shard_axis=shard_axis or None,
                       fuse_diagonals=True, interpret=INTERPRET)
     x = x.astype(jnp.float32)
     w = w.astype(jnp.float32)
@@ -123,6 +138,9 @@ def _matmul_ozaki(x, w, num_splits: int, backend: str = "xla"):
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
+    if shard_axis and x.ndim == 2:             # plain 2-D matmuls only
+        from repro.parallel.ozaki_shard import constrain_batched_kshard
+        x2, w = constrain_batched_kshard(x2, w, shard_axis)
     out = ozaki_matmul_dw(DW(x2, jnp.zeros_like(x2)),
                           DW(w.T, jnp.zeros_like(w.T)), cfg)
     return dw_to_single(out).reshape(*lead, w.shape[1])
@@ -141,7 +159,9 @@ def policy_matmul(cfg, x: jax.Array, w: jax.Array) -> jax.Array:
     if p == "ozaki_fp64":
         return _matmul_ozaki(x.astype(jnp.float32), w.astype(jnp.float32),
                              cfg.ozaki_splits,
-                             getattr(cfg, "ozaki_backend", "xla"))
+                             getattr(cfg, "ozaki_backend", "xla"),
+                             getattr(cfg, "ozaki_fuse_epilogue", False),
+                             getattr(cfg, "ozaki_shard_axis", ""))
     raise ValueError(f"unknown matmul_precision {p!r}")
 
 

@@ -28,18 +28,28 @@ Three collective schedules:
     high-precision accumulation runs on 1/P of the columns per chip.
     C comes out sharded (m@m_axis, n@axis) — the natural layout for a
     GEMM feeding the next sharded operator (beyond-paper O4c; §Perf).
+
+Batched composition: ``ozaki_matmul_kshard_auto`` accepts the batched
+API's operand ranks ((B, m, k) activations with stacked or broadcast
+weights) and records the axis on the config so the ``PipelinePlan``
+carries it; ``constrain_batched_kshard`` + the ``set_shard_mesh`` /
+``use_shard_mesh`` registry are the in-trace composition points the
+model/serving layers use for ``ArchConfig.ozaki_shard_axis``.
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import functools
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.ozaki import OzakiConfig, _gemm_xla, int32_to_dw
+from repro.core.executors import gemm_xla, int32_to_dw
+from repro.core.ozaki import OzakiConfig
 from repro.core.splitting import row_exponents, slice_width, split_int
 from repro.core.xmath import DW, dw_add
 
@@ -48,9 +58,9 @@ def _local_diag_products(sa, sb, cfg: OzakiConfig):
     """[(t, int32 product)] per anti-diagonal from local slices."""
     out = []
     for t, pairs in cfg.diagonals():
-        p_t = _gemm_xla(sa.slices[pairs[0][0]], sb.slices[pairs[0][1]])
+        p_t = gemm_xla(sa.slices[pairs[0][0]], sb.slices[pairs[0][1]])
         for pth, qth in pairs[1:]:
-            p_t = p_t + _gemm_xla(sa.slices[pth], sb.slices[qth])
+            p_t = p_t + gemm_xla(sa.slices[pth], sb.slices[qth])
         out.append((t, p_t))
     return out
 
@@ -155,16 +165,98 @@ def distributed_ozaki_matmul(a: jax.Array, b: jax.Array, mesh: Mesh,
     return DW(*out) if cfg.accum == "df32" else out
 
 
+def kshard_specs(a_ndim: int, b_ndim: int, axis: str) -> tuple[P, P]:
+    """PartitionSpecs placing the contraction (k) dim on ``axis``.
+
+    Handles every operand rank of the (batched) Ozaki API: a is
+    (m, k) or (B, m, k); b is (k, n) or (B, k, n).
+    """
+    a_spec = P(None, None, axis) if a_ndim == 3 else P(None, axis)
+    b_spec = P(None, axis, None) if b_ndim == 3 else P(axis, None)
+    return a_spec, b_spec
+
+
 def ozaki_matmul_kshard_auto(a: jax.Array, b: jax.Array, mesh: Mesh,
                              cfg: OzakiConfig = OzakiConfig(),
-                             axis: str = "model") -> jax.Array:
-    """Paper-faithful distributed baseline: plain ``ozaki_matmul`` under
-    jit with k-sharded inputs — GSPMD inserts the collectives (f64
-    all-reduce of scaled partials). Reproducible only per mesh shape.
+                             axis: Optional[str] = None) -> jax.Array:
+    """Paper-faithful distributed baseline: the (batched) Ozaki pipeline
+    under jit with k-sharded inputs — GSPMD inserts the collectives.
+    Reproducible only per mesh shape.
+
+    3-D ``a`` routes through ``ozaki_matmul_batched`` (stacked or
+    broadcast ``b``), composing the batched API with k-sharding: the
+    executor pipeline is unchanged, only the operand layout differs. The
+    resolved axis is recorded on the config (``shard_axis``), so the
+    ``PipelinePlan`` built inside the jitted computation carries it.
     """
-    from repro.core.ozaki import ozaki_matmul
-    fn = jax.jit(functools.partial(ozaki_matmul, cfg=cfg),
-                 in_shardings=(NamedSharding(mesh, P(None, axis)),
-                               NamedSharding(mesh, P(axis, None))),
-                 out_shardings=NamedSharding(mesh, P(None, None)))
+    from repro.core.ozaki import ozaki_matmul, ozaki_matmul_batched
+    axis = axis or cfg.shard_axis or "model"
+    cfg = dataclasses.replace(cfg, shard_axis=axis)
+    impl = ozaki_matmul_batched if a.ndim == 3 else ozaki_matmul
+    a_spec, b_spec = kshard_specs(a.ndim, b.ndim, axis)
+    out_spec = P(*([None] * a.ndim))
+    fn = jax.jit(functools.partial(impl, cfg=cfg),
+                 in_shardings=(NamedSharding(mesh, a_spec),
+                               NamedSharding(mesh, b_spec)),
+                 out_shardings=NamedSharding(mesh, out_spec))
     return fn(a, b)
+
+
+# ----------------------------------------------------------------------------
+# Deployment wiring: an ambient shard mesh + in-trace sharding hints, so the
+# model/serving layers can honor ``ozaki_shard_axis`` without threading a
+# Mesh through every projection call.
+# ----------------------------------------------------------------------------
+
+_SHARD_MESH: list = [None]
+
+
+def set_shard_mesh(mesh: Optional[Mesh]) -> None:
+    """Register (or clear, with None) the deployment's shard mesh.
+
+    Trace-time semantics: the registry is read while a jitted function
+    TRACES, not when it runs — register the mesh before the first call
+    of any jitted step that should honor it (a cached executable traced
+    without a mesh stays unsharded until a shape change retraces it).
+    The serving engine scopes its mesh around every tick
+    (``use_shard_mesh``), which covers the first trace by construction.
+    """
+    _SHARD_MESH[0] = mesh
+
+
+def active_shard_mesh() -> Optional[Mesh]:
+    return _SHARD_MESH[0]
+
+
+@contextlib.contextmanager
+def use_shard_mesh(mesh: Optional[Mesh]):
+    prev = _SHARD_MESH[0]
+    _SHARD_MESH[0] = mesh
+    try:
+        yield mesh
+    finally:
+        _SHARD_MESH[0] = prev
+
+
+def _constrain(x: jax.Array, sharding: NamedSharding) -> jax.Array:
+    if isinstance(x, jax.core.Tracer):          # inside jit: GSPMD hint
+        return jax.lax.with_sharding_constraint(x, sharding)
+    return jax.device_put(x, sharding)          # eager: reshard now
+
+
+def constrain_batched_kshard(a: jax.Array, b: jax.Array, axis: str,
+                             mesh: Optional[Mesh] = None
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Pin the k dim of a (batched) matmul's operands to ``mesh[axis]``.
+
+    The in-trace composition point for ``OzakiConfig.shard_axis`` /
+    ``ArchConfig.ozaki_shard_axis``: unlike ``ozaki_matmul_kshard_auto``
+    (which owns its jit), this works inside an already-traced model step.
+    No-op when no mesh is registered or the axis is absent from it.
+    """
+    mesh = mesh if mesh is not None else active_shard_mesh()
+    if mesh is None or axis not in mesh.axis_names:
+        return a, b
+    a_spec, b_spec = kshard_specs(a.ndim, b.ndim, axis)
+    return (_constrain(a, NamedSharding(mesh, a_spec)),
+            _constrain(b, NamedSharding(mesh, b_spec)))

@@ -10,16 +10,27 @@ Finished rows free their slot immediately, so new requests join mid-
 flight without draining the batch.
 
 Matmul precision: the engine can override the model config's
-``matmul_precision`` / ``ozaki_backend`` per deployment (e.g. serve an
-FP64-accurate variant of a checkpoint without a new config). With
+``matmul_precision`` / ``ozaki_backend`` / ``ozaki_fuse_epilogue`` /
+``ozaki_shard_axis`` per deployment (e.g. serve an FP64-accurate variant
+of a checkpoint without a new config). With
 ``matmul_precision="ozaki_fp64"`` every dense projection in the batched
 decode step is a ``(num_slots, 1, k) @ (k, n)`` matmul against shared
 weights — exactly ``ozaki_matmul_batched``'s broadcast-weights case, so
 the whole batch shares one set of slice GEMMs per projection
 (``models.layers._matmul_ozaki`` routes 3-D activations there).
+``ozaki_fuse_epilogue`` selects the epilogue-fused GEMM+accumulate
+kernels; ``ozaki_shard_axis`` (+ a ``mesh``) wires k-sharding for the
+Ozaki projections — the engine scopes its mesh into
+``parallel.ozaki_shard``'s registry around every tick, so traced model
+steps pick it up without leaking it to other engines. (On the pinned
+jax version the in-model constraints engage only for 2-D projections —
+see ``models.layers._matmul_ozaki`` for the XLA SPMD caveat; the
+sharded batched GEMM itself is served by
+``parallel.ozaki_shard.ozaki_matmul_kshard_auto``.)
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Callable, Optional
@@ -67,14 +78,22 @@ class ServingEngine:
                  max_len: int = 256, cache_dtype=jnp.float32,
                  sample_fn: Callable = greedy_sample,
                  matmul_precision: Optional[str] = None,
-                 ozaki_backend: Optional[str] = None):
+                 ozaki_backend: Optional[str] = None,
+                 ozaki_fuse_epilogue: Optional[bool] = None,
+                 ozaki_shard_axis: Optional[str] = None,
+                 mesh=None):
         overrides = {}
         if matmul_precision is not None:
             overrides["matmul_precision"] = matmul_precision
         if ozaki_backend is not None:
             overrides["ozaki_backend"] = ozaki_backend
+        if ozaki_fuse_epilogue is not None:
+            overrides["ozaki_fuse_epilogue"] = ozaki_fuse_epilogue
+        if ozaki_shard_axis is not None:
+            overrides["ozaki_shard_axis"] = ozaki_shard_axis
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides)
+        self.mesh = mesh
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots
@@ -126,14 +145,29 @@ class ServingEngine:
         self.state = self.state._replace(
             pos=self.state.pos.at[slot].set(0))
 
+    def _mesh_scope(self):
+        """Scope this engine's mesh around traced model calls.
+
+        The shard mesh is an ambient registry (``parallel.ozaki_shard``);
+        scoping it per step — instead of registering it globally at
+        construction — keeps two engines with different meshes (or a
+        later mesh-less engine) from seeing each other's mesh. Without a
+        mesh the ambient registration, if any, stays in effect.
+        """
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.parallel.ozaki_shard import use_shard_mesh
+        return use_shard_mesh(self.mesh)
+
     # ------------------------------------------------------------------
     def step(self):
         """One engine tick: admit, one batched decode, retire."""
-        self._admit()
-        if all(r is None for r in self.slot_req):
-            return
-        logits, self.state = self._decode(
-            self.params, self.state, jnp.asarray(self.next_token))
+        with self._mesh_scope():
+            self._admit()
+            if all(r is None for r in self.slot_req):
+                return
+            logits, self.state = self._decode(
+                self.params, self.state, jnp.asarray(self.next_token))
         toks = np.asarray(self.sample_fn(logits))
         self._steps += 1
         for slot, req in enumerate(self.slot_req):

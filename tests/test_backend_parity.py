@@ -1,9 +1,15 @@
-"""Backend-parity matrix: {xla, pallas, pallas_fused} x {f64, df32} x
-schedule must agree on shared random cases.
+"""Backend-parity matrix: every executor x {f64, df32} x schedule must
+agree on shared random cases.
 
-Contract (ISSUE acceptance): the fused path matches the XLA path to
+Executors covered: ``pallas`` (MXU GEMM kernel only), ``pallas_fused``
+with ``fusion="stages"`` (one-pass split + fused accumulation kernels),
+``pallas_fused`` with ``fusion="epilogue"`` (GEMM + accumulation in one
+kernel, int32 products never reach HBM), and the batch-grid executor
+behind ``ozaki_matmul_batched`` (explicit batch grid dimension).
+
+Contract (ISSUE acceptance): the fused paths match the XLA path to
 <= 1 ulp of the f64 reference. The implementation is actually stronger —
-every stage of the fused pipeline runs the same rounding sequence as the
+every stage of every pipeline runs the same rounding sequence as the
 XLA ops (ldexp-exact splitting, exact int32 GEMMs, matching compensated
 accumulation), so the paths are asserted bitwise identical, which implies
 the 1-ulp bound trivially. The explicit ulp check stays as the documented
@@ -16,7 +22,7 @@ import numpy as np
 import pytest
 
 from repro.core.ozaki import (OzakiConfig, dgemm_f64, ozaki_matmul,
-                              ozaki_matmul_dw)
+                              ozaki_matmul_batched, ozaki_matmul_dw)
 from repro.core.tuning import select_plan
 from repro.core.xmath import df32_from_f64, df32_to_f64
 
@@ -24,6 +30,14 @@ SCHEDULES = {
     "paper": dict(fuse_diagonals=False, concat_k=False),
     "fuse_diagonals": dict(fuse_diagonals=True, concat_k=False),
     "concat_k": dict(fuse_diagonals=True, concat_k=True),
+}
+
+# executor selection knobs per parity column (see core.executors)
+EXECUTORS = {
+    "pallas": dict(backend="pallas"),
+    "pallas_fused": dict(backend="pallas_fused"),
+    "pallas_fused_epilogue": dict(backend="pallas_fused",
+                                  fuse_epilogue=True),
 }
 
 
@@ -40,30 +54,78 @@ def _assert_within_one_ulp_of_ref(c_test, c_base, ref):
 
 
 @pytest.mark.parametrize(
-    "backend,accum,schedule",
-    list(itertools.product(["pallas", "pallas_fused"], ["f64", "df32"],
+    "executor,accum,schedule",
+    list(itertools.product(sorted(EXECUTORS), ["f64", "df32"],
                            sorted(SCHEDULES))))
-def test_backend_parity_matrix(rng, backend, accum, schedule):
+def test_backend_parity_matrix(rng, executor, accum, schedule):
     a = _phi_matrix(rng, 24, 96)
     b = _phi_matrix(rng, 96, 16)
     kw = dict(num_splits=9, accum=accum, **SCHEDULES[schedule])
     base = np.asarray(ozaki_matmul(a, b, OzakiConfig(backend="xla", **kw)))
     got = np.asarray(ozaki_matmul(
-        a, b, OzakiConfig(backend=backend, interpret=True, **kw)))
+        a, b, OzakiConfig(interpret=True, **EXECUTORS[executor], **kw)))
     ref = np.asarray(dgemm_f64(a, b))
     _assert_within_one_ulp_of_ref(got, base, ref)
     # stronger guarantee the current kernels provide: bitwise identity
     np.testing.assert_array_equal(got, base)
 
 
+@pytest.mark.parametrize("executor,accum", list(itertools.product(
+    sorted(EXECUTORS), ["f64", "df32"])))
+def test_backend_parity_odd_shapes(rng, executor, accum):
+    """Non-pow2 / odd extents exercise every kernel's padding path."""
+    a = _phi_matrix(rng, 23, 131)
+    b = _phi_matrix(rng, 131, 19)
+    kw = dict(num_splits=7, accum=accum)
+    base = np.asarray(ozaki_matmul(a, b, OzakiConfig(backend="xla", **kw)))
+    got = np.asarray(ozaki_matmul(
+        a, b, OzakiConfig(interpret=True, **EXECUTORS[executor], **kw)))
+    np.testing.assert_array_equal(got, base)
+
+
+@pytest.mark.parametrize(
+    "backend,accum",
+    list(itertools.product(["pallas", "pallas_fused"], ["f64", "df32"])))
+def test_batch_grid_parity(rng, backend, accum):
+    """The batch-grid executor (explicit batch grid dim, no vmap) must be
+    bitwise equal to the XLA batched pipeline AND to a loop over the
+    unbatched pipeline — odd/non-pow2 shapes."""
+    cfg = OzakiConfig(num_splits=7, accum=accum, backend=backend)
+    a = jnp.stack([_phi_matrix(rng, 9, 33) for _ in range(3)])
+    b = jnp.stack([_phi_matrix(rng, 33, 11) for _ in range(3)])
+    got = np.asarray(ozaki_matmul_batched(a, b, cfg))
+    base = np.asarray(ozaki_matmul_batched(
+        a, b, OzakiConfig(num_splits=7, accum=accum, backend="xla")))
+    loop = np.stack([np.asarray(ozaki_matmul(a[i], b[i], cfg))
+                     for i in range(3)])
+    np.testing.assert_array_equal(got, base)
+    np.testing.assert_array_equal(got, loop)
+
+
+def test_epilogue_downgrades_on_batch_grid(rng):
+    """fuse_epilogue with stacked weights falls back to the stage-fused
+    pipeline (there is no batch-grid epilogue kernel) — still bitwise."""
+    cfg = OzakiConfig(num_splits=7, backend="pallas_fused",
+                      fuse_epilogue=True)
+    assert cfg.plan(batch_layout="grid").fusion == "stages"
+    a = jnp.stack([_phi_matrix(rng, 8, 32) for _ in range(2)])
+    b = jnp.stack([_phi_matrix(rng, 32, 8) for _ in range(2)])
+    got = np.asarray(ozaki_matmul_batched(a, b, cfg))
+    base = np.asarray(ozaki_matmul_batched(a, b, OzakiConfig(num_splits=7)))
+    np.testing.assert_array_equal(got, base)
+
+
+@pytest.mark.parametrize("executor", ["pallas_fused",
+                                      "pallas_fused_epilogue"])
 @pytest.mark.parametrize("schedule", sorted(SCHEDULES))
-def test_backend_parity_dw_native(rng, schedule):
-    """TPU-native df32 entry: fused pipeline == XLA pipeline bitwise."""
+def test_backend_parity_dw_native(rng, schedule, executor):
+    """TPU-native df32 entry: fused pipelines == XLA pipeline bitwise."""
     a = df32_from_f64(_phi_matrix(rng, 16, 64, 0.5))
     b_t = df32_from_f64(_phi_matrix(rng, 8, 64, 0.5))
     kw = dict(num_splits=9, accum="df32", **SCHEDULES[schedule])
     base = ozaki_matmul_dw(a, b_t, OzakiConfig(backend="xla", **kw))
-    got = ozaki_matmul_dw(a, b_t, OzakiConfig(backend="pallas_fused", **kw))
+    got = ozaki_matmul_dw(a, b_t,
+                          OzakiConfig(**EXECUTORS[executor], **kw))
     np.testing.assert_array_equal(np.asarray(df32_to_f64(base)),
                                   np.asarray(df32_to_f64(got)))
 

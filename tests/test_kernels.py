@@ -11,7 +11,9 @@ import pytest
 from repro.core.splitting import row_exponents, split_int, split_int_dw
 from repro.core.xmath import DW, df32_from_f64
 from repro.kernels import ref
-from repro.kernels.int8_gemm import int8_matmul_nt, int8_matmul_nt_batched
+from repro.kernels.int8_gemm import (int8_matmul_nt, int8_matmul_nt_batched,
+                                     int8_matmul_nt_epilogue_dw,
+                                     int8_matmul_nt_epilogue_sw)
 from repro.kernels.ozaki_accum import accum_scaled_dw, accum_scaled_sw
 from repro.kernels.ozaki_split import fused_split_dw
 
@@ -102,6 +104,65 @@ def test_fused_split_f64_zero_lo_equals_split_int(rng, m, k, s, w):
     got = fused_split_dw(x, jnp.zeros_like(x), want.exp, num_splits=s, w=w,
                          interpret=True)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want.slices))
+
+
+@pytest.mark.parametrize("m,n,k,p_lo,t,npairs", [
+    (8, 8, 8, 0, 0, 1), (16, 24, 32, 1, 3, 2), (33, 7, 129, 0, 2, 3),
+    (100, 60, 130, 2, 4, 2)])
+def test_int8_gemm_epilogue_sw_sweep(rng, m, n, k, p_lo, t, npairs):
+    """Epilogue-fused GEMM (single-word C) == GEMM kernel + scaled add."""
+    s = 5
+    a_sl = jnp.asarray(rng.integers(-100, 101, (s, m, k)), jnp.int8)
+    b_sl = jnp.asarray(rng.integers(-100, 101, (s, n, k)), jnp.int8)
+    c = jnp.asarray(rng.standard_normal((m, n)))
+    scale = 2.0 ** -21
+    got = int8_matmul_nt_epilogue_sw(a_sl, b_sl, c, p_lo=p_lo, t=t,
+                                     npairs=npairs, scale=scale,
+                                     interpret=True)
+    p_t = sum(np.asarray(int8_matmul_nt(a_sl[p_lo + i],
+                                        b_sl[t - p_lo - i], interpret=True))
+              for i in range(npairs))
+    want = np.asarray(c) + p_t.astype(np.float64) * scale
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("m,n,k,npairs", [(16, 24, 32, 2), (33, 7, 129, 3)])
+def test_int8_gemm_epilogue_dw_matches_accum_kernel(rng, m, n, k, npairs):
+    """Epilogue df32 add == ``accum_scaled_dw`` on the summed product."""
+    s, p_lo, t = 4, 0, npairs - 1
+    a_sl = jnp.asarray(rng.integers(-100, 101, (s, m, k)), jnp.int8)
+    b_sl = jnp.asarray(rng.integers(-100, 101, (s, n, k)), jnp.int8)
+    c_hi = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    c_lo = jnp.asarray(rng.standard_normal((m, n)) * 1e-8, jnp.float32)
+    scale = 2.0 ** -28
+    gh, gl = int8_matmul_nt_epilogue_dw(a_sl, b_sl, c_hi, c_lo, p_lo=p_lo,
+                                        t=t, npairs=npairs, scale=scale,
+                                        interpret=True)
+    p_t = sum(np.asarray(int8_matmul_nt(a_sl[p_lo + i],
+                                        b_sl[t - p_lo - i], interpret=True),
+                         np.int64)
+              for i in range(npairs)).astype(np.int32)
+    wh, wl = accum_scaled_dw(jnp.asarray(p_t), c_hi, c_lo, scale=scale,
+                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(gh), np.asarray(wh))
+    np.testing.assert_array_equal(np.asarray(gl), np.asarray(wl))
+
+
+def test_int8_gemm_epilogue_block_shapes(rng):
+    """Explicit (small) blocks cover the multi-block epilogue grid walk."""
+    s, m, n, k = 3, 70, 40, 200
+    a_sl = jnp.asarray(rng.integers(-100, 101, (s, m, k)), jnp.int8)
+    b_sl = jnp.asarray(rng.integers(-100, 101, (s, n, k)), jnp.int8)
+    c = jnp.asarray(rng.standard_normal((m, n)))
+    scale = 2.0 ** -14
+    got = int8_matmul_nt_epilogue_sw(a_sl, b_sl, c, p_lo=0, t=2, npairs=3,
+                                     scale=scale, bm=32, bn=128, bk=128,
+                                     interpret=True)
+    p_t = sum(np.asarray(int8_matmul_nt(a_sl[i], b_sl[2 - i],
+                                        interpret=True))
+              for i in range(3))
+    want = np.asarray(c) + p_t.astype(np.float64) * scale
+    np.testing.assert_array_equal(np.asarray(got), want)
 
 
 def test_int8_gemm_jit_composes(rng):

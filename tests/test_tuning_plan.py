@@ -1,0 +1,146 @@
+"""Planner edge cases: ``select_plan`` block selection, ``PipelinePlan``
+construction/validation/serialization, and the config <-> plan round trip.
+"""
+import json
+
+import pytest
+
+from repro.core.ozaki import OzakiConfig
+from repro.core.tuning import (BATCH_LAYOUTS, FUSION_MODES, PipelinePlan,
+                               TilePlan, VMEM_BUDGET, apply_pipeline_plan,
+                               hbm_pass_model, plan_for, select_pipeline_plan,
+                               select_plan)
+from repro.kernels.launch import LANE, SUBLANE_F32, SUBLANE_I8
+
+
+# ----------------------------------------------------------------------------
+# select_plan edge cases
+# ----------------------------------------------------------------------------
+
+def test_select_plan_tiny_k():
+    """k=1: blocks floor at their alignment minima, splits stay sane."""
+    plan = select_plan(8, 8, 1)
+    assert plan.bm == SUBLANE_I8 and plan.bn == LANE and plan.bk == LANE
+    assert plan.split_bk == LANE and plan.accum_bn == LANE
+    assert plan.num_splits >= 1
+    assert plan.concat_k          # short reduction -> one concatenated GEMM
+
+
+def test_select_plan_k1_batched_disables_concat():
+    """A stacked batch disables concat_k even for launch-bound k."""
+    assert select_plan(16, 16, 1, batch=1).concat_k
+    assert not select_plan(16, 16, 1, batch=4).concat_k
+
+
+def test_select_plan_non_pow2_mn():
+    """Non-pow2 m/n: power-of-two blocks within the aligned extents."""
+    plan = select_plan(100, 130, 530)
+    for b in (plan.bm, plan.bn, plan.bk, plan.accum_bm, plan.accum_bn):
+        assert b & (b - 1) == 0, b
+    assert plan.bm <= 128           # align_up(100, 32) = 128
+    assert plan.bn <= 256
+    assert plan.bm * plan.bk + plan.bn * plan.bk + \
+        4 * plan.bm * plan.bn <= VMEM_BUDGET
+
+
+def test_select_plan_vmem_pressure_shrinks_bk_first():
+    tight = select_plan(4096, 4096, 8192, vmem_budget=VMEM_BUDGET // 8)
+    default = select_plan(4096, 4096, 8192)
+    assert tight.bk <= default.bk
+    assert tight.bm * tight.bk + tight.bn * tight.bk + \
+        4 * tight.bm * tight.bn <= VMEM_BUDGET // 8
+
+
+# ----------------------------------------------------------------------------
+# PipelinePlan construction / validation
+# ----------------------------------------------------------------------------
+
+def test_select_pipeline_plan_layouts():
+    none = select_pipeline_plan(64, 64, 256)
+    rows = select_pipeline_plan(8, 64, 256, batch=32, broadcast_weights=True)
+    grid = select_pipeline_plan(8, 64, 256, batch=32)
+    assert none.batch_layout == "none" and none.fusion == "epilogue"
+    assert rows.batch_layout == "rows" and rows.fusion == "epilogue"
+    assert grid.batch_layout == "grid" and grid.fusion == "stages"
+    # rows layout sizes tiles for the folded batch*m row extent
+    assert rows.tile.bm >= none.tile.bm or rows.tile.bm == 256
+
+
+def test_pipeline_plan_validation():
+    with pytest.raises(ValueError, match="fusion"):
+        PipelinePlan(fusion="bogus")
+    with pytest.raises(ValueError, match="batch_layout"):
+        PipelinePlan(batch_layout="bogus")
+    with pytest.raises(ValueError, match="accum"):
+        PipelinePlan(accum="f32")
+    with pytest.raises(ValueError, match="epilogue"):
+        PipelinePlan(backend="pallas_fused", fusion="epilogue",
+                     batch_layout="grid")
+    assert set(FUSION_MODES) == {"none", "stages", "epilogue"}
+    assert set(BATCH_LAYOUTS) == {"none", "rows", "grid"}
+
+
+def test_plan_for_reflects_config():
+    cfg = OzakiConfig(num_splits=11, accum="df32", backend="pallas_fused",
+                      fuse_epilogue=True, shard_axis="model",
+                      interpret=True)
+    plan = plan_for(cfg)
+    assert plan.num_splits == 11 and plan.accum == "df32"
+    assert plan.fusion == "epilogue" and plan.shard_axis == "model"
+    # grid layout downgrades epilogue to the stage-fused pipeline
+    assert plan_for(cfg, batch_layout="grid").fusion == "stages"
+    # non-fused backends never fuse
+    assert plan_for(OzakiConfig(backend="xla")).fusion == "none"
+    assert plan_for(OzakiConfig(backend="pallas",
+                                fuse_epilogue=True)).fusion == "none"
+
+
+def test_plan_for_keeps_explicit_tile_blocks():
+    tile = select_plan(40, 24, 200, num_splits=9)
+    cfg = OzakiConfig(num_splits=5, tile=tile)   # schedule from cfg wins
+    plan = plan_for(cfg)
+    assert plan.tile is tile
+    assert plan.num_splits == 5
+
+
+def test_apply_pipeline_plan_roundtrip():
+    plan = select_pipeline_plan(64, 32, 512, accum="df32",
+                                shard_axis="model")
+    cfg = apply_pipeline_plan(OzakiConfig(), plan)
+    assert cfg.backend == "pallas_fused" and cfg.accum == "df32"
+    assert cfg.fuse_epilogue and cfg.shard_axis == "model"
+    assert cfg.tile == plan.tile
+    assert plan_for(cfg) == plan
+
+
+# ----------------------------------------------------------------------------
+# Serialization round trip (deployment plan caches)
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("plan", [
+    PipelinePlan(),
+    select_pipeline_plan(64, 64, 256),
+    select_pipeline_plan(8, 64, 7, batch=32, broadcast_weights=True,
+                         accum="df32", shard_axis="model"),
+    select_pipeline_plan(9, 65, 129, batch=3, backend="pallas",
+                         fuse_epilogue=False, interpret=False),
+])
+def test_pipeline_plan_json_roundtrip(plan):
+    wire = json.dumps(plan.to_dict())
+    back = PipelinePlan.from_dict(json.loads(wire))
+    assert back == plan
+    assert isinstance(back.tile, TilePlan)
+
+
+# ----------------------------------------------------------------------------
+# HBM pass model: epilogue < stage-fused < unfused, for every s
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s", [5, 9, 13])
+def test_hbm_pass_model_epilogue_strictly_fewer(s):
+    unfused = hbm_pass_model(s, fused=False)
+    stages = hbm_pass_model(s, fused=True)
+    epilogue = hbm_pass_model(s, fused=True, fuse_epilogue=True)
+    assert epilogue["total"] < stages["total"] < unfused["total"]
+    assert epilogue["split"] == stages["split"] == 1
+    assert epilogue["accum"] == 2 * s       # read C + write C per group

@@ -36,4 +36,15 @@ def run(n: int = 96, k: int = 192):
 
 
 if __name__ == "__main__":
+    import argparse
+
+    import jax
+
+    from .common import CSV_HEADER, add_plan_args, configure_from_args
+
+    jax.config.update("jax_enable_x64", True)
+    ap = argparse.ArgumentParser()
+    add_plan_args(ap)
+    configure_from_args(ap.parse_args())
+    print(CSV_HEADER)
     run()

@@ -73,12 +73,16 @@ if __name__ == "__main__":
 
     import jax
 
+    from .common import CSV_HEADER, add_plan_args, configure_from_args
+
     jax.config.update("jax_enable_x64", True)
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small n, one split count (CI smoke run)")
     ap.add_argument("-n", type=int, default=None,
                     help="matrix size (overrides the --quick default)")
+    add_plan_args(ap)
     args = ap.parse_args()
-    print("name,us_per_call,derived")
+    configure_from_args(args)
+    print(CSV_HEADER)
     run(n=args.n, quick=args.quick)

@@ -29,7 +29,7 @@ from repro.configs import get_config
 from repro.models import init_model
 from repro.serving.engine import Request, ServingEngine
 
-from .common import emit
+from .common import CONTEXT, emit
 
 VARIANTS = {
     "bf16": dict(matmul_precision="bf16"),
@@ -43,8 +43,11 @@ VARIANTS = {
 
 def _drive(cfg, params, overrides, *, num_slots: int, new_tokens: int,
            prompts) -> dict:
+    # the run-wide plan context reaches the engine: pre-warmed (and, with
+    # --autotune, measured) projection plans apply to every decode tick
     engine = ServingEngine(cfg, params, num_slots=num_slots, max_len=64,
-                           **overrides)
+                           plan_cache=CONTEXT.plan_cache,
+                           autotune_plans=CONTEXT.autotune, **overrides)
     for rid, prompt in enumerate(prompts):
         engine.submit(Request(rid=rid, prompt=prompt,
                               max_new_tokens=new_tokens))
@@ -92,9 +95,13 @@ def run(arch: str = "llama3.2-3b", quick: bool = False):
 if __name__ == "__main__":
     import argparse
 
+    from .common import CSV_HEADER, add_plan_args, configure_from_args
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fewer tokens/variants (CI smoke run)")
+    add_plan_args(ap)
     args = ap.parse_args()
-    print("name,us_per_call,derived")
+    configure_from_args(args)
+    print(CSV_HEADER)
     run(quick=args.quick)

@@ -1,17 +1,95 @@
-"""Shared benchmark utilities: timing, CSV emission, input generators."""
+"""Shared benchmark utilities: timing, CSV emission, input generators,
+and the plan-cache/autotune context every registered benchmark runs in.
+
+CSV schema: ``name,us_per_call,derived,plan`` — ``plan`` is the chosen
+``PipelinePlan`` as JSON (CSV-quoted; empty for rows that plan nothing),
+so any perf row can be reproduced from its exact launch parameters.
+
+``benchmarks.run`` (and each benchmark's ``__main__``) parses
+``--plan-cache PATH`` / ``--autotune`` into the module-level ``CONTEXT``;
+benchmarks call ``plan_gemm`` to resolve plans through it, so the same
+flags reach every registered benchmark without threading arguments.
+"""
 from __future__ import annotations
 
+import dataclasses
+import json
 import time
+from typing import TYPE_CHECKING, Optional
 
 import jax
 import numpy as np
 
+if TYPE_CHECKING:                      # deferred: repro imports stay lazy
+    from repro.core.autotune import PlanCache
+
 ROWS = []
 
+CSV_HEADER = "name,us_per_call,derived,plan"
 
-def emit(name: str, us_per_call: float, derived: str = ""):
-    ROWS.append((name, us_per_call, derived))
-    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+@dataclasses.dataclass
+class BenchContext:
+    """Plan resolution policy shared by all benchmarks in one run."""
+
+    plan_cache: Optional["PlanCache"] = None    # core.autotune.PlanCache
+    autotune: bool = False
+
+
+CONTEXT = BenchContext()
+
+
+def configure(plan_cache_path: Optional[str] = None,
+              autotune: bool = False) -> BenchContext:
+    """Install the run-wide plan context (from --plan-cache/--autotune)."""
+    from repro.core.autotune import PlanCache
+    CONTEXT.plan_cache = (PlanCache.load(plan_cache_path)
+                          if plan_cache_path else None)
+    CONTEXT.autotune = autotune
+    return CONTEXT
+
+
+def add_plan_args(ap) -> None:
+    """The shared --plan-cache/--autotune argparse surface."""
+    ap.add_argument("--plan-cache", metavar="PATH", default=None,
+                    help="persistent PlanCache JSON consulted (and, with "
+                         "--autotune, populated) for every planned GEMM")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure candidate plans on plan-cache misses "
+                         "instead of using the analytic plan")
+
+
+def configure_from_args(args) -> BenchContext:
+    return configure(plan_cache_path=args.plan_cache,
+                     autotune=args.autotune)
+
+
+def plan_gemm(m: int, n: int, k: int, **kwargs):
+    """Resolve a PipelinePlan through the run's plan context.
+
+    Analytic when no cache/autotune is configured; cache hits return
+    without re-tuning; misses autotune when --autotune was passed (the
+    winner is persisted to the cache file immediately).
+    """
+    from repro.core.tuning import select_pipeline_plan
+    return select_pipeline_plan(m, n, k, cache=CONTEXT.plan_cache,
+                                autotune=CONTEXT.autotune, **kwargs)
+
+
+def _csv_field(s: str) -> str:
+    if any(ch in s for ch in ",\"\n"):
+        return '"' + s.replace('"', '""') + '"'
+    return s
+
+
+def plan_json(plan) -> str:
+    return json.dumps(plan.to_dict(), sort_keys=True) if plan else ""
+
+
+def emit(name: str, us_per_call: float, derived: str = "", plan=None):
+    pj = plan_json(plan)
+    ROWS.append((name, us_per_call, derived, pj))
+    print(f"{name},{us_per_call:.1f},{derived},{_csv_field(pj)}", flush=True)
 
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -1,16 +1,31 @@
 """Benchmark aggregator: one section per paper figure/table.
 
 ``PYTHONPATH=src python -m benchmarks.run`` prints
-``name,us_per_call,derived`` CSV rows for every benchmark; section
+``name,us_per_call,derived,plan`` CSV rows for every benchmark; section
 mapping lives in DESIGN.md §5 and EXPERIMENTS.md.
+
+``--plan-cache PATH`` routes every planned GEMM through a persistent
+``core.autotune.PlanCache`` and ``--autotune`` measures candidates on
+misses — the chosen plan lands in the ``plan`` CSV column of each row it
+applies to, so perf numbers are reproducible from the row alone. The
+flags reach every registered benchmark through ``common.CONTEXT``.
 """
+import argparse
+
 import jax
 
 jax.config.update("jax_enable_x64", True)   # FP64 oracle + DGEMM baseline
 
 
-def main() -> None:
-    print("name,us_per_call,derived")
+def main(argv=None) -> None:
+    from . import common
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    common.add_plan_args(ap)
+    args = ap.parse_args(argv)
+    common.configure_from_args(args)
+
+    print(common.CSV_HEADER)
     from . import (bench_fig4_analytic, bench_fig6_accuracy,
                    bench_fig7_zerocancel, bench_fig8_throughput,
                    bench_fused_pipeline, bench_quantum_sim,
@@ -22,6 +37,8 @@ def main() -> None:
     bench_fused_pipeline.run()
     bench_quantum_sim.run()
     bench_serve_latency.run()
+    if common.CONTEXT.plan_cache is not None:
+        common.CONTEXT.plan_cache.save()
 
 
 if __name__ == "__main__":

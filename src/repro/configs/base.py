@@ -78,6 +78,11 @@ class ArchConfig:
     ozaki_shard_axis: str = ""      # mesh axis to k-shard ozaki matmuls
                                     # over ("" = unsharded); needs a mesh
                                     # registered via parallel.ozaki_shard
+    ozaki_plan_cache: str = ""      # path to a persistent PlanCache JSON
+                                    # ("" = no cache); the serving engine
+                                    # pre-warms it at startup
+    ozaki_autotune: bool = False    # measure candidate plans on a cache
+                                    # miss (deploy-time; needs plan_cache)
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
     accum_dtype: str = "float32"    # matmul partial sums; bf16 halves the

@@ -3,6 +3,9 @@ from .analytic import (ALL_MMUS, DGEMM_MANTISSA_SPACE, FP16_FP32, INT4_INT32,
                        INT8_INT32, INT12_INT32, MMUSpec, ozaki_flops,
                        ozaki_hp_accum_ops)
 from .auto_split import auto_num_splits, auto_num_splits_complex
+from .autotune import (AutotuneReport, PlanCache, PlanKey, autotune_plan,
+                       candidate_plans, measure_plan, plan_cache_key,
+                       use_plan_cache)
 from .executors import (EpilogueExecutor, FusedExecutor, PallasExecutor,
                         XlaExecutor, get_executor)
 from .ozaki import (BACKENDS, OzakiConfig, dgemm_f64, gemm_fp32_pass,
@@ -20,12 +23,16 @@ from .xmath import (DW, dd_matmul_f64, dd_matmul_np, df32_from_f64,
                     fast_two_sum, rel_error_vs_dd, two_prod, two_sum)
 
 __all__ = [
-    "ALL_MMUS", "BACKENDS", "BATCH_LAYOUTS", "DGEMM_MANTISSA_SPACE", "DW",
+    "ALL_MMUS", "AutotuneReport", "BACKENDS", "BATCH_LAYOUTS",
+    "DGEMM_MANTISSA_SPACE", "DW",
     "EpilogueExecutor", "FP16_FP32", "FUSION_MODES", "FusedExecutor",
     "INT12_INT32", "INT4_INT32", "INT8_INT32", "MMUSpec", "OzakiConfig",
-    "PallasExecutor", "PipelinePlan", "SplitResult", "TilePlan",
+    "PallasExecutor", "PipelinePlan", "PlanCache", "PlanKey", "SplitResult",
+    "TilePlan",
     "XlaExecutor", "apply_pipeline_plan", "apply_plan", "auto_num_splits",
-    "auto_num_splits_complex", "compute_alpha", "dd_matmul_f64",
+    "auto_num_splits_complex", "autotune_plan", "candidate_plans",
+    "compute_alpha", "dd_matmul_f64", "measure_plan", "plan_cache_key",
+    "use_plan_cache",
     "dd_matmul_np", "df32_from_f64", "df32_to_f64", "dgemm_f64",
     "diagonal_groups", "dw_add", "dw_add_single", "dw_mul", "dw_mul_single",
     "dw_normalize", "dw_sub", "dw_to_single", "dw_zeros", "fast_two_sum",

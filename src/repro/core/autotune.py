@@ -1,0 +1,470 @@
+"""Measurement-driven autotuning for the Ozaki pipeline, with a
+persistent plan cache.
+
+The analytic planner (``core.tuning.select_pipeline_plan``) is a
+VMEM-budget model: good enough to never launch an illegal kernel, blind
+to everything the follow-up literature (arXiv:2409.13313,
+arXiv:2508.03984) shows actually separates implementations — measured
+launch overheads, the fusion-mode crossover, concat-k amortization. This
+module closes that gap in three pieces:
+
+* ``candidate_plans`` — enumerate ``PipelinePlan`` candidates around the
+  analytic seed: tile shapes (halved GEMM blocks down to their alignment
+  floors), fusion mode (epilogue- vs stage-fused), and the ``concat_k``
+  schedule. By default every candidate is **result-invariant**: tiles
+  and fusion modes are bitwise-neutral (enforced by the backend-parity
+  suite) and ``concat_k`` regroups exact int32 sums, so a tuned plan's
+  results are bitwise-equal to the analytic plan's. ``search_num_splits``
+  widens the space to split counts *above* the accuracy target's minimum
+  (never below — the paper's operating point is a floor); those
+  candidates trade bitwise reproducibility for generality and are off by
+  default.
+* ``measure_plan`` / ``autotune_plan`` — time each candidate on the live
+  backend with warm-up (covers jit compile) and ``block_until_ready``,
+  then pick the measured best. The analytic plan is always candidate #0,
+  so the tuned result is never worse than analytic modulo timer noise.
+* ``PlanCache`` — a versioned JSON file mapping
+  ``(m, n, k, batch, dtype, backend, device_kind)`` to the measured-best
+  ``PipelinePlan`` (reusing ``PipelinePlan.to_dict/from_dict``).
+  ``select_pipeline_plan`` consults it (hit returns without re-tuning;
+  miss falls back to the analytic plan unless ``autotune=True``), and
+  ``serving.engine`` pre-warms it at startup so steady-state serving
+  never tunes on the request path. Version mismatches and corrupted
+  files degrade to an empty cache (analytic planning), never an error.
+
+An ambient-cache registry (``use_plan_cache``) mirrors
+``parallel.ozaki_shard``'s mesh registry: the serving engine scopes its
+cache around each tick, and ``models.layers`` picks cached plans up at
+trace time without threading the cache through every call site.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import tempfile
+import time
+import warnings
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.kernels.launch import LANE, SUBLANE_I8
+
+from .tuning import (CONCAT_K_MAX, PipelinePlan, select_pipeline_plan)
+
+__all__ = ["PLAN_CACHE_VERSION", "PlanKey", "PlanCache", "plan_cache_key",
+           "candidate_plans", "measure_plan", "autotune_plan",
+           "AutotuneReport", "use_plan_cache", "active_plan_cache",
+           "set_plan_cache"]
+
+PLAN_CACHE_VERSION = 1
+
+
+def default_device_kind() -> str:
+    """The accelerator identity plans are tuned for (cache key part)."""
+    try:
+        import jax
+        return jax.devices()[0].device_kind
+    except Exception:                                   # pragma: no cover
+        return "unknown"
+
+
+def _canon_dtype(dtype, accum: str) -> str:
+    """Normalize the operand dtype key; default it from the accum mode."""
+    if dtype is None:
+        return "float64" if accum == "f64" else "float32"
+    return str(np.dtype(dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Cache identity of one tuned GEMM: shape, operand dtype, backend,
+    and the device kind the measurement ran on (hashable)."""
+
+    m: int
+    n: int
+    k: int
+    batch: int = 1
+    dtype: str = "float64"
+    backend: str = "pallas_fused"
+    device_kind: str = "cpu"
+
+    def encode(self) -> str:
+        return (f"m={self.m};n={self.n};k={self.k};batch={self.batch};"
+                f"dtype={self.dtype};backend={self.backend};"
+                f"device={self.device_kind}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlanKey":
+        return cls(**d)
+
+
+def plan_cache_key(m: int, n: int, k: int, *, batch: int = 1,
+                   dtype=None, accum: str = "df32",
+                   backend: str = "pallas_fused",
+                   device_kind: Optional[str] = None) -> PlanKey:
+    """The key ``select_pipeline_plan`` and the engine pre-warm agree on."""
+    return PlanKey(m=m, n=n, k=k, batch=batch,
+                   dtype=_canon_dtype(dtype, accum), backend=backend,
+                   device_kind=device_kind or default_device_kind())
+
+
+class PlanCache:
+    """Persistent measured-plan store: one JSON file per deployment.
+
+    File format (``version`` guards schema drift — a mismatch or a
+    corrupted file loads as an EMPTY cache with a warning, so planning
+    falls back to the analytic model instead of failing)::
+
+        {"version": 1,
+         "plans": {"m=..;n=..;..": {"key": {...PlanKey...},
+                                    "plan": {...PipelinePlan.to_dict...},
+                                    "us": 123.4}}}
+
+    Entries are decoded from the structured ``key`` dict (the string key
+    is display/dedup only). ``hits``/``misses`` count ``get`` outcomes
+    for the pre-warm/steady-state tests and ops introspection.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = os.fspath(path) if path is not None else None
+        self._plans: dict[PlanKey, PipelinePlan] = {}
+        self._us: dict[PlanKey, Optional[float]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    # ---- persistence ---------------------------------------------------
+    @classmethod
+    def load(cls, path) -> "PlanCache":
+        """Load a cache file; missing/corrupted/wrong-version -> empty."""
+        cache = cls(path)
+        if not os.path.exists(cache.path):
+            return cache
+        try:
+            with open(cache.path) as f:
+                data = json.load(f)
+            version = data.get("version")
+            if version != PLAN_CACHE_VERSION:
+                warnings.warn(
+                    f"plan cache {cache.path}: version {version!r} != "
+                    f"{PLAN_CACHE_VERSION}; starting from an empty cache "
+                    "(analytic plans until re-tuned)")
+                return cache
+            for entry in data.get("plans", {}).values():
+                key = PlanKey.from_dict(entry["key"])
+                cache._plans[key] = PipelinePlan.from_dict(entry["plan"])
+                cache._us[key] = entry.get("us")
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            warnings.warn(f"plan cache {cache.path}: unreadable "
+                          f"({type(e).__name__}: {e}); starting from an "
+                          "empty cache (analytic plans until re-tuned)")
+            cache._plans.clear()
+            cache._us.clear()
+        return cache
+
+    def save(self, path: Optional[str] = None) -> Optional[str]:
+        """Atomically write the cache (tmp file + rename); no-op without
+        a path. Returns the path written."""
+        path = os.fspath(path) if path is not None else self.path
+        if path is None:
+            return None
+        data = {"version": PLAN_CACHE_VERSION, "plans": {
+            key.encode(): {"key": key.to_dict(),
+                           "plan": self._plans[key].to_dict(),
+                           "us": self._us.get(key)}
+            for key in sorted(self._plans, key=lambda kk: kk.encode())}}
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(data, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        self.path = path
+        return path
+
+    # ---- store ---------------------------------------------------------
+    def get(self, key: PlanKey) -> Optional[PipelinePlan]:
+        plan = self._plans.get(key)
+        if plan is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return plan
+
+    def put(self, key: PlanKey, plan: PipelinePlan,
+            measured_us: Optional[float] = None) -> None:
+        self._plans[key] = plan
+        self._us[key] = measured_us
+
+    def measured_us(self, key: PlanKey) -> Optional[float]:
+        return self._us.get(key)
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def __contains__(self, key: PlanKey) -> bool:
+        return key in self._plans
+
+    def keys(self):
+        return self._plans.keys()
+
+
+# ----------------------------------------------------------------------------
+# Ambient cache registry (mirrors parallel.ozaki_shard's mesh registry)
+# ----------------------------------------------------------------------------
+
+_PLAN_CACHE: list = [None]
+
+
+def set_plan_cache(cache: Optional[PlanCache]) -> None:
+    """Register (or clear, with None) the ambient plan cache.
+
+    Trace-time semantics, exactly like the shard-mesh registry: jitted
+    model steps read the registry while TRACING, so the cache must be
+    registered before the first call of any step that should honor it.
+    The serving engine scopes its cache around every tick
+    (``use_plan_cache``), which covers the first trace by construction.
+    """
+    _PLAN_CACHE[0] = cache
+
+
+def active_plan_cache() -> Optional[PlanCache]:
+    return _PLAN_CACHE[0]
+
+
+@contextlib.contextmanager
+def use_plan_cache(cache: Optional[PlanCache]):
+    prev = _PLAN_CACHE[0]
+    _PLAN_CACHE[0] = cache
+    try:
+        yield cache
+    finally:
+        _PLAN_CACHE[0] = prev
+
+
+# ----------------------------------------------------------------------------
+# Candidate enumeration
+# ----------------------------------------------------------------------------
+
+def _tile_variants(tile):
+    """Halved-block launch variants of one TilePlan (result-invariant)."""
+    out = []
+    if tile.bk > LANE:
+        out.append(dataclasses.replace(tile, bk=tile.bk // 2))
+    if tile.bm > SUBLANE_I8:
+        out.append(dataclasses.replace(tile, bm=tile.bm // 2))
+    if tile.bn > LANE:
+        out.append(dataclasses.replace(tile, bn=tile.bn // 2))
+    return out
+
+
+def candidate_plans(m: int, n: int, k: int, *, batch: int = 1,
+                    broadcast_weights: bool = False,
+                    backend: str = "pallas_fused", accum: str = "df32",
+                    num_splits: Optional[int] = None,
+                    fuse_epilogue: bool = True,
+                    shard_axis: Optional[str] = None,
+                    interpret: bool = True,
+                    search_num_splits: int = 0,
+                    max_candidates: Optional[int] = None,
+                    **analytic_kwargs) -> list[PipelinePlan]:
+    """Enumerate candidate plans around the analytic seed.
+
+    The analytic plan is always first. Default candidates vary only
+    launch-level knobs — GEMM tile shapes, fusion mode (epilogue vs
+    stages), ``concat_k`` — all of which leave results bitwise unchanged
+    (exact int32 regrouping / parity-tested kernel fusions), so any
+    cached winner reproduces the analytic plan's output bit for bit.
+    ``search_num_splits=j`` additionally tries ``s_min+1 .. s_min+j``
+    splits (still within the accuracy target: more slices is strictly
+    more mantissa space); those change the rounding stream and are off
+    by default. ``max_candidates`` truncates AFTER dedup, keeping the
+    analytic seed. ``analytic_kwargs`` (``mantissa_space``/``mmu``/
+    ``vmem_budget``) reach the analytic seed planner unchanged.
+    """
+    base = select_pipeline_plan(
+        m, n, k, batch=batch, broadcast_weights=broadcast_weights,
+        backend=backend, accum=accum, num_splits=num_splits,
+        fuse_epilogue=fuse_epilogue, shard_axis=shard_axis,
+        interpret=interpret, **analytic_kwargs)
+    cands = [base]
+
+    def add(plan: PipelinePlan):
+        if plan not in cands:
+            cands.append(plan)
+
+    # fusion-mode flip (pallas_fused only; both modes bitwise-equal)
+    if base.fusion in ("stages", "epilogue"):
+        flip = "stages" if base.fusion == "epilogue" else "epilogue"
+        add(dataclasses.replace(base, fusion=flip))
+
+    # concat_k flip: exact int32 regrouping; never for a stacked batch
+    # (the concatenated operands would materialize once per batch row)
+    if base.fuse_diagonals and k <= CONCAT_K_MAX and \
+            base.batch_layout != "grid":
+        add(dataclasses.replace(base, concat_k=not base.concat_k))
+
+    # halved GEMM tiles, crossed with every schedule/fusion seed so far
+    for seed in list(cands):
+        for tile in _tile_variants(seed.tile):
+            add(dataclasses.replace(seed, tile=tile))
+
+    # wider split counts stay within the accuracy target (s >= s_min)
+    for extra in range(1, search_num_splits + 1):
+        add(dataclasses.replace(base, num_splits=base.num_splits + extra))
+
+    if max_candidates is not None and len(cands) > max_candidates:
+        cands = cands[:max_candidates]
+    return cands
+
+
+# ----------------------------------------------------------------------------
+# Measurement
+# ----------------------------------------------------------------------------
+
+def _make_operands(m: int, n: int, k: int, *, batch: int,
+                   broadcast_weights: bool, dtype: str, seed: int = 0):
+    """Representative operands (paper Eq. 6-style spread, phi=1)."""
+    rng = np.random.default_rng(seed)
+
+    def mat(r, c):
+        x = (rng.uniform(-0.5, 0.5, (r, c))
+             * np.exp(rng.standard_normal((r, c))))
+        return x.astype(dtype)
+
+    if batch <= 1 and not broadcast_weights:
+        return mat(m, k), mat(k, n)
+    a = np.stack([mat(m, k) for _ in range(batch)])
+    if broadcast_weights:
+        return a, mat(k, n)
+    return a, np.stack([mat(k, n) for _ in range(batch)])
+
+
+def _plan_runner(plan: PipelinePlan, a, b) -> Callable[[], object]:
+    """A zero-arg callable running one GEMM under ``plan``.
+
+    Applies the plan through the public driver (``apply_pipeline_plan``
+    -> ``OzakiConfig``), so the measurement exercises exactly the code
+    path a deployment with the cached plan runs.
+    """
+    import jax.numpy as jnp
+
+    from .ozaki import OzakiConfig, ozaki_matmul, ozaki_matmul_batched
+    from .tuning import apply_pipeline_plan
+
+    cfg = apply_pipeline_plan(OzakiConfig(), plan)
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    if a.ndim == 3:
+        return lambda: ozaki_matmul_batched(a, b, cfg)
+    if str(a.dtype) == "float64":
+        return lambda: ozaki_matmul(a, b, cfg)
+    # f32 operands: the TPU-native path via the batched API's rows fold
+    return lambda: ozaki_matmul_batched(a[None], b, cfg)[0]
+
+
+def measure_plan(plan: PipelinePlan, m: int, n: int, k: int, *,
+                 batch: int = 1, broadcast_weights: bool = False,
+                 dtype: Optional[str] = None, warmup: int = 1,
+                 iters: int = 3, seed: int = 0,
+                 operands=None) -> float:
+    """Median wall-time (us) of one GEMM under ``plan`` on the live
+    backend. Warm-up runs (jit compile included) and every timed run
+    ``block_until_ready`` so device work is fully counted."""
+    import jax
+
+    dtype = _canon_dtype(dtype, plan.accum)
+    if operands is None:
+        operands = _make_operands(m, n, k, batch=batch,
+                                  broadcast_weights=broadcast_weights,
+                                  dtype=dtype, seed=seed)
+    fn = _plan_runner(plan, *operands)
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+@dataclasses.dataclass(frozen=True)
+class AutotuneReport:
+    """Outcome of one autotune run: the winner plus every measurement."""
+
+    key: PlanKey
+    best: PipelinePlan
+    best_us: float
+    measurements: tuple          # ((plan, us), ...) in candidate order
+
+    @property
+    def analytic_us(self) -> float:
+        return self.measurements[0][1]       # candidate #0 is analytic
+
+
+def autotune_plan(m: int, n: int, k: int, *, batch: int = 1,
+                  broadcast_weights: bool = False,
+                  backend: str = "pallas_fused", accum: str = "df32",
+                  num_splits: Optional[int] = None,
+                  fuse_epilogue: bool = True,
+                  shard_axis: Optional[str] = None, interpret: bool = True,
+                  dtype: Optional[str] = None,
+                  device_kind: Optional[str] = None,
+                  cache: Optional[PlanCache] = None,
+                  candidates: Optional[Sequence[PipelinePlan]] = None,
+                  max_candidates: Optional[int] = 8, warmup: int = 1,
+                  iters: int = 3, save: bool = True,
+                  **analytic_kwargs) -> AutotuneReport:
+    """Measure candidate plans and return the best (stored in ``cache``).
+
+    The cache is consulted first (a hit at the SAME accuracy operating
+    point — explicit ``num_splits`` must match the cached plan's — skips
+    measurement entirely); the winner is ``put`` under the shared key
+    and — when the cache has a backing path and ``save`` — persisted
+    immediately, so a crash after tuning N of M shapes keeps the N
+    measured plans.
+    """
+    dtype = _canon_dtype(dtype, accum)
+    key = plan_cache_key(m, n, k, batch=batch, dtype=dtype, accum=accum,
+                         backend=backend, device_kind=device_kind)
+    if cache is not None:
+        hit = cache.get(key)
+        if hit is not None and (num_splits is None or
+                                hit.num_splits == num_splits):
+            return AutotuneReport(key=key, best=hit,
+                                  best_us=cache.measured_us(key) or 0.0,
+                                  measurements=((hit, 0.0),))
+    if candidates is None:
+        candidates = candidate_plans(
+            m, n, k, batch=batch, broadcast_weights=broadcast_weights,
+            backend=backend, accum=accum, num_splits=num_splits,
+            fuse_epilogue=fuse_epilogue, shard_axis=shard_axis,
+            interpret=interpret, max_candidates=max_candidates,
+            **analytic_kwargs)
+    operands = _make_operands(m, n, k, batch=batch,
+                              broadcast_weights=broadcast_weights,
+                              dtype=dtype)
+    measurements = []
+    for plan in candidates:
+        us = measure_plan(plan, m, n, k, batch=batch,
+                          broadcast_weights=broadcast_weights, dtype=dtype,
+                          warmup=warmup, iters=iters, operands=operands)
+        measurements.append((plan, us))
+    best, best_us = min(measurements, key=lambda pu: pu[1])
+    if cache is not None:
+        cache.put(key, best, measured_us=best_us)
+        if save and cache.path is not None:
+            cache.save()
+    return AutotuneReport(key=key, best=best, best_us=best_us,
+                          measurements=tuple(measurements))

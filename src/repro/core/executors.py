@@ -201,7 +201,11 @@ class EpilogueExecutor(FusedExecutor):
     One launch per anti-diagonal group; the group's int32 product lives
     only in a VMEM scratch block (``tuning.hbm_pass_model`` drops the
     per-group P read). ``concat_k`` needs no concatenated operands here —
-    the pair grid dimension accumulates the same exact int32 sum.
+    the pair grid dimension accumulates the same exact int32 sum. A 3-D
+    output shape runs the batch-grid epilogue kernels ((s, B, m, k)
+    slice stacks, batch outermost in the grid): stacked-weights batches
+    keep epilogue fusion instead of downgrading to the stage-fused
+    pipeline.
     """
 
     def _groups(self):
@@ -221,7 +225,7 @@ class EpilogueExecutor(FusedExecutor):
                  e_base: jax.Array, shape):
         from repro.kernels import (int8_matmul_nt_epilogue_dw,
                                    int8_matmul_nt_epilogue_sw)
-        assert len(shape) == 2, "epilogue fusion is 2-D (plan invariant)"
+        assert len(shape) in (2, 3), shape    # 3-D: batch-grid kernels
         tile = self.plan.tile
         kw = dict(bm=tile.bm, bn=tile.bn, bk=tile.bk,
                   interpret=self.plan.interpret)

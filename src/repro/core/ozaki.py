@@ -84,8 +84,10 @@ class OzakiConfig:
         "pallas_fused" (fused split/GEMM/accumulate kernel pipeline).
     fuse_epilogue: with ``backend="pallas_fused"``, run GEMM + scaled
         accumulation in one kernel per group (int32 products stay in
-        VMEM). Ignored by other backends; batch-grid plans fall back to
-        the stage-fused pipeline.
+        VMEM). Ignored by other backends. Stacked-weights batches run
+        the batch-grid epilogue kernel (set the
+        ``REPRO_OZAKI_BATCHED_EPILOGUE=0`` env knob to fall back to the
+        stage-fused pipeline on batched calls; the fallback warns once).
     fuse_diagonals: O1 — exact int32 pre-accumulation per anti-diagonal.
     concat_k: O2 — one GEMM per anti-diagonal via k-concatenation.
     full_pairs: compute all s*s pairs (paper computes i+j <= s+1 only).

@@ -19,7 +19,13 @@ Given operand shapes, this module picks (a) the number of splits from the
 analytic model in ``core.analytic`` and (b) Pallas block shapes for the
 three pipeline stages, so callers never hand-tune kernel launches.
 
-Heuristics (kept deliberately closed-form — no autotuning searches):
+The analytic planner is the fallback and the seed of the search space;
+the *measured* layer lives in ``core.autotune``: ``select_pipeline_plan``
+consults a persistent ``PlanCache`` when given one (hit returns without
+re-tuning) and can hand a miss to the measurement-driven autotuner
+(``autotune=True``), which times candidate plans on the live backend.
+
+Heuristics of the analytic layer (closed-form, shape-only):
 
 * **num_splits** — the smallest ``s`` with ``s * BPS(k) >= mantissa_space``
   (Eq. 5 / Table 2): the paper's INT8xs operating point for a target
@@ -50,6 +56,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
+import warnings
 from typing import Optional, Sequence
 
 # alignment vocabulary is owned by the kernels' shared launch layer, so
@@ -68,6 +76,26 @@ CONCAT_K_MAX = 2048                 # below this, slice GEMMs are launch-bound
 BACKENDS = ("xla", "pallas", "pallas_fused")
 FUSION_MODES = ("none", "stages", "epilogue")
 BATCH_LAYOUTS = ("none", "rows", "grid")
+
+# The batch-grid epilogue kernels ship with this PR; the env knob exists
+# for deployments that need to fall back to the stage-fused pipeline on
+# batched calls (e.g. a backend where the 5-D epilogue grid is not yet
+# validated). The fallback warns once per reason instead of silently
+# switching fusion mode.
+BATCHED_EPILOGUE_ENV = "REPRO_OZAKI_BATCHED_EPILOGUE"
+_DOWNGRADE_WARNED: set[str] = set()
+
+
+def batched_epilogue_enabled() -> bool:
+    return os.environ.get(BATCHED_EPILOGUE_ENV, "1") != "0"
+
+
+def _warn_downgrade_once(reason: str) -> None:
+    if reason in _DOWNGRADE_WARNED:
+        return
+    _DOWNGRADE_WARNED.add(reason)
+    warnings.warn(f"fuse_epilogue downgraded to fusion='stages': {reason}",
+                  stacklevel=3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -232,10 +260,6 @@ class PipelinePlan:
                              f"expected one of {BATCH_LAYOUTS}")
         if self.accum not in ("f64", "df32"):
             raise ValueError(f"unknown accum {self.accum!r}")
-        if self.fusion == "epilogue" and self.batch_layout == "grid":
-            raise ValueError("epilogue fusion has no batch-grid kernel; "
-                             "plan builders downgrade grid plans to "
-                             "fusion='stages'")
 
     def diagonals(self):
         return diagonal_groups(self.num_splits, self.full_pairs)
@@ -260,11 +284,15 @@ class PipelinePlan:
 def _fusion_for(backend: str, fuse_epilogue: bool, batch_layout: str) -> str:
     if backend != "pallas_fused":
         return "none"
-    # the epilogue kernel family is 2-D; a batch grid falls back to the
-    # stage-fused pipeline (batched GEMM kernel + fused accumulation)
-    if fuse_epilogue and batch_layout != "grid":
-        return "epilogue"
-    return "stages"
+    if not fuse_epilogue:
+        return "stages"
+    if batch_layout == "grid" and not batched_epilogue_enabled():
+        _warn_downgrade_once(
+            f"stacked-weights batch with {BATCHED_EPILOGUE_ENV}=0 — the "
+            "batch-grid epilogue kernel is disabled, falling back to the "
+            "stage-fused pipeline (batched GEMM + fused accumulation)")
+        return "stages"
+    return "epilogue"
 
 
 def plan_for(cfg, *, batch_layout: str = "none") -> PipelinePlan:
@@ -296,7 +324,10 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
                          interpret: bool = True,
                          mantissa_space: int = DGEMM_MANTISSA_SPACE,
                          mmu: MMUSpec = INT8_INT32,
-                         vmem_budget: int = VMEM_BUDGET) -> PipelinePlan:
+                         vmem_budget: int = VMEM_BUDGET,
+                         cache=None, autotune: bool = False,
+                         dtype: Optional[str] = None,
+                         device_kind: Optional[str] = None) -> PipelinePlan:
     """Build the full execution strategy from shapes alone.
 
     ``batch``/``broadcast_weights`` describe the batched API's operands:
@@ -304,6 +335,15 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
     folded ``batch * m`` row extent — one big GEMM), a stacked-weights
     batch becomes an explicit grid dimension (and disables ``concat_k``,
     whose concatenated operands would be materialized per batch row).
+
+    ``cache`` (a ``core.autotune.PlanCache``) short-circuits planning: a
+    hit for ``(m, n, k, batch, dtype, backend, device_kind)`` returns
+    the cached plan without re-tuning. On a miss the analytic plan above
+    is returned — unless ``autotune=True``, in which case the measured
+    autotuner (``core.autotune.autotune_plan``) times the candidate
+    plans on the live backend, stores the winner in the cache, and
+    returns it. ``dtype`` defaults from ``accum`` ("f64" -> float64,
+    else float32 — the operand dtype the pipeline runs on).
     """
     if batch <= 1 and not broadcast_weights:
         layout = "none"
@@ -311,6 +351,27 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
         layout = "rows"
     else:
         layout = "grid"
+    if cache is not None or autotune:
+        from .autotune import autotune_plan, plan_cache_key   # lazy: no cycle
+        key = plan_cache_key(m, n, k, batch=batch, dtype=dtype, accum=accum,
+                             backend=backend, device_kind=device_kind)
+        if cache is not None:
+            hit = cache.get(key)
+            # an explicit num_splits pins the accuracy operating point:
+            # a cached plan tuned at a different s must not substitute
+            # for it (num_splits is result-affecting; the key is not
+            # fine-grained enough to distinguish it by design)
+            if hit is not None and (num_splits is None or
+                                    hit.num_splits == num_splits):
+                return hit
+        if autotune:
+            return autotune_plan(
+                m, n, k, batch=batch, broadcast_weights=broadcast_weights,
+                backend=backend, accum=accum, num_splits=num_splits,
+                fuse_epilogue=fuse_epilogue, shard_axis=shard_axis,
+                interpret=interpret, dtype=dtype, device_kind=device_kind,
+                mantissa_space=mantissa_space, mmu=mmu,
+                vmem_budget=vmem_budget, cache=cache).best
     m_eff = m * batch if layout == "rows" else m
     tile = select_plan(m_eff, n, k, batch=batch if layout == "grid" else 1,
                        num_splits=num_splits, mantissa_space=mantissa_space,
@@ -335,7 +396,8 @@ def apply_pipeline_plan(cfg, plan: PipelinePlan):
 
 def hbm_pass_model(num_splits: int, *, fused: bool,
                    fuse_diagonals: bool = True,
-                   fuse_epilogue: bool = False) -> dict:
+                   fuse_epilogue: bool = False,
+                   batch: int = 1, batch_layout: str = "none") -> dict:
     """Modeled HBM round-trips per stage for one operand/output matrix.
 
     Counts *array passes* (each read or write of a full matrix-sized
@@ -352,7 +414,24 @@ def hbm_pass_model(num_splits: int, *, fused: bool,
       (``fuse_epilogue=True``, implies ``fused``) accumulates inside the
       GEMM grid so the int32 product never round-trips at all — only the
       carried C read/write remains.
+
+    ``batch``/``batch_layout`` model the batched pipeline: every layout
+    runs the identical per-element pipeline (the "rows" layout folds the
+    batch into rows of ONE matrix; the "grid" layout walks the same
+    blocks per batch row, including the batch-grid epilogue kernel), so
+    passes scale linearly with the batch size. Until the batch-grid
+    epilogue kernel existed, a "grid" batch downgraded epilogue plans to
+    the stage-fused pipeline — that legacy state is modeled by calling
+    with ``fuse_epilogue=False`` — so the kernel removes one modeled
+    pass per accumulation group (3 -> 2) on the batched path.
     """
+    if batch_layout not in BATCH_LAYOUTS:
+        raise ValueError(f"unknown batch_layout {batch_layout!r}; "
+                         f"expected one of {BATCH_LAYOUTS}")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if batch > 1 and batch_layout == "none":
+        raise ValueError("batch > 1 requires batch_layout 'rows' or 'grid'")
     fused = fused or fuse_epilogue      # epilogue fusion implies fused
     s = num_splits
     groups = s if fuse_diagonals else s * (s + 1) // 2
@@ -362,5 +441,7 @@ def hbm_pass_model(num_splits: int, *, fused: bool,
     else:
         # per group: read P + read/write C(hi,lo); unfused adds temp traffic
         accum_passes = groups * (3 if fused else 5)
+    split_passes *= batch
+    accum_passes *= batch
     return {"split": split_passes, "accum": accum_passes,
             "total": split_passes + accum_passes}

@@ -25,7 +25,10 @@ accumulator C inside the GEMM grid's epilogue — the int32 products never
 round-trip to HBM (see ``core.tuning.hbm_pass_model``). The epilogue
 runs the exact rounding sequence of the standalone accumulation kernels
 (``ozaki_accum.dw_accum_step`` / the single rounded f64 add), so results
-stay bitwise identical to the ``xla`` reference pipeline.
+stay bitwise identical to the ``xla`` reference pipeline. Both epilogue
+variants also take batch-grid operands — ``(s, B, m, k)`` slice stacks
+with ``(B, m, n)`` carried accumulators and the batch as the outermost
+grid dimension — so stacked-weights batches keep epilogue fusion.
 
 Validated on CPU in interpret mode against ``ref.int8_matmul_nt_ref``.
 """
@@ -148,6 +151,14 @@ def int8_matmul_nt_batched(a: jax.Array, b_t: jax.Array, *, bm: int = 256,
 # the anti-diagonal's (p, q = t - p) pairs. The int32 scratch accumulator
 # is exact (alpha reserves diagonal-fusion headroom), so the epilogue sees
 # the same group product P_t the unfused pipeline materializes to HBM.
+#
+# The batch-grid variants take (s, B, m, k) x (s, B, n, k) slice stacks
+# and prepend the batch as the OUTERMOST grid dimension:
+# (B, m/bm, n/bn, npairs, k/bk). The inner (pairs, k) walk per C block is
+# unchanged — the scratch accumulator carries across grid steps exactly
+# as in the 2-D kernel because (pp, kk) remain the fastest-varying dims —
+# so a stacked-weights batch keeps ``fuse_epilogue=True`` instead of
+# falling back to the stage-fused pipeline (the PR 2 limitation).
 
 
 def _epilogue_kernel_sw(scale, npairs, nk, a_ref, b_ref, c_ref, o_ref,
@@ -195,13 +206,66 @@ def _epilogue_kernel_dw(scale, npairs, nk, a_ref, b_ref, chi_ref, clo_ref,
         olo_ref[...] = n_lo
 
 
+def _epilogue_kernel_batched_sw(scale, npairs, nk, a_ref, b_ref, c_ref,
+                                o_ref, acc_ref):
+    pp = pl.program_id(3)
+    kk = pl.program_id(4)
+
+    @pl.when((pp == 0) & (kk == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[0, 0], b_ref[0, 0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when((pp == npairs - 1) & (kk == nk - 1))
+    def _epilogue():
+        c = c_ref[0]
+        o_ref[...] = (c + acc_ref[...].astype(c.dtype) * jnp.asarray(
+            scale, c.dtype))[None]
+
+
+def _epilogue_kernel_batched_dw(scale, npairs, nk, a_ref, b_ref, chi_ref,
+                                clo_ref, ohi_ref, olo_ref, acc_ref):
+    pp = pl.program_id(3)
+    kk = pl.program_id(4)
+
+    @pl.when((pp == 0) & (kk == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[0, 0], b_ref[0, 0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when((pp == npairs - 1) & (kk == nk - 1))
+    def _epilogue():
+        n_hi, n_lo = dw_accum_step(acc_ref[...], chi_ref[0], clo_ref[0],
+                                   scale)
+        ohi_ref[...] = n_hi[None]
+        olo_ref[...] = n_lo[None]
+
+
+_EPILOGUE_BATCHED = {_epilogue_kernel_sw: _epilogue_kernel_batched_sw,
+                     _epilogue_kernel_dw: _epilogue_kernel_batched_dw}
+
+
 def _epilogue_launch(a_slices, b_slices, c_arrays, kernel, *, p_lo, t,
                      npairs, scale, bm, bn, bk, interpret):
-    """Shared launch recipe for both epilogue variants.
+    """Shared launch recipe for both epilogue variants, 2-D and batched.
 
-    c_arrays: list of (m, n) accumulator planes (1 for sw, 2 for dw),
-    donated and carried through ``input_output_aliases``.
+    c_arrays: list of (m, n) — or (B, m, n) for (s, B, m, k) slice
+    stacks — accumulator planes (1 for sw, 2 for dw), donated and
+    carried through ``input_output_aliases``.
     """
+    if a_slices.ndim == 4:
+        return _epilogue_launch_batched(
+            a_slices, b_slices, c_arrays, _EPILOGUE_BATCHED[kernel],
+            p_lo=p_lo, t=t, npairs=npairs, scale=scale, bm=bm, bn=bn,
+            bk=bk, interpret=interpret)
     s, m, k = a_slices.shape
     s2, n, k2 = b_slices.shape
     assert k == k2, (a_slices.shape, b_slices.shape)
@@ -234,6 +298,42 @@ def _epilogue_launch(a_slices, b_slices, c_arrays, kernel, *, p_lo, t,
     return [o[:m, :n] for o in outs]
 
 
+def _epilogue_launch_batched(a_slices, b_slices, c_arrays, kernel, *, p_lo,
+                             t, npairs, scale, bm, bn, bk, interpret):
+    """Batch-grid epilogue launch: (s, B, m, k) x (s, B, n, k) slices,
+    (B, m, n) carried accumulators, batch outermost in the grid."""
+    s, B, m, k = a_slices.shape
+    s2, B2, n, k2 = b_slices.shape
+    assert k == k2 and B == B2, (a_slices.shape, b_slices.shape)
+    assert 0 <= p_lo and p_lo + npairs <= s, (p_lo, npairs, s)
+    assert 0 <= t - p_lo - (npairs - 1) and t - p_lo < s2, (p_lo, t, npairs)
+    bm_, bn_, bk_ = gemm_blocks(m, n, k, bm, bn, bk)
+    a_p = pad_tail(a_slices, (bm_, bk_))
+    b_p = pad_tail(b_slices, (bn_, bk_))
+    c_p = [pad_tail(c, (bm_, bn_)) for c in c_arrays]
+    _, _, mp, kp = a_p.shape
+    _, _, np_, _ = b_p.shape
+    gm, gn, gk = grid_for((mp, np_, kp), (bm_, bn_, bk_))
+    nc = len(c_p)
+    c_spec = pl.BlockSpec((1, bm_, bn_), lambda b, i, j, pp, kk: (b, i, j))
+    outs = pl.pallas_call(
+        functools.partial(kernel, scale, npairs, gk),
+        grid=(B, gm, gn, npairs, gk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm_, bk_),
+                         lambda b, i, j, pp, kk: (p_lo + pp, b, i, kk)),
+            pl.BlockSpec((1, 1, bn_, bk_),
+                         lambda b, i, j, pp, kk: (t - p_lo - pp, b, j, kk)),
+        ] + [c_spec] * nc,
+        out_specs=[c_spec] * nc,
+        out_shape=[jax.ShapeDtypeStruct((B, mp, np_), c.dtype) for c in c_p],
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
+        input_output_aliases={2 + i: i for i in range(nc)},
+        interpret=interpret,
+    )(a_p, b_p, *c_p)
+    return [o[:, :m, :n] for o in outs]
+
+
 @functools.partial(jax.jit, static_argnames=("p_lo", "t", "npairs", "scale",
                                              "bm", "bn", "bk", "interpret"))
 def int8_matmul_nt_epilogue_sw(a_slices: jax.Array, b_slices: jax.Array,
@@ -245,6 +345,8 @@ def int8_matmul_nt_epilogue_sw(a_slices: jax.Array, b_slices: jax.Array,
 
     a_slices: (s, m, k) int8; b_slices: (s, n, k) int8; c: (m, n) float
     (f64 on CPU oracle hosts). One launch covers one anti-diagonal group.
+    Batch-grid form: (s, B, m, k) x (s, B, n, k) slices with a (B, m, n)
+    accumulator — the batch rides as the outermost grid dimension.
     """
     assert a_slices.dtype == jnp.int8 and b_slices.dtype == jnp.int8
     (out,) = _epilogue_launch(a_slices, b_slices, [c], _epilogue_kernel_sw,
@@ -266,6 +368,8 @@ def int8_matmul_nt_epilogue_dw(a_slices: jax.Array, b_slices: jax.Array,
     The compensated df32 add is ``ozaki_accum.dw_accum_step`` — the same
     rounding sequence as the standalone fused accumulation kernel, so the
     epilogue pipeline stays bitwise identical to the XLA reference.
+    Accepts the batch-grid form exactly like the sw variant: (s, B, m, k)
+    slices with (B, m, n) accumulator planes.
     """
     assert a_slices.dtype == jnp.int8 and b_slices.dtype == jnp.int8
     o_hi, o_lo = _epilogue_launch(a_slices, b_slices, [c_hi, c_lo],

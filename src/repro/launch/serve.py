@@ -28,6 +28,15 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--precision", default=None,
+                    choices=["bf16", "int8_quant", "ozaki_fp64"],
+                    help="override cfg.matmul_precision for this engine")
+    ap.add_argument("--plan-cache", metavar="PATH", default=None,
+                    help="persistent PlanCache JSON the engine pre-warms "
+                         "at startup (ozaki_fp64 only)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure candidate plans for cache misses during "
+                         "the startup pre-warm")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -38,7 +47,13 @@ def main():
     rng = np.random.default_rng(args.seed)
 
     engine = ServingEngine(cfg, params, num_slots=args.slots,
-                           max_len=args.max_len)
+                           max_len=args.max_len,
+                           matmul_precision=args.precision,
+                           plan_cache=args.plan_cache,
+                           autotune_plans=args.autotune or None)
+    if engine.plan_cache is not None:
+        print(f"[serve] plan cache pre-warmed: {len(engine.plan_cache)} "
+              f"plans ({engine.plan_cache.path})")
     reqs = []
     for rid in range(args.requests):
         plen = int(rng.integers(4, 12))
@@ -55,7 +70,7 @@ def main():
           f"{dt:.2f}s ({total_tokens / dt:.1f} tok/s) with "
           f"{engine._steps} batched decode ticks")
 
-    ref = generate_sequential(cfg, params, reqs[0].prompt,
+    ref = generate_sequential(engine.cfg, params, reqs[0].prompt,
                               reqs[0].max_new_tokens,
                               max_len=args.max_len)
     got = next(r for r in finished if r.rid == 0).generated

@@ -97,6 +97,34 @@ def _matmul_int8_quant(x, w):
     return acc.astype(jnp.float32) * xs * ws
 
 
+def _apply_cached_plan(cfg, x, w, backend: str):
+    """Fold the ambient plan cache's tuned plan into an OzakiConfig.
+
+    Trace-time lookup (shapes are static under jit) against the cache
+    the serving engine pre-warmed and scoped around the tick
+    (``core.autotune.use_plan_cache``) — a miss, or no ambient cache,
+    leaves the config untouched. Only the RESULT-INVARIANT plan fields
+    are applied (tile shapes and the stage/epilogue fusion flip, both
+    bitwise-neutral per the backend-parity suite); num_splits and the
+    accumulation schedule stay the model config's, so serving results
+    are bit-identical with and without a cache.
+    """
+    import dataclasses as _dc
+
+    from repro.core.autotune import active_plan_cache, plan_cache_key
+
+    cache = active_plan_cache()
+    if cache is None:
+        return cfg
+    batch, m = (x.shape[0], x.shape[1]) if x.ndim == 3 else (1, x.shape[0])
+    plan = cache.get(plan_cache_key(m, w.shape[1], w.shape[0], batch=batch,
+                                    dtype="float32", backend=backend))
+    if plan is None:
+        return cfg
+    return _dc.replace(cfg, tile=plan.tile,
+                       fuse_epilogue=(plan.fusion == "epilogue"))
+
+
 def _matmul_ozaki(x, w, num_splits: int, backend: str = "xla",
                   fuse_epilogue: bool = False, shard_axis: str = ""):
     """The paper's path: FP64-accurate x @ w out of int8 MXU GEMMs.
@@ -133,6 +161,7 @@ def _matmul_ozaki(x, w, num_splits: int, backend: str = "xla",
                       fuse_diagonals=True, interpret=INTERPRET)
     x = x.astype(jnp.float32)
     w = w.astype(jnp.float32)
+    cfg = _apply_cached_plan(cfg, x, w, backend)
     if x.ndim == 3:
         return ozaki_matmul_batched(x, w, cfg)
     lead = x.shape[:-1]

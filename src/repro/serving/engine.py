@@ -27,6 +27,17 @@ jax version the in-model constraints engage only for 2-D projections —
 see ``models.layers._matmul_ozaki`` for the XLA SPMD caveat; the
 sharded batched GEMM itself is served by
 ``parallel.ozaki_shard.ozaki_matmul_kshard_auto``.)
+
+Plan cache pre-warm: with a ``plan_cache`` (or ``cfg.ozaki_plan_cache``
+path) and ``matmul_precision="ozaki_fp64"``, the engine resolves a
+``PipelinePlan`` for every dense decode projection shape AT STARTUP —
+measured on the live backend when ``autotune_plans`` /
+``cfg.ozaki_autotune`` is set, analytic otherwise — and persists the
+cache. The cache is then scoped around every tick
+(``core.autotune.use_plan_cache``) exactly like the mesh, so the first
+traced decode step picks the tuned launch parameters up from the cache:
+steady-state serving never tunes (or even re-plans) on the request
+path.
 """
 from __future__ import annotations
 
@@ -57,6 +68,30 @@ def greedy_sample(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
+def ozaki_projection_shapes(cfg) -> list[tuple[int, int]]:
+    """Distinct (k, n) weight shapes of the dense decode projections.
+
+    These are the ``(slots, 1, k) @ (k, n)`` broadcast-weights matmuls a
+    decode tick issues through ``models.layers.policy_matmul``: the
+    attention q/k/v/o projections, the fused gate+up and the down MLP
+    matmuls, and the unembedding. MoE expert matmuls run per-expert with
+    the same (d, 2*ff_e)/(ff_e, d) pattern when configured; SSM inner
+    projections are left to miss into the analytic plan (cheap).
+    """
+    d = cfg.d_model
+    shapes = set()
+    if cfg.num_heads:
+        h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        shapes |= {(d, h * hd), (d, kv * hd), (h * hd, d)}
+    if cfg.d_ff:
+        shapes |= {(d, 2 * cfg.d_ff), (cfg.d_ff, d)}
+    if getattr(cfg, "moe", None) is not None:
+        ffe = cfg.moe.d_ff_expert
+        shapes |= {(d, 2 * ffe), (ffe, d)}
+    shapes.add((d, cfg.vocab_size))          # unembed (tied: embed.T)
+    return sorted(shapes)
+
+
 def _insert_row(batched, single, row: int):
     """Write a batch-1 state pytree into slot ``row`` of the batched one.
 
@@ -81,7 +116,8 @@ class ServingEngine:
                  ozaki_backend: Optional[str] = None,
                  ozaki_fuse_epilogue: Optional[bool] = None,
                  ozaki_shard_axis: Optional[str] = None,
-                 mesh=None):
+                 mesh=None, plan_cache=None,
+                 autotune_plans: Optional[bool] = None):
         overrides = {}
         if matmul_precision is not None:
             overrides["matmul_precision"] = matmul_precision
@@ -95,6 +131,17 @@ class ServingEngine:
             cfg = dataclasses.replace(cfg, **overrides)
         self.mesh = mesh
         self.cfg = cfg
+        # plan cache: a PlanCache, a path, or the config's path; pre-warm
+        # resolves every decode projection shape before serving starts.
+        if plan_cache is None:
+            plan_cache = getattr(cfg, "ozaki_plan_cache", "") or None
+        if isinstance(plan_cache, (str, bytes)) or hasattr(plan_cache,
+                                                           "__fspath__"):
+            from repro.core.autotune import PlanCache
+            plan_cache = PlanCache.load(plan_cache)
+        self.plan_cache = plan_cache
+        self.autotune_plans = (getattr(cfg, "ozaki_autotune", False)
+                               if autotune_plans is None else autotune_plans)
         self.params = params
         self.num_slots = num_slots
         self.max_len = max_len
@@ -108,6 +155,9 @@ class ServingEngine:
         self.cache_dtype = cache_dtype
         self._decode = jax.jit(functools.partial(decode_step, cfg))
         self._steps = 0
+        if (self.plan_cache is not None and
+                cfg.matmul_precision == "ozaki_fp64"):
+            self._prewarm_plans()            # before any request is served
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -159,10 +209,55 @@ class ServingEngine:
         from repro.parallel.ozaki_shard import use_shard_mesh
         return use_shard_mesh(self.mesh)
 
+    def _plan_scope(self):
+        """Scope this engine's plan cache around traced model calls, the
+        same way ``_mesh_scope`` scopes the mesh: the jitted decode step
+        reads it at trace time (``models.layers`` consults the ambient
+        cache), so cached launch plans apply without re-planning — let
+        alone re-tuning — on the request path."""
+        if self.plan_cache is None:
+            return contextlib.nullcontext()
+        from repro.core.autotune import use_plan_cache
+        return use_plan_cache(self.plan_cache)
+
+    def _prewarm_plans(self):
+        """Resolve a PipelinePlan for every decode projection shape.
+
+        Runs at construction, BEFORE any request: with
+        ``autotune_plans`` each cache miss is measured on the live
+        backend (warm-up + ``block_until_ready``); without it the
+        analytic plan is stored. Either way every steady-state decode
+        projection is a cache HIT afterwards, and the cache file (when
+        backed by a path) holds the plans for the next process.
+        """
+        from repro.core.autotune import plan_cache_key
+        from repro.core.tuning import select_pipeline_plan
+        from repro.kernels.ops import INTERPRET
+        cfg = self.cfg
+        backend = getattr(cfg, "ozaki_backend", "xla")
+        fuse_epilogue = getattr(cfg, "ozaki_fuse_epilogue", False)
+        num_splits = getattr(cfg, "ozaki_splits", None)
+        for k, n in ozaki_projection_shapes(cfg):
+            key = plan_cache_key(1, n, k, batch=self.num_slots,
+                                 dtype="float32", backend=backend)
+            if key in self.plan_cache:
+                self.plan_cache.get(key)         # count the hit
+                continue
+            plan = select_pipeline_plan(
+                1, n, k, batch=self.num_slots, broadcast_weights=True,
+                backend=backend, accum="df32", num_splits=num_splits,
+                fuse_epilogue=fuse_epilogue, interpret=INTERPRET,
+                dtype="float32", cache=self.plan_cache,
+                autotune=self.autotune_plans)
+            if key not in self.plan_cache:       # analytic miss: store it
+                self.plan_cache.put(key, plan)
+        if self.plan_cache.path is not None:
+            self.plan_cache.save()
+
     # ------------------------------------------------------------------
     def step(self):
         """One engine tick: admit, one batched decode, retire."""
-        with self._mesh_scope():
+        with self._mesh_scope(), self._plan_scope():
             self._admit()
             if all(r is None for r in self.slot_req):
                 return

@@ -1,0 +1,379 @@
+"""Measured-plan autotuner + persistent plan cache (ISSUE 3).
+
+Covers the PlanCache contract (round-trip, hit/miss accounting, version
+mismatch and corrupted-file fallback to analytic planning), the
+``select_pipeline_plan`` cache/autotune integration, result-invariance
+of the candidate space (a cached/tuned plan is bitwise-equal to the
+analytic plan's results), the tiny-candidate-set measurement smoke that
+exercises the timing path on every PR, and the serving engine's
+startup pre-warm (steady-state serving never tunes on the request
+path).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune as at
+from repro.core.autotune import (PLAN_CACHE_VERSION, AutotuneReport,
+                                 PlanCache, PlanKey, autotune_plan,
+                                 candidate_plans, measure_plan,
+                                 plan_cache_key, use_plan_cache)
+from repro.core.ozaki import OzakiConfig, ozaki_matmul
+from repro.core.tuning import (PipelinePlan, TilePlan, apply_pipeline_plan,
+                               select_pipeline_plan)
+
+
+def _phi(rng, m, k):
+    return jnp.asarray(rng.uniform(-0.5, 0.5, (m, k))
+                       * np.exp(rng.standard_normal((m, k))))
+
+
+def _distinct_plan() -> PipelinePlan:
+    """A plan no analytic path would produce (sentinel for hit checks)."""
+    return PipelinePlan(num_splits=5, backend="pallas_fused",
+                        fusion="stages", tile=TilePlan(bm=32, bn=128,
+                                                       bk=128))
+
+
+KEY = PlanKey(m=8, n=16, k=32, batch=1, dtype="float64",
+              backend="pallas_fused", device_kind="cpu")
+
+
+# ----------------------------------------------------------------------------
+# PlanCache: persistence contract
+# ----------------------------------------------------------------------------
+
+def test_plan_cache_roundtrip(tmp_path):
+    path = tmp_path / "plans.json"
+    cache = PlanCache(path)
+    plan = _distinct_plan()
+    cache.put(KEY, plan, measured_us=12.5)
+    assert cache.save() == str(path)
+    back = PlanCache.load(path)
+    assert len(back) == 1 and KEY in back
+    assert back.get(KEY) == plan
+    assert back.measured_us(KEY) == 12.5
+    # the wire format is versioned, structured-key JSON
+    data = json.loads(path.read_text())
+    assert data["version"] == PLAN_CACHE_VERSION
+    (entry,) = data["plans"].values()
+    assert entry["key"] == KEY.to_dict()
+    assert PipelinePlan.from_dict(entry["plan"]) == plan
+
+
+def test_plan_cache_hit_miss_accounting(tmp_path):
+    cache = PlanCache(tmp_path / "p.json")
+    assert cache.get(KEY) is None
+    assert (cache.hits, cache.misses) == (0, 1)
+    cache.put(KEY, _distinct_plan())
+    assert cache.get(KEY) is not None
+    assert (cache.hits, cache.misses) == (1, 1)
+
+
+def test_plan_cache_version_mismatch_falls_back(tmp_path):
+    path = tmp_path / "plans.json"
+    cache = PlanCache(path)
+    cache.put(KEY, _distinct_plan())
+    cache.save()
+    data = json.loads(path.read_text())
+    data["version"] = PLAN_CACHE_VERSION + 1
+    path.write_text(json.dumps(data))
+    with pytest.warns(UserWarning, match="version"):
+        back = PlanCache.load(path)
+    assert len(back) == 0
+    # planning degrades to analytic, never errors
+    plan = select_pipeline_plan(8, 16, 32, cache=back, accum="f64")
+    assert plan == select_pipeline_plan(8, 16, 32, accum="f64")
+
+
+@pytest.mark.parametrize("content", ["{not json", '{"plans": 7}',
+                                     '{"version": 1, "plans": '
+                                     '{"x": {"plan": {"bogus": 1}}}}'])
+def test_plan_cache_corrupted_file_falls_back(tmp_path, content):
+    path = tmp_path / "plans.json"
+    path.write_text(content)
+    with pytest.warns(UserWarning, match="unreadable|version"):
+        back = PlanCache.load(path)
+    assert len(back) == 0
+    plan = select_pipeline_plan(8, 16, 32, cache=back, accum="f64")
+    assert plan == select_pipeline_plan(8, 16, 32, accum="f64")
+
+
+def test_plan_cache_missing_file_is_empty(tmp_path):
+    back = PlanCache.load(tmp_path / "nope.json")
+    assert len(back) == 0
+
+
+# ----------------------------------------------------------------------------
+# select_pipeline_plan x cache: hit short-circuits, miss stays analytic
+# ----------------------------------------------------------------------------
+
+def test_select_pipeline_plan_cache_hit_returns_cached():
+    cache = PlanCache()
+    sentinel = _distinct_plan()
+    key = plan_cache_key(8, 16, 32, dtype="float64", device_kind="cpu")
+    cache.put(key, sentinel)
+    got = select_pipeline_plan(8, 16, 32, accum="f64", cache=cache,
+                               device_kind="cpu")
+    assert got == sentinel                      # NOT the analytic plan
+    assert cache.hits == 1
+
+
+def test_select_pipeline_plan_cache_miss_analytic_not_stored():
+    cache = PlanCache()
+    got = select_pipeline_plan(8, 16, 32, accum="f64", cache=cache)
+    assert got == select_pipeline_plan(8, 16, 32, accum="f64")
+    assert len(cache) == 0                      # analytic misses don't pollute
+    assert cache.misses == 1
+
+
+def test_cache_hit_rejected_on_num_splits_mismatch():
+    """An explicit num_splits pins the accuracy operating point: a plan
+    cached at a different s must NOT substitute for it (the key is
+    deliberately fusion/splits-agnostic, so the hit path validates)."""
+    import dataclasses
+
+    cache = PlanCache()
+    key = plan_cache_key(8, 16, 32, accum="f64", device_kind="cpu")
+    cache.put(key, dataclasses.replace(_distinct_plan(), num_splits=5))
+    got = select_pipeline_plan(8, 16, 32, accum="f64", num_splits=13,
+                               cache=cache, device_kind="cpu")
+    assert got.num_splits == 13                 # analytic, not the s=5 hit
+    # unpinned callers accept whatever operating point was tuned
+    got2 = select_pipeline_plan(8, 16, 32, accum="f64", cache=cache,
+                                device_kind="cpu")
+    assert got2.num_splits == 5
+
+
+def test_autotune_honors_analytic_knobs():
+    """mantissa_space/mmu/vmem_budget reach the candidate seed: the
+    autotuned operating point matches the analytic one for the same
+    target (regression: the autotune dispatch used to drop them)."""
+    from repro.core.analytic import INT8_INT32
+    tight = select_pipeline_plan(256, 256, 2048, accum="f64",
+                                 mantissa_space=106,
+                                 vmem_budget=2 ** 18)
+    cands = candidate_plans(256, 256, 2048, accum="f64",
+                            mantissa_space=106, mmu=INT8_INT32,
+                            vmem_budget=2 ** 18)
+    assert cands[0] == tight
+    assert all(c.num_splits == tight.num_splits for c in cands)
+    t = cands[0].tile
+    assert t.bm * t.bk + t.bn * t.bk + 4 * t.bm * t.bn <= 2 ** 18
+
+
+def test_plan_key_dtype_defaults_from_accum():
+    k64 = plan_cache_key(4, 4, 4, accum="f64", device_kind="x")
+    k32 = plan_cache_key(4, 4, 4, accum="df32", device_kind="x")
+    assert k64.dtype == "float64" and k32.dtype == "float32"
+    assert k64 != k32
+
+
+# ----------------------------------------------------------------------------
+# Candidate space: analytic seed first, result-invariant by default
+# ----------------------------------------------------------------------------
+
+def test_candidates_analytic_first_and_bounded():
+    cands = candidate_plans(64, 64, 256, accum="f64", max_candidates=4)
+    assert 2 <= len(cands) <= 4
+    assert cands[0] == select_pipeline_plan(64, 64, 256, accum="f64")
+    assert len(set(cands)) == len(cands)        # deduped
+    # result-affecting knobs are frozen across default candidates
+    for c in cands:
+        assert c.num_splits == cands[0].num_splits
+        assert c.fuse_diagonals == cands[0].fuse_diagonals
+
+
+def test_candidates_num_splits_search_is_opt_in():
+    base = candidate_plans(32, 32, 64, accum="f64")
+    wide = candidate_plans(32, 32, 64, accum="f64", search_num_splits=2)
+    s0 = base[0].num_splits
+    assert {c.num_splits for c in base} == {s0}
+    assert {c.num_splits for c in wide} == {s0, s0 + 1, s0 + 2}
+
+
+def test_candidates_all_bitwise_equal_to_analytic(rng):
+    """Every default candidate — hence any cached winner — reproduces
+    the analytic plan's results bit for bit (ISSUE 3 acceptance)."""
+    m, n, k = 24, 16, 96
+    a = _phi(rng, m, k)
+    b = _phi(rng, k, n)
+    cands = candidate_plans(m, n, k, accum="f64", num_splits=5)
+    assert len(cands) >= 3
+    ref = np.asarray(ozaki_matmul(a, b, apply_pipeline_plan(OzakiConfig(),
+                                                            cands[0])))
+    for cand in cands[1:]:
+        got = np.asarray(ozaki_matmul(a, b,
+                                      apply_pipeline_plan(OzakiConfig(),
+                                                          cand)))
+        np.testing.assert_array_equal(got, ref, err_msg=repr(cand))
+
+
+def test_cached_plan_bitwise_equal_after_roundtrip(rng, tmp_path):
+    """Tune -> persist -> reload -> execute == analytic run, bitwise."""
+    m, n, k = 16, 16, 48
+    cache = PlanCache(tmp_path / "plans.json")
+    autotune_plan(m, n, k, accum="f64", num_splits=5, cache=cache,
+                  max_candidates=3, warmup=1, iters=1)
+    reloaded = PlanCache.load(tmp_path / "plans.json")
+    tuned = select_pipeline_plan(m, n, k, accum="f64", num_splits=5,
+                                 cache=reloaded)
+    a = _phi(rng, m, k)
+    b = _phi(rng, k, n)
+    got = np.asarray(ozaki_matmul(a, b, apply_pipeline_plan(OzakiConfig(),
+                                                            tuned)))
+    ref = np.asarray(ozaki_matmul(a, b, OzakiConfig(
+        num_splits=5, backend="pallas_fused", fuse_epilogue=True)))
+    np.testing.assert_array_equal(got, ref)
+
+
+# ----------------------------------------------------------------------------
+# Measurement path (tier-1 smoke: <= 4 candidates, runs on every PR)
+# ----------------------------------------------------------------------------
+
+def test_autotune_smoke_tiny_candidate_set(tmp_path, monkeypatch):
+    m, n, k = 8, 16, 32
+    cache = PlanCache(tmp_path / "plans.json")
+    rep = autotune_plan(m, n, k, accum="f64", num_splits=5, cache=cache,
+                        max_candidates=4, warmup=1, iters=1)
+    assert isinstance(rep, AutotuneReport)
+    assert 2 <= len(rep.measurements) <= 4
+    assert all(us > 0 for _, us in rep.measurements)
+    assert rep.best_us == min(us for _, us in rep.measurements)
+    assert rep.best in [p for p, _ in rep.measurements]
+    # winner persisted under the shared key
+    assert (tmp_path / "plans.json").exists()
+    assert cache.get(rep.key) == rep.best
+    # second call: pure cache hit — measurement must NOT run again
+    def boom(*a, **kw):
+        raise AssertionError("measured on a cache hit")
+    monkeypatch.setattr(at, "measure_plan", boom)
+    rep2 = autotune_plan(m, n, k, accum="f64", num_splits=5, cache=cache)
+    assert rep2.best == rep.best
+
+
+def test_select_pipeline_plan_autotune_populates_cache():
+    cache = PlanCache()                         # in-memory, no path
+    got = select_pipeline_plan(8, 16, 32, accum="f64", num_splits=5,
+                               cache=cache, autotune=True)
+    assert len(cache) == 1
+    key = plan_cache_key(8, 16, 32, accum="f64")
+    assert cache.get(key) == got
+
+
+def test_measure_plan_reports_positive_time():
+    plan = select_pipeline_plan(8, 8, 16, accum="f64", num_splits=5)
+    us = measure_plan(plan, 8, 8, 16, warmup=1, iters=1)
+    assert us > 0
+
+
+# ----------------------------------------------------------------------------
+# Ambient cache registry + the layers trace-time lookup
+# ----------------------------------------------------------------------------
+
+def test_use_plan_cache_scoping():
+    cache = PlanCache()
+    assert at.active_plan_cache() is None
+    with use_plan_cache(cache):
+        assert at.active_plan_cache() is cache
+        with use_plan_cache(None):
+            assert at.active_plan_cache() is None
+        assert at.active_plan_cache() is cache
+    assert at.active_plan_cache() is None
+
+
+def test_layers_pick_up_ambient_plans_bitwise(rng):
+    """policy_matmul under a scoped cache: the cached plan is looked up
+    (hit counted) and the result is bit-identical to the uncached run
+    (only result-invariant plan fields are applied)."""
+    from repro.configs import get_config
+    from repro.models.layers import policy_matmul
+    import dataclasses
+
+    cfg = dataclasses.replace(get_config("llama3.2-3b").reduced(),
+                              matmul_precision="ozaki_fp64",
+                              ozaki_backend="pallas_fused",
+                              ozaki_splits=5)
+    x = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    base = np.asarray(policy_matmul(cfg, x, w))
+    cache = PlanCache()
+    key = plan_cache_key(4, 32, 64, batch=1, dtype="float32",
+                         backend="pallas_fused")
+    cache.put(key, select_pipeline_plan(4, 32, 64, num_splits=5,
+                                        fuse_epilogue=True))
+    with use_plan_cache(cache):
+        got = np.asarray(policy_matmul(cfg, x, w))
+    assert cache.hits >= 1                      # the lookup really ran
+    np.testing.assert_array_equal(got, base)
+
+
+# ----------------------------------------------------------------------------
+# Serving engine pre-warm: tuned at startup, hits on the request path
+# ----------------------------------------------------------------------------
+
+def _tiny_serving_cfg():
+    import dataclasses
+
+    from repro.configs import get_config
+    return dataclasses.replace(get_config("llama3.2-3b").reduced(),
+                               matmul_precision="ozaki_fp64",
+                               ozaki_backend="pallas_fused",
+                               ozaki_fuse_epilogue=True, ozaki_splits=5)
+
+
+def test_engine_prewarm_populates_and_persists(tmp_path):
+    from repro.models import init_model
+    from repro.serving.engine import ServingEngine, ozaki_projection_shapes
+
+    cfg = _tiny_serving_cfg()
+    params, _ = init_model(cfg, jax.random.key(0))
+    path = tmp_path / "plans.json"
+    eng = ServingEngine(cfg, params, num_slots=2, max_len=32,
+                        plan_cache=str(path))
+    shapes = ozaki_projection_shapes(cfg)
+    assert len(shapes) >= 4
+    assert len(eng.plan_cache) == len(shapes)
+    assert path.exists()                        # persisted at startup
+    # every decode projection is a hit now (no tuning on request path)
+    for k, n in shapes:
+        key = plan_cache_key(1, n, k, batch=2, dtype="float32",
+                             backend=cfg.ozaki_backend)
+        assert key in eng.plan_cache
+
+
+def test_engine_prewarm_second_start_hits_without_tuning(tmp_path,
+                                                         monkeypatch):
+    from repro.models import init_model
+    from repro.serving.engine import ServingEngine
+
+    cfg = _tiny_serving_cfg()
+    params, _ = init_model(cfg, jax.random.key(0))
+    path = tmp_path / "plans.json"
+    ServingEngine(cfg, params, num_slots=2, max_len=32,
+                  plan_cache=str(path))
+
+    def boom(*a, **kw):
+        raise AssertionError("tuned on a warm start")
+    monkeypatch.setattr(at, "autotune_plan", boom)
+    eng2 = ServingEngine(cfg, params, num_slots=2, max_len=32,
+                        plan_cache=str(path), autotune_plans=True)
+    assert eng2.plan_cache.hits == len(eng2.plan_cache)
+    assert eng2.plan_cache.misses == 0
+
+
+def test_engine_plan_scope_registers_ambient_cache(tmp_path):
+    from repro.models import init_model
+    from repro.serving.engine import ServingEngine
+
+    cfg = _tiny_serving_cfg()
+    params, _ = init_model(cfg, jax.random.key(0))
+    eng = ServingEngine(cfg, params, num_slots=2, max_len=32,
+                        plan_cache=str(tmp_path / "p.json"))
+    assert at.active_plan_cache() is None
+    with eng._plan_scope():
+        assert at.active_plan_cache() is eng.plan_cache
+    assert at.active_plan_cache() is None

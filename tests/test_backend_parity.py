@@ -84,13 +84,14 @@ def test_backend_parity_odd_shapes(rng, executor, accum):
 
 
 @pytest.mark.parametrize(
-    "backend,accum",
-    list(itertools.product(["pallas", "pallas_fused"], ["f64", "df32"])))
-def test_batch_grid_parity(rng, backend, accum):
-    """The batch-grid executor (explicit batch grid dim, no vmap) must be
-    bitwise equal to the XLA batched pipeline AND to a loop over the
-    unbatched pipeline — odd/non-pow2 shapes."""
-    cfg = OzakiConfig(num_splits=7, accum=accum, backend=backend)
+    "executor,accum",
+    list(itertools.product(sorted(EXECUTORS), ["f64", "df32"])))
+def test_batch_grid_parity(rng, executor, accum):
+    """The batch-grid executors (explicit batch grid dim, no vmap) —
+    including the batch-grid EPILOGUE kernel — must be bitwise equal to
+    the XLA batched pipeline AND to a loop over the unbatched pipeline,
+    odd/non-pow2 shapes included."""
+    cfg = OzakiConfig(num_splits=7, accum=accum, **EXECUTORS[executor])
     a = jnp.stack([_phi_matrix(rng, 9, 33) for _ in range(3)])
     b = jnp.stack([_phi_matrix(rng, 33, 11) for _ in range(3)])
     got = np.asarray(ozaki_matmul_batched(a, b, cfg))
@@ -102,12 +103,40 @@ def test_batch_grid_parity(rng, backend, accum):
     np.testing.assert_array_equal(got, loop)
 
 
-def test_epilogue_downgrades_on_batch_grid(rng):
-    """fuse_epilogue with stacked weights falls back to the stage-fused
-    pipeline (there is no batch-grid epilogue kernel) — still bitwise."""
+def test_epilogue_keeps_fusion_on_batch_grid(rng):
+    """Stacked weights no longer downgrade fuse_epilogue: the plan keeps
+    fusion='epilogue' (the batch-grid epilogue kernel) — and is bitwise
+    equal to the stage-fused and xla batched pipelines."""
     cfg = OzakiConfig(num_splits=7, backend="pallas_fused",
                       fuse_epilogue=True)
-    assert cfg.plan(batch_layout="grid").fusion == "stages"
+    assert cfg.plan(batch_layout="grid").fusion == "epilogue"
+    a = jnp.stack([_phi_matrix(rng, 8, 32) for _ in range(2)])
+    b = jnp.stack([_phi_matrix(rng, 32, 8) for _ in range(2)])
+    got = np.asarray(ozaki_matmul_batched(a, b, cfg))
+    base = np.asarray(ozaki_matmul_batched(a, b, OzakiConfig(num_splits=7)))
+    np.testing.assert_array_equal(got, base)
+
+
+def test_epilogue_batch_grid_env_fallback_warns_once(rng, monkeypatch):
+    """REPRO_OZAKI_BATCHED_EPILOGUE=0 restores the stage-fused fallback
+    for stacked-weights batches — with ONE warning stating the reason,
+    not a silent fusion-mode switch — and stays bitwise."""
+    import warnings
+
+    from repro.core import tuning
+
+    monkeypatch.setenv(tuning.BATCHED_EPILOGUE_ENV, "0")
+    monkeypatch.setattr(tuning, "_DOWNGRADE_WARNED", set())
+    cfg = OzakiConfig(num_splits=7, backend="pallas_fused",
+                      fuse_epilogue=True)
+    with pytest.warns(UserWarning, match="fuse_epilogue downgraded"):
+        plan = cfg.plan(batch_layout="grid")
+    assert plan.fusion == "stages"
+    with warnings.catch_warnings():             # second plan: warn ONCE
+        warnings.simplefilter("error")
+        assert cfg.plan(batch_layout="grid").fusion == "stages"
+    # unbatched plans are untouched by the knob
+    assert cfg.plan().fusion == "epilogue"
     a = jnp.stack([_phi_matrix(rng, 8, 32) for _ in range(2)])
     b = jnp.stack([_phi_matrix(rng, 32, 8) for _ in range(2)])
     got = np.asarray(ozaki_matmul_batched(a, b, cfg))

@@ -61,7 +61,8 @@ def test_select_pipeline_plan_layouts():
     grid = select_pipeline_plan(8, 64, 256, batch=32)
     assert none.batch_layout == "none" and none.fusion == "epilogue"
     assert rows.batch_layout == "rows" and rows.fusion == "epilogue"
-    assert grid.batch_layout == "grid" and grid.fusion == "stages"
+    # the batch-grid epilogue kernel keeps stacked batches epilogue-fused
+    assert grid.batch_layout == "grid" and grid.fusion == "epilogue"
     # rows layout sizes tiles for the folded batch*m row extent
     assert rows.tile.bm >= none.tile.bm or rows.tile.bm == 256
 
@@ -73,9 +74,10 @@ def test_pipeline_plan_validation():
         PipelinePlan(batch_layout="bogus")
     with pytest.raises(ValueError, match="accum"):
         PipelinePlan(accum="f32")
-    with pytest.raises(ValueError, match="epilogue"):
-        PipelinePlan(backend="pallas_fused", fusion="epilogue",
-                     batch_layout="grid")
+    # epilogue + grid is a VALID plan since the batch-grid epilogue kernel
+    plan = PipelinePlan(backend="pallas_fused", fusion="epilogue",
+                        batch_layout="grid")
+    assert plan.fusion == "epilogue"
     assert set(FUSION_MODES) == {"none", "stages", "epilogue"}
     assert set(BATCH_LAYOUTS) == {"none", "rows", "grid"}
 
@@ -87,8 +89,8 @@ def test_plan_for_reflects_config():
     plan = plan_for(cfg)
     assert plan.num_splits == 11 and plan.accum == "df32"
     assert plan.fusion == "epilogue" and plan.shard_axis == "model"
-    # grid layout downgrades epilogue to the stage-fused pipeline
-    assert plan_for(cfg, batch_layout="grid").fusion == "stages"
+    # grid layout keeps epilogue fusion (batch-grid epilogue kernel)
+    assert plan_for(cfg, batch_layout="grid").fusion == "epilogue"
     # non-fused backends never fuse
     assert plan_for(OzakiConfig(backend="xla")).fusion == "none"
     assert plan_for(OzakiConfig(backend="pallas",
@@ -144,3 +146,46 @@ def test_hbm_pass_model_epilogue_strictly_fewer(s):
     assert epilogue["total"] < stages["total"] < unfused["total"]
     assert epilogue["split"] == stages["split"] == 1
     assert epilogue["accum"] == 2 * s       # read C + write C per group
+
+
+# regression pins for every (fusion mode, batch layout) combination at
+# s=9: per-element counts are layout-invariant (the "rows" fold and the
+# batch-grid kernels run the identical per-element pipeline — including
+# the batch-grid EPILOGUE kernel, which removes the modeled 3-vs-2
+# passes per group the old stage-fused downgrade cost stacked batches),
+# and scale linearly with the batch size.
+_FUSIONS = {"none": dict(fused=False),
+            "stages": dict(fused=True),
+            "epilogue": dict(fused=True, fuse_epilogue=True)}
+_PINNED_S9 = {"none": (9, 45, 54), "stages": (1, 27, 28),
+              "epilogue": (1, 18, 19)}
+
+
+@pytest.mark.parametrize("layout,batch", [("none", 1), ("rows", 1),
+                                          ("grid", 1), ("rows", 4),
+                                          ("grid", 4)])
+@pytest.mark.parametrize("fusion", sorted(_FUSIONS))
+def test_hbm_pass_model_matrix_pinned(fusion, layout, batch):
+    got = hbm_pass_model(9, batch=batch, batch_layout=layout,
+                         **_FUSIONS[fusion])
+    split, accum, total = (batch * x for x in _PINNED_S9[fusion])
+    assert got == {"split": split, "accum": accum, "total": total}, \
+        (fusion, layout, batch, got)
+
+
+def test_hbm_pass_model_batched_epilogue_closes_fusion_gap():
+    """The batched-epilogue claim in one number: 3 -> 2 passes per
+    accumulation group on the stacked-batch path."""
+    stages = hbm_pass_model(9, fused=True, batch=4, batch_layout="grid")
+    epi = hbm_pass_model(9, fused=True, fuse_epilogue=True, batch=4,
+                         batch_layout="grid")
+    assert stages["accum"] == 3 * 9 * 4 and epi["accum"] == 2 * 9 * 4
+
+
+def test_hbm_pass_model_validates_batch_layout():
+    with pytest.raises(ValueError, match="batch_layout"):
+        hbm_pass_model(9, fused=True, batch_layout="bogus")
+    with pytest.raises(ValueError, match="batch"):
+        hbm_pass_model(9, fused=True, batch=0)
+    with pytest.raises(ValueError, match="requires"):
+        hbm_pass_model(9, fused=True, batch=2, batch_layout="none")

@@ -1,14 +1,28 @@
-"""Paper Fig. 6: accuracy vs exponent-distribution width phi.
+"""Paper Fig. 6: accuracy vs exponent-distribution width phi — plus the
+fast-mode error-vs-pairs sweep (accuracy-adaptive planning).
 
 INT8x{9,11,13} + DGEMM + naive-FP32, errors vs the double-double oracle
 (Eq. 7), for phi in {0.1, 1, 2, 4}. CPU x64 provides the real-FP64 DGEMM
 the paper compares against (TPU itself has no FP64 — DESIGN.md §2).
+
+``run_fast`` reproduces the follow-up literature's accuracy/throughput
+trade-off (arXiv:2409.13313 fast mode; arXiv:2506.11277 bounds): at a
+fixed s it sweeps the kept-pair budget, emitting for every row the
+modeled GEMM work, the guaranteed error bound, and the MEASURED scaled
+error — and asserts the bound holds, so the CSV is a proof artifact.
+``--fast-sweep`` runs only that sweep (the nightly CI job uploads its
+CSV alongside the tuned plans).
 """
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.accuracy import (accum_floor, pair_budget_for, scaled_error,
+                                 truncation_eta)
 from repro.core.ozaki import (OzakiConfig, dgemm_f64, gemm_fp32_pass,
-                              ozaki_matmul)
+                              ozaki_matmul, resolve_accuracy_config)
+from repro.core.tuning import diagonal_groups
 from repro.core.xmath import dd_matmul_np, rel_error_vs_dd
 
 from .common import emit, phi_matrix, time_fn
@@ -33,6 +47,85 @@ def run(n: int = 96, k: int = 192):
              f"mean_rel_err={err(dgemm_f64(a, b)):.3e}")
         emit(f"fig6/FP32/phi={phi}", time_fn(gemm_fp32_pass, a, b),
              f"mean_rel_err={err(gemm_fp32_pass(a, b)):.3e}")
+    run_fast(n=n, k=k)
+
+
+def run_fast(n: int = 96, k: int = 192, num_splits: int = 9,
+             quick: bool = False):
+    """Error-vs-pairs sweep at fixed s, plus target-driven resolution rows.
+
+    Every row's ``bound_ok`` field is asserted: the measured scaled error
+    ``max |C - C_dd| / 2^{ea+eb}`` must meet the guaranteed bound
+    ``k * eta + accum_floor`` of its pair budget (and, for the
+    target-driven rows, the configured ``target_error`` plus the floor).
+    """
+    if quick:
+        n, k, num_splits = 48, 96, 5
+    rng = np.random.default_rng(4)
+    a_np = phi_matrix(rng, n, k, 1.0)
+    b_np = phi_matrix(rng, k, n, 1.0)
+    a, b = jnp.asarray(a_np), jnp.asarray(b_np)
+    hi, lo = dd_matmul_np(a_np, b_np)
+    s = num_splits
+    cfg0 = OzakiConfig(num_splits=s)
+    w = cfg0.width_for(k)
+    full_gemms = cfg0.num_gemms
+
+    def one(policy: str):
+        cfg = dataclasses.replace(cfg0, pair_policy=policy)
+        us = time_fn(lambda: ozaki_matmul(a, b, cfg))
+        c = np.asarray(ozaki_matmul(a, b, cfg))
+        eta_k = k * truncation_eta(s, w, pair_policy=policy)
+        floor = accum_floor(s, k, pair_policy=policy)
+        serr = scaled_error(c, hi, a_np, b_np, ref_lo=lo)
+        gemms = cfg.num_gemms
+        ok = serr <= eta_k + floor
+        assert ok, (policy, serr, eta_k, floor)
+        emit(f"fig6fast/INT8x{s}/pairs={gemms}", us,
+             f"policy={policy};gemms={gemms};gemms_full={full_gemms};"
+             f"modeled_gemm_flops={2.0 * n * n * k * gemms:.3e};"
+             f"eta_bound={eta_k:.3e};accum_floor={floor:.3e};"
+             f"scaled_err={serr:.3e};bound_ok={ok}",
+             plan=cfg.plan())
+        return gemms
+
+    # whole-diagonal budgets: the natural error-vs-work ladder
+    budgets, seen = ["full"], 0
+    for _, pairs in diagonal_groups(s)[:-1]:
+        seen += len(pairs)
+        budgets.append(f"budget:{seen}")
+    trimmed = [one(p) for p in reversed(budgets)]
+    assert trimmed[-1] == full_gemms and min(trimmed) < full_gemms
+
+    # target-driven rows: the planner picks the budget, the CSV proves it
+    # (targets sit above the configured s ceiling's guaranteed bound, so
+    # ``serr <= target + floor`` is a theorem, not an observation)
+    for tgt in (1e-4, 1e-6) if quick else (1e-4, 1e-8, 1e-12):
+        cfg = OzakiConfig(num_splits=s, target_error=tgt, fast_mode=True)
+        res = resolve_accuracy_config(cfg, k)
+        us = time_fn(lambda: ozaki_matmul(a, b, cfg))
+        c = np.asarray(ozaki_matmul(a, b, cfg))
+        floor = accum_floor(res.num_splits, k, pair_policy=res.pair_policy)
+        serr = scaled_error(c, hi, a_np, b_np, ref_lo=lo)
+        ok = serr <= tgt + floor
+        assert ok, (tgt, serr, floor)
+        emit(f"fig6fast/target={tgt}", us,
+             f"resolved_splits={res.num_splits};policy={res.pair_policy};"
+             f"gemms={res.num_gemms};gemms_full_s{s}={full_gemms};"
+             f"accum_floor={floor:.3e};scaled_err={serr:.3e};bound_ok={ok}",
+             plan=res.plan())
+    # fast-mode pair budget meets the bound on the Pallas pair GRID too
+    # (the truncated pair list is a grid dimension, not a mask): bitwise
+    # equal to the xla pipeline under the same policy.
+    policy = pair_budget_for(1e-8, s, w, k)
+    cfg_x = dataclasses.replace(cfg0, pair_policy=policy)
+    cfg_e = dataclasses.replace(cfg_x, backend="pallas_fused",
+                                fuse_epilogue=True)
+    bitwise = np.array_equal(np.asarray(ozaki_matmul(a, b, cfg_e)),
+                             np.asarray(ozaki_matmul(a, b, cfg_x)))
+    assert bitwise
+    emit(f"fig6fast/grid_parity/{policy}", 0.0,
+         f"epilogue_bitwise_equal_xla={bitwise}", plan=cfg_e.plan())
 
 
 if __name__ == "__main__":
@@ -44,7 +137,16 @@ if __name__ == "__main__":
 
     jax.config.update("jax_enable_x64", True)
     ap = argparse.ArgumentParser()
+    ap.add_argument("--fast-sweep", action="store_true",
+                    help="run only the fast-mode error-vs-pairs sweep "
+                         "(accuracy CSV artifact)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes (CI smoke)")
     add_plan_args(ap)
-    configure_from_args(ap.parse_args())
+    args = ap.parse_args()
+    configure_from_args(args)
     print(CSV_HEADER)
-    run()
+    if args.fast_sweep:
+        run_fast(quick=args.quick)
+    else:
+        run()

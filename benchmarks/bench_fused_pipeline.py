@@ -134,6 +134,23 @@ def run(n: int = 128, num_splits: int | None = None, quick: bool = False):
          f"hbm_passes_total={pg['total']};stages_would_be={ps['total']}",
          plan=plan_g)
 
+    # fast mode on the epilogue pipeline: the truncated pair list becomes
+    # a SHORTER pair-grid dimension in the epilogue kernel (never a
+    # mask), cutting slice GEMMs while staying bitwise equal to the xla
+    # pipeline under the same policy.
+    cfg_fast = OzakiConfig(num_splits=num_splits, backend="pallas_fused",
+                           fuse_epilogue=True, pair_policy="diagonal")
+    us = time_fn(lambda: ozaki_matmul(a, b, cfg_fast))
+    c_fast = np.asarray(ozaki_matmul(a, b, cfg_fast))
+    c_fast_xla = np.asarray(ozaki_matmul(
+        a, b, OzakiConfig(num_splits=num_splits, pair_policy="diagonal")))
+    assert np.array_equal(c_fast, c_fast_xla)
+    assert cfg_fast.num_gemms < cfgs["xla"].num_gemms
+    emit(f"fused_pipeline/fast_mode/n={n}", us,
+         f"policy=diagonal;gemms={cfg_fast.num_gemms};"
+         f"gemms_full={cfgs['xla'].num_gemms};"
+         f"bitwise_equal_xla_same_policy=True", plan=cfg_fast.plan())
+
     # measured autotuner vs the analytic plan (ISSUE 3 acceptance table):
     # candidate #0 IS the analytic plan, so best <= analytic up to noise.
     shapes = [(n, n, n)] if quick else [(64, 64, 128), (96, 48, 96),

@@ -83,6 +83,13 @@ class ArchConfig:
                                     # pre-warms it at startup
     ozaki_autotune: bool = False    # measure candidate plans on a cache
                                     # miss (deploy-time; needs plan_cache)
+    ozaki_target_error: float = 0.0  # accuracy target on the scaled error
+                                    # (core.accuracy); > 0 lets the driver
+                                    # REDUCE ozaki_splits per GEMM shape
+                                    # when the guaranteed bound allows
+    ozaki_fast_mode: bool = False   # truncate slice pairs to the minimal
+                                    # budget meeting the target (or drop
+                                    # the last anti-diagonal w/o a target)
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
     accum_dtype: str = "float32"    # matmul partial sums; bf16 halves the
@@ -104,6 +111,7 @@ class ArchConfig:
         assert self.family in ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
         assert self.matmul_precision in ("bf16", "int8_quant", "ozaki_fp64")
         assert self.ozaki_backend in ("xla", "pallas", "pallas_fused")
+        assert self.ozaki_target_error >= 0.0
 
     @property
     def attention_free(self) -> bool:

@@ -1,4 +1,8 @@
 """ozJAX core — the Ozaki scheme on integer matrix multiplication units."""
+from .accuracy import (MAX_SPLITS, accum_floor, error_bound,
+                       exponent_spread, input_truncation_eta, kept_pairs,
+                       min_splits_for, pair_budget_for, required_splits,
+                       resolve_accuracy, scaled_error, truncation_eta)
 from .analytic import (ALL_MMUS, DGEMM_MANTISSA_SPACE, FP16_FP32, INT4_INT32,
                        INT8_INT32, INT12_INT32, MMUSpec, ozaki_flops,
                        ozaki_hp_accum_ops)
@@ -10,13 +14,15 @@ from .executors import (EpilogueExecutor, FusedExecutor, PallasExecutor,
                         XlaExecutor, get_executor)
 from .ozaki import (BACKENDS, OzakiConfig, dgemm_f64, gemm_fp32_pass,
                     int32_to_dw, ozaki_matmul, ozaki_matmul_batched,
-                    ozaki_matmul_complex, ozaki_matmul_dw)
+                    ozaki_matmul_complex, ozaki_matmul_dw,
+                    resolve_accuracy_config)
 from .splitting import (SplitResult, compute_alpha, reconstruct, row_exponents,
                         slice_width, split_int, split_int_dw, split_tail)
-from .tuning import (BATCH_LAYOUTS, FUSION_MODES, PipelinePlan, TilePlan,
-                     apply_pipeline_plan, apply_plan, diagonal_groups,
-                     hbm_pass_model, plan_for, select_num_splits, select_plan,
-                     select_pipeline_plan)
+from .tuning import (BATCH_LAYOUTS, FUSION_MODES, PAIR_POLICIES, PipelinePlan,
+                     TilePlan, apply_pipeline_plan, apply_plan,
+                     diagonal_groups, hbm_pass_model, parse_pair_policy,
+                     plan_for, plan_schedule_ok, reset_downgrade_warnings,
+                     select_num_splits, select_plan, select_pipeline_plan)
 from .xmath import (DW, dd_matmul_f64, dd_matmul_np, df32_from_f64,
                     df32_to_f64, dw_add, dw_add_single, dw_mul, dw_mul_single,
                     dw_normalize, dw_sub, dw_to_single, dw_zeros,
@@ -24,7 +30,12 @@ from .xmath import (DW, dd_matmul_f64, dd_matmul_np, df32_from_f64,
 
 __all__ = [
     "ALL_MMUS", "AutotuneReport", "BACKENDS", "BATCH_LAYOUTS",
-    "DGEMM_MANTISSA_SPACE", "DW",
+    "DGEMM_MANTISSA_SPACE", "DW", "MAX_SPLITS", "PAIR_POLICIES",
+    "accum_floor", "error_bound", "exponent_spread", "input_truncation_eta",
+    "kept_pairs", "min_splits_for", "pair_budget_for", "parse_pair_policy",
+    "plan_schedule_ok", "required_splits", "reset_downgrade_warnings",
+    "resolve_accuracy", "resolve_accuracy_config", "scaled_error",
+    "truncation_eta",
     "EpilogueExecutor", "FP16_FP32", "FUSION_MODES", "FusedExecutor",
     "INT12_INT32", "INT4_INT32", "INT8_INT32", "MMUSpec", "OzakiConfig",
     "PallasExecutor", "PipelinePlan", "PlanCache", "PlanKey", "SplitResult",

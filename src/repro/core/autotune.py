@@ -52,7 +52,11 @@ import numpy as np
 
 from repro.kernels.launch import LANE, SUBLANE_I8
 
-from .tuning import (CONCAT_K_MAX, PipelinePlan, select_pipeline_plan)
+from .analytic import DGEMM_MANTISSA_SPACE, INT8_INT32
+from .splitting import slice_width
+from .tuning import (CONCAT_K_MAX, PipelinePlan, _cached_hit_acceptable,
+                     diagonal_groups, plan_schedule_ok, select_num_splits,
+                     select_pipeline_plan)
 
 __all__ = ["PLAN_CACHE_VERSION", "PlanKey", "PlanCache", "plan_cache_key",
            "candidate_plans", "measure_plan", "autotune_plan",
@@ -71,17 +75,34 @@ def default_device_kind() -> str:
         return "unknown"
 
 
+def _dtype_name(dtype) -> str:
+    """Canonical dtype name: ``jnp.float64`` objects, ``np.dtype``s and
+    ``"float64"`` strings all map to the same key string."""
+    try:
+        return np.dtype(dtype).name
+    except TypeError:                       # e.g. bfloat16 via ml_dtypes
+        import jax.numpy as jnp
+        return jnp.dtype(dtype).name
+
+
 def _canon_dtype(dtype, accum: str) -> str:
     """Normalize the operand dtype key; default it from the accum mode."""
     if dtype is None:
         return "float64" if accum == "f64" else "float32"
-    return str(np.dtype(dtype))
+    return _dtype_name(dtype)
 
 
 @dataclasses.dataclass(frozen=True)
 class PlanKey:
     """Cache identity of one tuned GEMM: shape, operand dtype, backend,
-    and the device kind the measurement ran on (hashable)."""
+    and the device kind the measurement ran on (hashable).
+
+    ``dtype`` is canonicalized at construction (``jnp.dtype(...).name``
+    semantics): a key built from the ``jnp.float64`` *object* and one
+    built from the ``"float64"`` *string* are the same key — before the
+    canonicalization they hashed differently and silently missed the
+    cache (and broke JSON serialization of ``to_dict``).
+    """
 
     m: int
     n: int
@@ -90,6 +111,11 @@ class PlanKey:
     dtype: str = "float64"
     backend: str = "pallas_fused"
     device_kind: str = "cpu"
+
+    def __post_init__(self):
+        if not isinstance(self.dtype, str) or self.dtype != \
+                _dtype_name(self.dtype):
+            object.__setattr__(self, "dtype", _dtype_name(self.dtype))
 
     def encode(self) -> str:
         return (f"m={self.m};n={self.n};k={self.k};batch={self.batch};"
@@ -276,6 +302,9 @@ def candidate_plans(m: int, n: int, k: int, *, batch: int = 1,
                     shard_axis: Optional[str] = None,
                     interpret: bool = True,
                     search_num_splits: int = 0,
+                    target_error: Optional[float] = None,
+                    fast_mode: bool = False,
+                    pair_policy: Optional[str] = None,
                     max_candidates: Optional[int] = None,
                     **analytic_kwargs) -> list[PipelinePlan]:
     """Enumerate candidate plans around the analytic seed.
@@ -288,19 +317,27 @@ def candidate_plans(m: int, n: int, k: int, *, batch: int = 1,
     ``search_num_splits=j`` additionally tries ``s_min+1 .. s_min+j``
     splits (still within the accuracy target: more slices is strictly
     more mantissa space); those change the rounding stream and are off
-    by default. ``max_candidates`` truncates AFTER dedup, keeping the
-    analytic seed. ``analytic_kwargs`` (``mantissa_space``/``mmu``/
-    ``vmem_budget``) reach the analytic seed planner unchanged.
+    by default. With ``target_error`` set, pair-budget variants are also
+    enumerated — every one checked against the guaranteed error bound
+    (``core.accuracy.truncation_eta``), so no candidate the measurement
+    ranks can violate the configured target. Every non-seed candidate is
+    filtered through ``tuning.plan_schedule_ok``: a df32 plan violating
+    ``(num_splits + 1) * w <= 120`` would crash mid-measurement, so it
+    never enters the search space. ``max_candidates`` truncates AFTER
+    dedup, keeping the analytic seed. ``analytic_kwargs``
+    (``mantissa_space``/``mmu``/``vmem_budget``) reach the analytic seed
+    planner unchanged.
     """
     base = select_pipeline_plan(
         m, n, k, batch=batch, broadcast_weights=broadcast_weights,
         backend=backend, accum=accum, num_splits=num_splits,
         fuse_epilogue=fuse_epilogue, shard_axis=shard_axis,
-        interpret=interpret, **analytic_kwargs)
+        interpret=interpret, target_error=target_error,
+        fast_mode=fast_mode, pair_policy=pair_policy, **analytic_kwargs)
     cands = [base]
 
     def add(plan: PipelinePlan):
-        if plan not in cands:
+        if plan not in cands and plan_schedule_ok(plan, k):
             cands.append(plan)
 
     # fusion-mode flip (pallas_fused only; both modes bitwise-equal)
@@ -318,6 +355,30 @@ def candidate_plans(m: int, n: int, k: int, *, batch: int = 1,
     for seed in list(cands):
         for tile in _tile_variants(seed.tile):
             add(dataclasses.replace(seed, tile=tile))
+
+    # pair-budget variants (accuracy-checked ONLY: each must meet the
+    # target's guaranteed bound) — whole-diagonal budgets between the
+    # seed's resolved policy and the full schedule, so the measurement
+    # can trade kept pairs for time without ever crossing the target
+    if target_error is not None:
+        from .accuracy import kept_pairs, truncation_eta   # lazy: no cycle
+        s = base.num_splits
+        fuse = base.fuse_diagonals or base.concat_k
+        w = slice_width(k, fuse_terms=s if fuse else 1)
+        groups_seen = 0
+        for _, pairs in diagonal_groups(s, base.full_pairs):
+            groups_seen += len(pairs)
+            policy = f"budget:{groups_seen}"
+            eta = truncation_eta(s, w, pair_policy=policy,
+                                 full_pairs=base.full_pairs)
+            if k * eta <= target_error:
+                total = len(kept_pairs(s, full_pairs=base.full_pairs))
+                if groups_seen < total:
+                    add(dataclasses.replace(base, pair_policy=policy))
+        if base.pair_policy != "full":
+            # the untruncated schedule is always at least as accurate as
+            # the resolved budget: let the measurement decline truncation
+            add(dataclasses.replace(base, pair_policy="full"))
 
     # wider split counts stay within the accuracy target (s >= s_min)
     for extra in range(1, search_num_splits + 1):
@@ -419,6 +480,9 @@ def autotune_plan(m: int, n: int, k: int, *, batch: int = 1,
                   num_splits: Optional[int] = None,
                   fuse_epilogue: bool = True,
                   shard_axis: Optional[str] = None, interpret: bool = True,
+                  target_error: Optional[float] = None,
+                  fast_mode: bool = False,
+                  pair_policy: Optional[str] = None,
                   dtype: Optional[str] = None,
                   device_kind: Optional[str] = None,
                   cache: Optional[PlanCache] = None,
@@ -429,19 +493,40 @@ def autotune_plan(m: int, n: int, k: int, *, batch: int = 1,
     """Measure candidate plans and return the best (stored in ``cache``).
 
     The cache is consulted first (a hit at the SAME accuracy operating
-    point — explicit ``num_splits`` must match the cached plan's — skips
+    point — explicit ``num_splits`` must match the cached plan's, and
+    when ``target_error``/``fast_mode``/``pair_policy`` pin a pair
+    policy, the cached plan's policy must match the resolved one — skips
     measurement entirely); the winner is ``put`` under the shared key
     and — when the cache has a backing path and ``save`` — persisted
     immediately, so a crash after tuning N of M shapes keeps the N
     measured plans.
     """
+    accuracy_pinned = (target_error is not None or fast_mode or
+                       pair_policy is not None)
+    if accuracy_pinned:
+        from .accuracy import resolve_accuracy      # lazy: no cycle
+        base_s = (num_splits if num_splits is not None else
+                  select_num_splits(
+                      k,
+                      mantissa_space=analytic_kwargs.get(
+                          "mantissa_space", DGEMM_MANTISSA_SPACE),
+                      mmu=analytic_kwargs.get("mmu", INT8_INT32)))
+        num_splits, pair_policy = resolve_accuracy(
+            k, base_s, target_error=target_error, fast_mode=fast_mode,
+            pair_policy=pair_policy if pair_policy is not None else "full")
     dtype = _canon_dtype(dtype, accum)
     key = plan_cache_key(m, n, k, batch=batch, dtype=dtype, accum=accum,
                          backend=backend, device_kind=device_kind)
     if cache is not None:
         hit = cache.get(key)
-        if hit is not None and (num_splits is None or
-                                hit.num_splits == num_splits):
+        # same acceptance rule as select_pipeline_plan: under a pinned
+        # target ANY cached point meeting the bound hits (the measured
+        # winner may carry more pairs/splits than the minimal resolved
+        # point — rejecting it would re-measure on every call)
+        if hit is not None and _cached_hit_acceptable(
+                hit, k, num_splits=num_splits, target_error=target_error,
+                accuracy_pinned=accuracy_pinned,
+                policy=pair_policy if pair_policy is not None else "full"):
             return AutotuneReport(key=key, best=hit,
                                   best_us=cache.measured_us(key) or 0.0,
                                   measurements=((hit, 0.0),))
@@ -450,7 +535,8 @@ def autotune_plan(m: int, n: int, k: int, *, batch: int = 1,
             m, n, k, batch=batch, broadcast_weights=broadcast_weights,
             backend=backend, accum=accum, num_splits=num_splits,
             fuse_epilogue=fuse_epilogue, shard_axis=shard_axis,
-            interpret=interpret, max_candidates=max_candidates,
+            interpret=interpret, target_error=target_error,
+            pair_policy=pair_policy, max_candidates=max_candidates,
             **analytic_kwargs)
     operands = _make_operands(m, n, k, batch=batch,
                               broadcast_weights=broadcast_weights,

@@ -12,7 +12,12 @@ plan selects. Executors own the three pipeline stages:
     group. Operands may be 2-D ``(m, k) x (n, k)`` or 3-D batched
     ``(B, m, k) x (B, n, k)``; the 3-D case runs the explicit batch-grid
     kernel (``int8_matmul_nt_batched``) on the Pallas executors and a
-    batch-dimension ``dot_general`` on XLA — never ``vmap``.
+    batch-dimension ``dot_general`` on XLA — never ``vmap``. The pair
+    schedule comes from ``plan.diagonals()``, which already reflects the
+    plan's fast-mode ``pair_policy``: truncated diagonals mean fewer
+    GEMMs here and a shorter pair-grid dimension in the epilogue kernels
+    (``npairs`` below) — truncation is threaded into the launch grids,
+    never applied as a post-hoc mask.
   * ``accumulate`` — stage 3, the high-precision scaled accumulation,
     ordered smallest terms first; the deferred per-element exponent
     ``e_base`` is applied once at the end (exact power-of-two scaling).
@@ -211,7 +216,11 @@ class EpilogueExecutor(FusedExecutor):
     def _groups(self):
         """(t, p_lo, npairs) in accumulation order: t descending, and for
         the unfused schedule pairs in ``diagonals()`` order (matching the
-        stable ``_ordered`` sort of the reference products list)."""
+        stable ``_ordered`` sort of the reference products list).
+        ``npairs`` reflects the plan's ``pair_policy``: a truncated
+        diagonal launches a shorter pair-grid dimension (the kept pairs
+        are the prefix from ``p_lo``, which the kernels' affine slice
+        indexing covers unchanged)."""
         plan = self.plan
         groups = []
         for t, pairs in plan.diagonals():

@@ -71,7 +71,8 @@ import jax.numpy as jnp
 
 from .executors import get_executor, int32_to_dw
 from .splitting import SplitResult, slice_width
-from .tuning import BACKENDS, PipelinePlan, TilePlan, diagonal_groups, plan_for
+from .tuning import (BACKENDS, PipelinePlan, TilePlan, diagonal_groups,
+                     parse_pair_policy, plan_for)
 from .xmath import DW, dw_to_single
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +92,17 @@ class OzakiConfig:
     fuse_diagonals: O1 — exact int32 pre-accumulation per anti-diagonal.
     concat_k: O2 — one GEMM per anti-diagonal via k-concatenation.
     full_pairs: compute all s*s pairs (paper computes i+j <= s+1 only).
+    pair_policy: "full" | "diagonal" | "budget:N" — fast-mode pair
+        truncation: compute only the highest-significance slice pairs
+        (``core.accuracy`` bounds the error; the truncated pair list is
+        threaded into the executors' grids, never applied as a mask).
+    target_error: accuracy target on the scaled error
+        ``max |C - C_hat| / 2^{ea+eb}`` (see ``core.accuracy``). When
+        set, the driver REDUCES num_splits to the smallest count whose
+        guaranteed bound meets it (never raises it), per GEMM shape.
+    fast_mode: truncate slice pairs to the minimal budget meeting
+        ``target_error`` (or drop the last anti-diagonal when no target
+        is set). An explicit non-"full" ``pair_policy`` wins over it.
     shard_axis: mesh axis name to shard the reduction (k) dim over, or
         None. Consumed by ``parallel.ozaki_shard`` / the serving layer.
     ell_acc / ell_in: accumulator / input mantissa widths (Table 2).
@@ -105,6 +117,9 @@ class OzakiConfig:
     fuse_diagonals: bool = True
     concat_k: bool = False
     full_pairs: bool = False
+    pair_policy: str = "full"
+    target_error: Optional[float] = None
+    fast_mode: bool = False
     shard_axis: Optional[str] = None
     ell_acc: int = 31
     ell_in: int = 7
@@ -124,7 +139,10 @@ class OzakiConfig:
 
     def diagonals(self) -> Sequence[tuple[int, Sequence[tuple[int, int]]]]:
         """0-based (t, [(p, q)...]) groups with t = p + q ascending."""
-        return diagonal_groups(self.num_splits, self.full_pairs)
+        return diagonal_groups(
+            self.num_splits, self.full_pairs,
+            pair_budget=parse_pair_policy(self.pair_policy, self.num_splits,
+                                          self.full_pairs))
 
     @property
     def num_gemms(self) -> int:
@@ -138,6 +156,29 @@ class OzakiConfig:
 # ----------------------------------------------------------------------------
 # Driver helpers
 # ----------------------------------------------------------------------------
+
+def resolve_accuracy_config(cfg: OzakiConfig, k: int) -> OzakiConfig:
+    """Resolve ``target_error``/``fast_mode`` into static schedule knobs.
+
+    Shape-only (uses k, never the operand values), so the result is
+    trace-stable: the drivers call it once per GEMM shape before sizing
+    the split width. ``num_splits`` is only ever REDUCED (the configured
+    count is the quality ceiling); the resolved ``pair_policy`` replaces
+    a "full" policy when fast mode asks for truncation. No-op when
+    neither knob is set.
+    """
+    if cfg.target_error is None and not cfg.fast_mode:
+        return cfg
+    from .accuracy import resolve_accuracy         # lazy: keeps core light
+    s, policy = resolve_accuracy(
+        k, cfg.num_splits, target_error=cfg.target_error,
+        fast_mode=cfg.fast_mode, pair_policy=cfg.pair_policy,
+        ell_acc=cfg.ell_acc, ell_in=cfg.ell_in,
+        fuse=cfg.fuse_diagonals or cfg.concat_k, full_pairs=cfg.full_pairs)
+    if s == cfg.num_splits and policy == cfg.pair_policy:
+        return cfg
+    return dataclasses.replace(cfg, num_splits=s, pair_policy=policy)
+
 
 def _e_base(ea: jax.Array, eb: jax.Array) -> jax.Array:
     """Deferred per-element exponent: broadcast outer sum (int32).
@@ -186,6 +227,7 @@ def ozaki_matmul(a: jax.Array, b: jax.Array,
         raise TypeError("ozaki_matmul takes float64; use ozaki_matmul_dw for "
                         "the TPU df32 path")
     k = a.shape[1]
+    cfg = resolve_accuracy_config(cfg, k)
     w = cfg.width_for(k)
     ex = get_executor(cfg.plan())
     sa = ex.split(a, w)
@@ -205,6 +247,7 @@ def ozaki_matmul_dw(a: DW, b_t: DW, cfg: OzakiConfig = OzakiConfig()) -> DW:
     if cfg.accum != "df32":
         cfg = dataclasses.replace(cfg, accum="df32")   # dw path IS df32
     k = a.shape[1]
+    cfg = resolve_accuracy_config(cfg, k)
     w = cfg.width_for(k)
     _check_dw_schedule(cfg, w)
     ex = get_executor(cfg.plan())
@@ -240,6 +283,7 @@ def _batched_grid(a: jax.Array, b: jax.Array, cfg: OzakiConfig) -> jax.Array:
         cfg = dataclasses.replace(cfg, accum="df32")
     bsz, m, k = a.shape
     n = b.shape[-1]
+    cfg = resolve_accuracy_config(cfg, k)
     w = cfg.width_for(k)
     if not f64:
         _check_dw_schedule(cfg, w)
@@ -322,6 +366,7 @@ def ozaki_matmul_complex(a: jax.Array, b: jax.Array,
     ar, ai = jnp.real(a), jnp.imag(a)
     br, bi = jnp.real(b), jnp.imag(b)
     k = a.shape[1]
+    cfg = resolve_accuracy_config(cfg, k)
     w = cfg.width_for(k)
     ex = get_executor(cfg.plan())
 

@@ -35,6 +35,16 @@ from .xmath import DW, fast_two_sum, two_sum
 
 INT8_MIN, INT8_MAX = -128, 127
 
+# Shared exponent assigned to all-zero rows. Any finite value yields the
+# correct all-zero slices (ldexp(0, -e) == 0); what matters is that the
+# sentinel IS finite: a log2-style exponent of an empty row is -inf, and
+# -inf reaching the 2**exp scales turns the whole pipeline into NaNs on
+# the pinned jax (whose exp2 is additionally inexact at extreme
+# arguments — ldexp with finite int32 exponents sidesteps both hazards).
+# Zero-cancellation workloads (paper Fig. 7) and padded/sparse serving
+# batches hit this case routinely.
+ZERO_ROW_EXP = 0
+
 
 class SplitResult(NamedTuple):
     """Result of SplitInt for one matrix (row-wise sharing).
@@ -75,12 +85,19 @@ def slice_width(k: int, *, ell_acc: int = 31, ell_in: int = 7,
 
 
 def row_exponents(m: jax.Array) -> jax.Array:
-    """Strict power-of-two row exponents: 2**exp > max_j |M_ij| (int32)."""
+    """Strict power-of-two row exponents: 2**exp > max_j |M_ij| (int32).
+
+    All-zero rows are clamped to the finite ``ZERO_ROW_EXP`` sentinel —
+    never a ``-inf``-style "empty max" exponent, which would propagate
+    NaN/overflow through the power-of-two scales downstream (the split's
+    ``ldexp``, the deferred ``e_base`` application, and the exponent
+    statistics in ``core.accuracy``).
+    """
     amax = jnp.max(jnp.abs(m), axis=-1)
     # frexp: x = mant * 2**e with mant in [0.5, 1)  ->  2**e >= |x|, strict
     # unless mant == 0.5 exactly (x a power of two), where 2**e == 2*x > x.
     _, e = jnp.frexp(amax)
-    return jnp.where(amax > 0, e, 0).astype(jnp.int32)
+    return jnp.where(amax > 0, e, ZERO_ROW_EXP).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("num_splits", "w"))

@@ -68,6 +68,7 @@ from repro.kernels.launch import (LANE, SUBLANE_F32 as SUBLANE, SUBLANE_I8,
                                   align_up as _align_up)
 
 from .analytic import DGEMM_MANTISSA_SPACE, INT8_INT32, MMUSpec
+from .splitting import slice_width
 
 VMEM_BYTES = 16 * 2 ** 20
 VMEM_BUDGET = VMEM_BYTES // 2      # leave half for double buffering
@@ -76,6 +77,12 @@ CONCAT_K_MAX = 2048                 # below this, slice GEMMs are launch-bound
 BACKENDS = ("xla", "pallas", "pallas_fused")
 FUSION_MODES = ("none", "stages", "epilogue")
 BATCH_LAYOUTS = ("none", "rows", "grid")
+# Fast-mode pair truncation (see core.accuracy): "full" keeps the whole
+# schedule; "diagonal" drops the last (least-significant) anti-diagonal
+# group; "budget:N" keeps only the N highest-significance pairs. The
+# policy is part of the plan, so executors thread it into the kernels'
+# grid construction (fewer pair steps launched) — never a post-hoc mask.
+PAIR_POLICIES = ("full", "diagonal", "budget:N")
 
 # The batch-grid epilogue kernels ship with this PR; the env knob exists
 # for deployments that need to fall back to the stage-fused pipeline on
@@ -96,6 +103,18 @@ def _warn_downgrade_once(reason: str) -> None:
     _DOWNGRADE_WARNED.add(reason)
     warnings.warn(f"fuse_epilogue downgraded to fusion='stages': {reason}",
                   stacklevel=3)
+
+
+def reset_downgrade_warnings() -> None:
+    """Reset the warn-once latch to fresh-process state.
+
+    The latch is module-level state, so without a reset only the FIRST
+    plan built after the env knob flips would warn — a second test (or a
+    re-configured long-lived process) would see silence. Test fixtures
+    (``tests/conftest.py``) call this around every test; deployments that
+    re-read the env knob at runtime should call it when they do.
+    """
+    _DOWNGRADE_WARNED.clear()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,22 +208,79 @@ def apply_plan(cfg, plan: TilePlan):
 # ----------------------------------------------------------------------------
 
 def diagonal_groups(num_splits: int,
-                    full_pairs: bool = False
+                    full_pairs: bool = False,
+                    pair_budget: Optional[int] = None
                     ) -> Sequence[tuple[int, Sequence[tuple[int, int]]]]:
     """0-based (t, [(p, q)...]) anti-diagonal groups with t = p + q.
 
     The schedule vocabulary shared by ``OzakiConfig`` and ``PipelinePlan``:
     the paper computes pairs with i + j <= s + 1 (``t <= s - 1`` 0-based);
-    ``full_pairs`` keeps all 2s - 1 diagonals.
+    ``full_pairs`` keeps all 2s - 1 diagonals. ``pair_budget`` (from
+    ``parse_pair_policy``) keeps only the first N pairs in significance
+    order — diagonals ascending, the last kept diagonal possibly partial
+    (its pairs share one scale, so which prefix survives is
+    accuracy-neutral within the diagonal).
     """
     s = num_splits
     t_max = 2 * s - 2 if full_pairs else s - 1
     out = []
+    remaining = pair_budget
     for t in range(t_max + 1):
         pairs = [(p, t - p) for p in range(max(0, t - s + 1),
                                            min(s - 1, t) + 1)]
+        if remaining is not None:
+            if remaining <= 0:
+                break
+            pairs = pairs[:remaining]
+            remaining -= len(pairs)
         out.append((t, pairs))
     return out
+
+
+def parse_pair_policy(policy: str, num_splits: int,
+                      full_pairs: bool = False) -> Optional[int]:
+    """Pair budget (kept-pair count) encoded by a policy string.
+
+    ``None`` means "no truncation" (the full schedule); budgets are
+    clamped to ``[1, total]`` — a plan always computes at least the
+    leading (0, 0) pair. Raises ``ValueError`` on malformed policies, so
+    ``PipelinePlan.__post_init__`` can validate by parsing.
+    """
+    groups = diagonal_groups(num_splits, full_pairs)
+    total = sum(len(p) for _, p in groups)
+    if policy == "full":
+        return None
+    if policy == "diagonal":
+        return max(1, total - len(groups[-1][1]))
+    if policy.startswith("budget:"):
+        try:
+            n = int(policy[len("budget:"):])
+        except ValueError:
+            n = 0
+        if n < 1:
+            raise ValueError(f"pair budget must be a positive int, "
+                             f"got {policy!r}")
+        return min(n, total)
+    raise ValueError(f"unknown pair_policy {policy!r}; expected one of "
+                     f"{PAIR_POLICIES}")
+
+
+def plan_schedule_ok(plan: "PipelinePlan", k: int, *, ell_acc: int = 31,
+                     ell_in: int = 7) -> bool:
+    """True when the plan's split schedule is executable on the df32 path.
+
+    ``ozaki_matmul_dw`` requires ``(num_splits + 1) * w <= 120`` so every
+    accumulation scale stays in f32 normal range; a candidate enumerated
+    above that (e.g. ``search_num_splits`` widening s) would crash
+    mid-measurement. f64 accumulation has no such ceiling.
+    """
+    if plan.accum != "df32":
+        return True
+    fuse_terms = (plan.num_splits
+                  if (plan.fuse_diagonals or plan.concat_k) else 1)
+    w = slice_width(k, ell_acc=ell_acc, ell_in=ell_in,
+                    fuse_terms=fuse_terms)
+    return (plan.num_splits + 1) * w <= 120
 
 
 @dataclasses.dataclass(frozen=True)
@@ -232,6 +308,10 @@ class PipelinePlan:
                   None. Consumed by ``parallel.ozaki_shard`` composition
                   and the model/serving layers; the executors themselves
                   stay single-device (GSPMD inserts the collectives).
+    pair_policy:  "full" | "diagonal" | "budget:N" — fast-mode pair
+                  truncation (``core.accuracy`` bounds the error). The
+                  policy shapes ``diagonals()``, so every executor and
+                  the Pallas pair-grid dimensions shrink with it.
     fuse_diagonals / concat_k / full_pairs / accum / interpret: the
     schedule and numeric knobs, verbatim from the config.
     """
@@ -242,6 +322,7 @@ class PipelinePlan:
     fusion: str = "none"
     batch_layout: str = "none"
     shard_axis: Optional[str] = None
+    pair_policy: str = "full"
     fuse_diagonals: bool = True
     concat_k: bool = False
     full_pairs: bool = False
@@ -260,9 +341,14 @@ class PipelinePlan:
                              f"expected one of {BATCH_LAYOUTS}")
         if self.accum not in ("f64", "df32"):
             raise ValueError(f"unknown accum {self.accum!r}")
+        parse_pair_policy(self.pair_policy, self.num_splits,
+                          self.full_pairs)       # raises on malformed
 
     def diagonals(self):
-        return diagonal_groups(self.num_splits, self.full_pairs)
+        return diagonal_groups(
+            self.num_splits, self.full_pairs,
+            pair_budget=parse_pair_policy(self.pair_policy, self.num_splits,
+                                          self.full_pairs))
 
     @property
     def num_gemms(self) -> int:
@@ -311,8 +397,23 @@ def plan_for(cfg, *, batch_layout: str = "none") -> PipelinePlan:
                            batch_layout),
         batch_layout=batch_layout,
         shard_axis=getattr(cfg, "shard_axis", None),
+        pair_policy=getattr(cfg, "pair_policy", "full"),
         fuse_diagonals=cfg.fuse_diagonals, concat_k=cfg.concat_k,
         full_pairs=cfg.full_pairs, accum=cfg.accum, interpret=cfg.interpret)
+
+
+def _cached_hit_acceptable(hit: PipelinePlan, k: int, *, num_splits,
+                           target_error, accuracy_pinned: bool,
+                           policy: str) -> bool:
+    """Shared cache-hit validation for ``select_pipeline_plan`` and
+    ``autotune_plan`` (see the comment at the call site)."""
+    if target_error is not None:
+        from .accuracy import plan_meets_target      # lazy: no cycle
+        return plan_meets_target(hit, k, target_error)
+    if accuracy_pinned:
+        return hit.num_splits == num_splits and hit.pair_policy == policy
+    return (num_splits is None or hit.num_splits == num_splits) and \
+        hit.pair_policy == "full"
 
 
 def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
@@ -322,6 +423,9 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
                          fuse_epilogue: bool = True,
                          shard_axis: Optional[str] = None,
                          interpret: bool = True,
+                         target_error: Optional[float] = None,
+                         fast_mode: bool = False,
+                         pair_policy: Optional[str] = None,
                          mantissa_space: int = DGEMM_MANTISSA_SPACE,
                          mmu: MMUSpec = INT8_INT32,
                          vmem_budget: int = VMEM_BUDGET,
@@ -335,6 +439,15 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
     folded ``batch * m`` row extent — one big GEMM), a stacked-weights
     batch becomes an explicit grid dimension (and disables ``concat_k``,
     whose concatenated operands would be materialized per batch row).
+
+    ``target_error`` / ``fast_mode`` / ``pair_policy`` pin an accuracy
+    operating point (``core.accuracy.resolve_accuracy``): the target can
+    REDUCE the split count below the ``mantissa_space`` default, fast
+    mode truncates slice pairs to the minimal budget meeting the target
+    (or drops the last diagonal when no target is set). When any of the
+    three is given, a cached plan must match the resolved
+    ``(num_splits, pair_policy)`` to be accepted — both are
+    result-affecting.
 
     ``cache`` (a ``core.autotune.PlanCache``) short-circuits planning: a
     hit for ``(m, n, k, batch, dtype, backend, device_kind)`` returns
@@ -351,25 +464,47 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
         layout = "rows"
     else:
         layout = "grid"
+    accuracy_pinned = (target_error is not None or fast_mode or
+                      pair_policy is not None)
+    policy = pair_policy if pair_policy is not None else "full"
+    if accuracy_pinned:
+        from .accuracy import resolve_accuracy            # lazy: no cycle
+        base_s = (num_splits if num_splits is not None else
+                  select_num_splits(k, mantissa_space=mantissa_space,
+                                    mmu=mmu))
+        num_splits, policy = resolve_accuracy(
+            k, base_s, target_error=target_error, fast_mode=fast_mode,
+            pair_policy=policy)
     if cache is not None or autotune:
         from .autotune import autotune_plan, plan_cache_key   # lazy: no cycle
         key = plan_cache_key(m, n, k, batch=batch, dtype=dtype, accum=accum,
                              backend=backend, device_kind=device_kind)
         if cache is not None:
             hit = cache.get(key)
-            # an explicit num_splits pins the accuracy operating point:
-            # a cached plan tuned at a different s must not substitute
-            # for it (num_splits is result-affecting; the key is not
-            # fine-grained enough to distinguish it by design)
-            if hit is not None and (num_splits is None or
-                                    hit.num_splits == num_splits):
+            # The key is deliberately coarser than the accuracy operating
+            # point, so the hit path validates it:
+            #  * target_error pinned — the TARGET is the contract: any
+            #    cached point whose guaranteed bound meets it is accepted
+            #    (a measured winner with more pairs/splits than the
+            #    minimal resolution must not force eternal re-tuning);
+            #  * fast_mode / explicit pair_policy without a target — the
+            #    resolved (s, policy) point must match exactly;
+            #  * no accuracy knobs — an explicit num_splits must match
+            #    (PR 3 rule), and a fast-mode-truncated cached plan must
+            #    NEVER be served silently: full schedules only.
+            if hit is not None and _cached_hit_acceptable(
+                    hit, k, num_splits=num_splits,
+                    target_error=target_error,
+                    accuracy_pinned=accuracy_pinned, policy=policy):
                 return hit
         if autotune:
             return autotune_plan(
                 m, n, k, batch=batch, broadcast_weights=broadcast_weights,
                 backend=backend, accum=accum, num_splits=num_splits,
                 fuse_epilogue=fuse_epilogue, shard_axis=shard_axis,
-                interpret=interpret, dtype=dtype, device_kind=device_kind,
+                interpret=interpret, target_error=target_error,
+                pair_policy=policy if accuracy_pinned else None,
+                dtype=dtype, device_kind=device_kind,
                 mantissa_space=mantissa_space, mmu=mmu,
                 vmem_budget=vmem_budget, cache=cache).best
     m_eff = m * batch if layout == "rows" else m
@@ -379,7 +514,7 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
     return PipelinePlan(
         num_splits=tile.num_splits, tile=tile, backend=backend,
         fusion=_fusion_for(backend, fuse_epilogue, layout),
-        batch_layout=layout, shard_axis=shard_axis,
+        batch_layout=layout, shard_axis=shard_axis, pair_policy=policy,
         fuse_diagonals=tile.fuse_diagonals, concat_k=tile.concat_k,
         accum=accum, interpret=interpret)
 
@@ -391,13 +526,15 @@ def apply_pipeline_plan(cfg, plan: PipelinePlan):
         fuse_diagonals=plan.fuse_diagonals, concat_k=plan.concat_k,
         full_pairs=plan.full_pairs, accum=plan.accum, tile=plan.tile,
         fuse_epilogue=(plan.fusion == "epilogue"),
+        pair_policy=plan.pair_policy,
         shard_axis=plan.shard_axis, interpret=plan.interpret)
 
 
 def hbm_pass_model(num_splits: int, *, fused: bool,
                    fuse_diagonals: bool = True,
                    fuse_epilogue: bool = False,
-                   batch: int = 1, batch_layout: str = "none") -> dict:
+                   batch: int = 1, batch_layout: str = "none",
+                   pair_policy: str = "full") -> dict:
     """Modeled HBM round-trips per stage for one operand/output matrix.
 
     Counts *array passes* (each read or write of a full matrix-sized
@@ -434,7 +571,11 @@ def hbm_pass_model(num_splits: int, *, fused: bool,
         raise ValueError("batch > 1 requires batch_layout 'rows' or 'grid'")
     fused = fused or fuse_epilogue      # epilogue fusion implies fused
     s = num_splits
-    groups = s if fuse_diagonals else s * (s + 1) // 2
+    # pair truncation drops whole accumulation groups (fuse_diagonals)
+    # or individual pair products (paper-faithful schedule)
+    gl = diagonal_groups(s, False,
+                         pair_budget=parse_pair_policy(pair_policy, s))
+    groups = len(gl) if fuse_diagonals else sum(len(p) for _, p in gl)
     split_passes = 1 if fused else s
     if fuse_epilogue:
         accum_passes = groups * 2        # read C + write C, nothing else

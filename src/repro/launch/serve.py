@@ -37,6 +37,14 @@ def main():
     ap.add_argument("--autotune", action="store_true",
                     help="measure candidate plans for cache misses during "
                          "the startup pre-warm")
+    ap.add_argument("--target-error", type=float, default=None,
+                    help="accuracy target on the scaled error "
+                         "(core.accuracy); lets the driver reduce the "
+                         "split count per projection shape")
+    ap.add_argument("--fast-mode", action="store_true",
+                    help="truncate slice pairs to the minimal budget "
+                         "meeting --target-error (or drop the last "
+                         "anti-diagonal without one)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -49,6 +57,8 @@ def main():
     engine = ServingEngine(cfg, params, num_slots=args.slots,
                            max_len=args.max_len,
                            matmul_precision=args.precision,
+                           ozaki_target_error=args.target_error,
+                           ozaki_fast_mode=args.fast_mode or None,
                            plan_cache=args.plan_cache,
                            autotune_plans=args.autotune or None)
     if engine.plan_cache is not None:

@@ -126,7 +126,8 @@ def _apply_cached_plan(cfg, x, w, backend: str):
 
 
 def _matmul_ozaki(x, w, num_splits: int, backend: str = "xla",
-                  fuse_epilogue: bool = False, shard_axis: str = ""):
+                  fuse_epilogue: bool = False, shard_axis: str = "",
+                  target_error: float = 0.0, fast_mode: bool = False):
     """The paper's path: FP64-accurate x @ w out of int8 MXU GEMMs.
 
     x: (..., k) f32, w: (k, n) f32, deployable on TPU ({int8, int32, f32}
@@ -137,6 +138,10 @@ def _matmul_ozaki(x, w, num_splits: int, backend: str = "xla",
     other ranks flatten leading dims onto the df32 matmul directly.
     ``shard_axis`` k-shards the contraction over the registered shard
     mesh (``parallel.ozaki_shard``) — a no-op when no mesh is active.
+    ``target_error`` (> 0) / ``fast_mode`` opt into accuracy-adaptive
+    planning (``core.accuracy``): the driver resolves them into a
+    reduced split count / truncated pair schedule per GEMM shape at
+    trace time (shape-only, so the jitted step stays trace-stable).
 
     Sharding hints are applied ONLY to plain 2-D matmul calls, the path
     verified bitwise-safe under the constraints. Projections inside the
@@ -158,6 +163,8 @@ def _matmul_ozaki(x, w, num_splits: int, backend: str = "xla",
     cfg = OzakiConfig(num_splits=num_splits, accum="df32", backend=backend,
                       fuse_epilogue=fuse_epilogue,
                       shard_axis=shard_axis or None,
+                      target_error=target_error or None,
+                      fast_mode=fast_mode,
                       fuse_diagonals=True, interpret=INTERPRET)
     x = x.astype(jnp.float32)
     w = w.astype(jnp.float32)
@@ -190,7 +197,9 @@ def policy_matmul(cfg, x: jax.Array, w: jax.Array) -> jax.Array:
                              cfg.ozaki_splits,
                              getattr(cfg, "ozaki_backend", "xla"),
                              getattr(cfg, "ozaki_fuse_epilogue", False),
-                             getattr(cfg, "ozaki_shard_axis", ""))
+                             getattr(cfg, "ozaki_shard_axis", ""),
+                             getattr(cfg, "ozaki_target_error", 0.0),
+                             getattr(cfg, "ozaki_fast_mode", False))
     raise ValueError(f"unknown matmul_precision {p!r}")
 
 

@@ -116,6 +116,8 @@ class ServingEngine:
                  ozaki_backend: Optional[str] = None,
                  ozaki_fuse_epilogue: Optional[bool] = None,
                  ozaki_shard_axis: Optional[str] = None,
+                 ozaki_target_error: Optional[float] = None,
+                 ozaki_fast_mode: Optional[bool] = None,
                  mesh=None, plan_cache=None,
                  autotune_plans: Optional[bool] = None):
         overrides = {}
@@ -127,6 +129,10 @@ class ServingEngine:
             overrides["ozaki_fuse_epilogue"] = ozaki_fuse_epilogue
         if ozaki_shard_axis is not None:
             overrides["ozaki_shard_axis"] = ozaki_shard_axis
+        if ozaki_target_error is not None:
+            overrides["ozaki_target_error"] = ozaki_target_error
+        if ozaki_fast_mode is not None:
+            overrides["ozaki_fast_mode"] = ozaki_fast_mode
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides)
         self.mesh = mesh
@@ -237,6 +243,8 @@ class ServingEngine:
         backend = getattr(cfg, "ozaki_backend", "xla")
         fuse_epilogue = getattr(cfg, "ozaki_fuse_epilogue", False)
         num_splits = getattr(cfg, "ozaki_splits", None)
+        target_error = getattr(cfg, "ozaki_target_error", 0.0) or None
+        fast_mode = getattr(cfg, "ozaki_fast_mode", False)
         for k, n in ozaki_projection_shapes(cfg):
             key = plan_cache_key(1, n, k, batch=self.num_slots,
                                  dtype="float32", backend=backend)
@@ -247,6 +255,7 @@ class ServingEngine:
                 1, n, k, batch=self.num_slots, broadcast_weights=True,
                 backend=backend, accum="df32", num_splits=num_splits,
                 fuse_epilogue=fuse_epilogue, interpret=INTERPRET,
+                target_error=target_error, fast_mode=fast_mode,
                 dtype="float32", cache=self.plan_cache,
                 autotune=self.autotune_plans)
             if key not in self.plan_cache:       # analytic miss: store it

@@ -16,3 +16,14 @@ import pytest  # noqa: E402
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_downgrade_warn_latch():
+    """Per-test fresh-process semantics for the fuse_epilogue downgrade
+    warn-once latch: without the reset, the first test that trips the
+    warning latches module state and every later test sees silence."""
+    from repro.core.tuning import reset_downgrade_warnings
+    reset_downgrade_warnings()
+    yield
+    reset_downgrade_warnings()

@@ -1,0 +1,381 @@
+"""Accuracy-adaptive planning + fast-mode pair truncation (ISSUE 4).
+
+Covers the ``core.accuracy`` bound family (brute-force-validated eta,
+split/budget selection, per-input spread refinement), the end-to-end
+``target_error``/``fast_mode``/``pair_policy`` knobs through
+``OzakiConfig`` and the model/serving layers, the golden-pin bound checks
+(s in {5, 9, 13}), and the zero-cancellation regression: zero
+rows/columns in BOTH operands must flow through every backend — and the
+new exponent statistics — without -inf/NaN, under accuracy-adaptive
+planning too.
+"""
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.accuracy import (MAX_SPLITS, accum_floor, error_bound,
+                                 exponent_spread, input_truncation_eta,
+                                 kept_pairs, min_splits_for, pair_budget_for,
+                                 required_splits, resolve_accuracy,
+                                 scaled_error, truncation_eta)
+from repro.core.ozaki import (OzakiConfig, dgemm_f64, ozaki_matmul,
+                              ozaki_matmul_batched, resolve_accuracy_config)
+from repro.core.splitting import slice_width
+from repro.core.tuning import parse_pair_policy
+from repro.core.xmath import dd_matmul_np
+
+
+def _phi(rng, m, k, phi=1.0):
+    return (rng.uniform(-0.5, 0.5, (m, k))
+            * np.exp(phi * rng.standard_normal((m, k))))
+
+
+# ----------------------------------------------------------------------------
+# The eta bound: brute force, monotonicity, policy ordering
+# ----------------------------------------------------------------------------
+
+def _brute_eta(s, w, policy="full", lim=300):
+    kept = set(kept_pairs(s, pair_policy=policy))
+    r = 2.0 ** -w
+    return math.fsum(r ** (p + q)
+                     for p in range(lim) for q in range(lim)
+                     if (p, q) not in kept)
+
+
+@pytest.mark.parametrize("s,w,policy", [
+    (5, 7, "full"), (5, 7, "diagonal"), (5, 7, "budget:7"),
+    (9, 7, "full"), (9, 7, "budget:45"), (2, 3, "budget:1"),
+    (1, 7, "full"),
+])
+def test_truncation_eta_matches_brute_force(s, w, policy):
+    got = truncation_eta(s, w, pair_policy=policy)
+    want = _brute_eta(s, w, policy)
+    assert got == pytest.approx(want, rel=1e-10)
+
+
+def test_truncation_eta_monotone_in_splits_and_budget():
+    etas = [truncation_eta(s, 7) for s in range(1, 14)]
+    assert all(a > b for a, b in zip(etas, etas[1:]))
+    budgets = [truncation_eta(9, 7, pair_policy=f"budget:{n}")
+               for n in range(1, 46)]
+    assert all(a > b for a, b in zip(budgets, budgets[1:]))
+    # policy ordering: full < diagonal < tiny budget
+    assert truncation_eta(9, 7) < truncation_eta(9, 7,
+                                                 pair_policy="diagonal")
+    assert truncation_eta(9, 7, pair_policy="diagonal") < \
+        truncation_eta(9, 7, pair_policy="budget:3")
+
+
+def test_min_splits_for_meets_and_is_minimal():
+    k = 192
+    prev = 1
+    for tgt in (1e-2, 1e-6, 1e-10, 1e-14):
+        s = min_splits_for(tgt, k)
+        w = slice_width(k, fuse_terms=s)
+        assert k * truncation_eta(s, w) <= tgt
+        if s > 1:
+            w1 = slice_width(k, fuse_terms=s - 1)
+            assert k * truncation_eta(s - 1, w1) > tgt
+        assert s >= prev
+        prev = s
+    with pytest.raises(ValueError, match="target_error"):
+        min_splits_for(0.0, k)
+
+
+def test_pair_budget_for_meets_and_is_minimal():
+    k, s = 192, 9
+    w = slice_width(k, fuse_terms=s)
+    for tgt in (1e-6, 1e-10):
+        policy = pair_budget_for(tgt, s, w, k)
+        assert policy.startswith("budget:")
+        n = int(policy.split(":")[1])
+        assert k * truncation_eta(s, w, pair_policy=policy) <= tgt
+        assert k * truncation_eta(s, w, pair_policy=f"budget:{n-1}") > tgt
+    # no headroom: the target needs every pair of the schedule
+    tight = k * truncation_eta(s, w) * 1.5
+    assert pair_budget_for(tight, s, w, k) in ("full", "budget:44")
+
+
+def test_resolve_accuracy_semantics():
+    k = 192
+    # fast mode without a target drops the last diagonal
+    assert resolve_accuracy(k, 9, fast_mode=True) == (9, "diagonal")
+    # a target REDUCES s, never raises it
+    s, policy = resolve_accuracy(k, 9, target_error=1e-8)
+    assert s < 9 and policy == "full"
+    s_loose, _ = resolve_accuracy(k, 3, target_error=1e-20)
+    assert s_loose == 3                          # ceiling respected
+    # explicit policy wins over fast_mode
+    assert resolve_accuracy(k, 9, fast_mode=True,
+                            pair_policy="budget:5")[1] == "budget:5"
+    # idempotent
+    s2, p2 = resolve_accuracy(k, 9, target_error=1e-8, fast_mode=True)
+    assert resolve_accuracy(k, s2, target_error=1e-8, fast_mode=True,
+                            pair_policy=p2) == (s2, p2)
+
+
+# ----------------------------------------------------------------------------
+# Golden-pin shapes: truncated policies meet the computed bound
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_splits", [5, 9, 13])
+@pytest.mark.parametrize("phi", [0.1, 1.0])
+def test_truncated_policies_meet_bound_on_golden_shapes(num_splits, phi):
+    rng = np.random.default_rng(42)
+    a = _phi(rng, 32, 128, phi)
+    b = _phi(rng, 128, 24, phi)
+    hi, lo = dd_matmul_np(a, b)
+    k = 128
+    cfg0 = OzakiConfig(num_splits=num_splits)
+    w = cfg0.width_for(k)
+    half = max(1, cfg0.num_gemms // 2)
+    for policy in ("full", "diagonal", f"budget:{half}"):
+        cfg = dataclasses.replace(cfg0, pair_policy=policy)
+        c = np.asarray(ozaki_matmul(jnp.asarray(a), jnp.asarray(b), cfg))
+        bound = error_bound(num_splits, w, k, pair_policy=policy)
+        serr = scaled_error(c, hi, a, b, ref_lo=lo)
+        assert serr <= bound, (policy, serr, bound)
+        # the bound is informative, not vacuous: truncating to half the
+        # pairs must cost accuracy the full schedule does not
+    full = scaled_error(np.asarray(ozaki_matmul(jnp.asarray(a),
+                                                jnp.asarray(b), cfg0)),
+                        hi, a, b, ref_lo=lo)
+    trunc = scaled_error(np.asarray(ozaki_matmul(
+        jnp.asarray(a), jnp.asarray(b),
+        dataclasses.replace(cfg0, pair_policy=f"budget:{half}"))),
+        hi, a, b, ref_lo=lo)
+    assert trunc >= full
+
+
+def test_config_target_error_end_to_end():
+    """cfg.target_error/fast_mode resolve per shape and the result meets
+    target + accumulation floor (a theorem: the target sits above the
+    configured ceiling's guaranteed bound)."""
+    rng = np.random.default_rng(3)
+    k = 128
+    a = jnp.asarray(_phi(rng, 24, k))
+    b = jnp.asarray(_phi(rng, k, 16))
+    hi, lo = dd_matmul_np(np.asarray(a), np.asarray(b))
+    for tgt in (1e-4, 1e-8):
+        cfg = OzakiConfig(num_splits=9, target_error=tgt, fast_mode=True)
+        res = resolve_accuracy_config(cfg, k)
+        assert res.num_splits <= 9
+        assert res.num_gemms < OzakiConfig(num_splits=9).num_gemms
+        c = np.asarray(ozaki_matmul(a, b, cfg))
+        floor = accum_floor(res.num_splits, k,
+                            pair_policy=res.pair_policy)
+        serr = scaled_error(c, hi, np.asarray(a), np.asarray(b), ref_lo=lo)
+        assert serr <= tgt + floor, (tgt, serr)
+    # no knobs -> the driver keeps the config untouched
+    base = OzakiConfig(num_splits=9)
+    assert resolve_accuracy_config(base, k) is base
+
+
+# ----------------------------------------------------------------------------
+# Per-input refinement: spreads reduce the required split count
+# ----------------------------------------------------------------------------
+
+def test_exponent_spread_basics():
+    m = jnp.asarray([[8.0, 1.0, 0.0], [0.0, 0.0, 0.0], [2.0, 2.0, 2.0]])
+    spread = np.asarray(exponent_spread(m))
+    assert spread[1] == 0                       # all-zero row: finite clamp
+    assert spread[2] == 0                       # constant row: no spread
+    assert spread[0] == 3                       # 8 vs 1: 3 octaves
+    assert np.all(np.isfinite(spread))
+
+
+def test_required_splits_narrow_spread_needs_fewer():
+    rng = np.random.default_rng(0)
+    # f32-precision values, zero spread: the informative slice count is
+    # small, so exactness (target None) needs far fewer splits than the
+    # wide-spread worst case
+    narrow = np.sign(rng.standard_normal((32, 64)))
+    wide = _phi(rng, 32, 64, 4.0)
+    wide_b = _phi(rng, 64, 32, 4.0)
+    s_narrow = required_splits(jnp.asarray(narrow),
+                               jnp.asarray(narrow.T.copy()),
+                               mantissa_bits=24)
+    s_wide = required_splits(jnp.asarray(wide), jnp.asarray(wide_b),
+                             mantissa_bits=24)
+    assert s_narrow < s_wide
+    # and the promised accuracy is real: at the chosen s the result is
+    # exact up to the accumulation floor
+    cfg = OzakiConfig(num_splits=s_narrow)
+    a, b = jnp.asarray(narrow), jnp.asarray(narrow.T.copy())
+    c = np.asarray(ozaki_matmul(a, b, cfg))
+    ref = np.asarray(dgemm_f64(a, b))
+    assert np.max(np.abs(c - ref)) <= 1e-10
+
+
+def test_required_splits_monotone_in_target():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(_phi(rng, 16, 48))
+    b = jnp.asarray(_phi(rng, 48, 16))
+    s_loose = required_splits(a, b, target_error=1e-4)
+    s_tight = required_splits(a, b, target_error=1e-12)
+    assert s_loose <= s_tight <= MAX_SPLITS
+
+
+def test_input_truncation_eta_never_exceeds_worst_case():
+    for s in (3, 5, 9):
+        w = 7
+        full_grid = truncation_eta(s, w)
+        assert input_truncation_eta(s, w, 4, 4) <= full_grid + 1e-30
+        # huge effective slice counts recover (almost) the full bound
+        assert input_truncation_eta(s, w, 60, 60) == \
+            pytest.approx(full_grid, rel=1e-6)
+
+
+# ----------------------------------------------------------------------------
+# Zero-cancellation regression (satellite): zero rows/cols in BOTH operands
+# ----------------------------------------------------------------------------
+
+_ZC_EXECUTORS = {
+    "xla": dict(backend="xla"),
+    "pallas_fused": dict(backend="pallas_fused"),
+    "pallas_fused_epilogue": dict(backend="pallas_fused",
+                                  fuse_epilogue=True),
+}
+
+
+@pytest.mark.parametrize("executor", sorted(_ZC_EXECUTORS))
+def test_zero_rows_cols_no_nan_and_exact_zeros(rng, executor):
+    a = _phi(rng, 12, 32)
+    b = _phi(rng, 32, 10)
+    a[3, :] = 0.0
+    a[:, 7] = 0.0
+    b[:, 2] = 0.0
+    b[11, :] = 0.0
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    for cfg in (OzakiConfig(num_splits=9, **_ZC_EXECUTORS[executor]),
+                OzakiConfig(num_splits=9, target_error=1e-8,
+                            fast_mode=True, **_ZC_EXECUTORS[executor])):
+        c = np.asarray(ozaki_matmul(aj, bj, cfg))
+        assert np.all(np.isfinite(c))
+        np.testing.assert_array_equal(c[3, :], 0.0)   # zero row -> zero row
+        np.testing.assert_array_equal(c[:, 2], 0.0)   # zero col -> zero col
+        ref = np.asarray(dgemm_f64(aj, bj))
+        assert np.max(np.abs(c - ref)) <= 1e-4 * np.abs(ref).max()
+
+
+def test_zero_rows_batched_grid(rng):
+    """The batch-grid executors under zero rows + fast mode: finite,
+    bitwise-equal to xla (fig7-style zero-cancellation regression)."""
+    a = np.stack([_phi(rng, 8, 24) for _ in range(2)])
+    b = np.stack([_phi(rng, 24, 6) for _ in range(2)])
+    a[0, 2, :] = 0.0
+    b[1][:, 3] = 0.0
+    cfg = OzakiConfig(num_splits=7, backend="pallas_fused",
+                      fuse_epilogue=True, fast_mode=True)
+    got = np.asarray(ozaki_matmul_batched(jnp.asarray(a), jnp.asarray(b),
+                                          cfg))
+    base = np.asarray(ozaki_matmul_batched(
+        jnp.asarray(a), jnp.asarray(b),
+        OzakiConfig(num_splits=7, backend="xla", fast_mode=True)))
+    assert np.all(np.isfinite(got))
+    np.testing.assert_array_equal(got, base)
+    np.testing.assert_array_equal(got[0, 2, :], 0.0)
+
+
+def test_zero_cancellation_inverse_with_zero_padding(rng):
+    """A @ A^{-1} (paper Fig. 7) embedded in a zero-padded frame — the
+    serving-batch shape where padded rows/cols are exactly zero."""
+    n = 24
+    a_core = rng.standard_normal((n, n))
+    ainv = np.linalg.inv(a_core)
+    a = np.zeros((n + 4, n + 4))
+    b = np.zeros((n + 4, n + 4))
+    a[:n, :n] = a_core
+    b[:n, :n] = ainv
+    cfg = OzakiConfig(num_splits=13, target_error=1e-12)
+    c = np.asarray(ozaki_matmul(jnp.asarray(a), jnp.asarray(b), cfg))
+    assert np.all(np.isfinite(c))
+    np.testing.assert_array_equal(c[n:, :], 0.0)
+    np.testing.assert_array_equal(c[:, n:], 0.0)
+    # the off-diagonal cancellation stays at the Ozaki quality level
+    assert np.max(np.abs(c[:n, :n] - np.eye(n))) <= 1e-10
+
+
+def test_exponent_spread_all_zero_operands():
+    z = jnp.zeros((4, 8))
+    assert np.all(np.asarray(exponent_spread(z)) == 0)
+    # the spread statistic is finite (no -inf min over an empty set), so
+    # selection behaves like a zero-spread input instead of diverging
+    assert 1 <= required_splits(z, jnp.zeros((8, 4)),
+                                target_error=1e-10) <= MAX_SPLITS
+    c = np.asarray(ozaki_matmul(jnp.zeros((4, 8)), jnp.zeros((8, 4)),
+                                OzakiConfig(fast_mode=True)))
+    np.testing.assert_array_equal(c, 0.0)
+
+
+# ----------------------------------------------------------------------------
+# Model/serving opt-in
+# ----------------------------------------------------------------------------
+
+def test_policy_matmul_fast_mode_opt_in(rng):
+    import dataclasses as dc
+
+    from repro.configs import get_config
+    from repro.models.layers import policy_matmul
+
+    base_cfg = dc.replace(get_config("llama3.2-3b").reduced(),
+                          matmul_precision="ozaki_fp64",
+                          ozaki_backend="pallas_fused", ozaki_splits=7)
+    fast_cfg = dc.replace(base_cfg, ozaki_target_error=1e-6,
+                          ozaki_fast_mode=True)
+    x = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    base = np.asarray(policy_matmul(base_cfg, x, w))
+    fast = np.asarray(policy_matmul(fast_cfg, x, w))
+    assert np.all(np.isfinite(fast))
+    # fast mode trades pair products for speed within the target
+    np.testing.assert_allclose(fast, base, rtol=1e-4, atol=1e-5)
+
+
+def test_engine_prewarm_carries_fast_mode_policy(tmp_path):
+    import dataclasses as dc
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_model
+    from repro.serving.engine import ServingEngine
+
+    cfg = dc.replace(get_config("llama3.2-3b").reduced(),
+                     matmul_precision="ozaki_fp64",
+                     ozaki_backend="pallas_fused", ozaki_splits=5)
+    params, _ = init_model(cfg, jax.random.key(0))
+    eng = ServingEngine(cfg, params, num_slots=2, max_len=32,
+                        plan_cache=str(tmp_path / "plans.json"),
+                        ozaki_fast_mode=True)
+    assert eng.cfg.ozaki_fast_mode
+    assert len(eng.plan_cache) >= 4
+    policies = {plan.pair_policy
+                for key in eng.plan_cache.keys()
+                for plan in [eng.plan_cache.get(key)]}
+    assert policies == {"diagonal"}            # fast mode, no target
+
+
+# ----------------------------------------------------------------------------
+# Plan/schedule plumbing
+# ----------------------------------------------------------------------------
+
+def test_parse_pair_policy_vocabulary():
+    assert parse_pair_policy("full", 9) is None
+    assert parse_pair_policy("diagonal", 9) == 36      # 45 - last 9
+    assert parse_pair_policy("diagonal", 1) == 1       # floor at 1 pair
+    assert parse_pair_policy("budget:7", 9) == 7
+    assert parse_pair_policy("budget:999", 9) == 45    # clamped to total
+    for bad in ("bogus", "budget:0", "budget:-3", "budget:x"):
+        with pytest.raises(ValueError):
+            parse_pair_policy(bad, 9)
+
+
+def test_num_gemms_reflects_policy():
+    full = OzakiConfig(num_splits=9)
+    assert full.num_gemms == 45
+    assert dataclasses.replace(full, pair_policy="diagonal").num_gemms == 36
+    assert dataclasses.replace(full, pair_policy="budget:7").num_gemms == 7

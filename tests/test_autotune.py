@@ -172,6 +172,34 @@ def test_plan_key_dtype_defaults_from_accum():
     assert k64 != k32
 
 
+def test_plan_key_dtype_spellings_canonicalized(tmp_path):
+    """A key built from the ``jnp.float64`` OBJECT and one built from the
+    ``"float64"`` string are the same cache entry — before the
+    canonicalization they hashed apart and silently missed (and the
+    object spelling broke JSON serialization)."""
+    import numpy as np
+
+    obj_key = PlanKey(m=8, n=16, k=32, dtype=jnp.float64,
+                      device_kind="cpu")
+    str_key = PlanKey(m=8, n=16, k=32, dtype="float64", device_kind="cpu")
+    np_key = PlanKey(m=8, n=16, k=32, dtype=np.dtype("float64"),
+                     device_kind="cpu")
+    assert obj_key == str_key == np_key
+    assert obj_key.dtype == "float64"           # canonical string stored
+    assert hash(obj_key) == hash(str_key)
+    cache = PlanCache(tmp_path / "p.json")
+    cache.put(obj_key, _distinct_plan())
+    assert cache.get(str_key) is not None       # cross-spelling hit
+    cache.save()                                 # object spelling is JSON-safe
+    back = PlanCache.load(tmp_path / "p.json")
+    assert back.get(PlanKey(m=8, n=16, k=32, dtype=jnp.float64,
+                            device_kind="cpu")) == _distinct_plan()
+    # the select_pipeline_plan entry point accepts either spelling too
+    sel_key = plan_cache_key(8, 16, 32, dtype=jnp.float64,
+                             device_kind="cpu")
+    assert sel_key == str_key
+
+
 # ----------------------------------------------------------------------------
 # Candidate space: analytic seed first, result-invariant by default
 # ----------------------------------------------------------------------------
@@ -193,6 +221,128 @@ def test_candidates_num_splits_search_is_opt_in():
     s0 = base[0].num_splits
     assert {c.num_splits for c in base} == {s0}
     assert {c.num_splits for c in wide} == {s0, s0 + 1, s0 + 2}
+
+
+def test_candidates_never_violate_dw_schedule_guard():
+    """search_num_splits used to enumerate df32 plans violating the
+    ``(num_splits + 1) * w <= 120`` guard and crash mid-measurement;
+    invalid candidates are now filtered up front, so the guard never
+    raises during (or after) ``candidate_plans``."""
+    from repro.core.tuning import plan_schedule_ok
+
+    # k=32 -> w=7 at every candidate s: s > 16 violates (s+1)*7 <= 120
+    cands = candidate_plans(8, 8, 32, accum="df32", search_num_splits=12,
+                            max_candidates=None)
+    assert all(plan_schedule_ok(c, 32) for c in cands)
+    assert max(c.num_splits for c in cands) <= 16
+    assert len({c.num_splits for c in cands}) > 1   # search still widens
+    # the widest surviving candidate measures without raising — this is
+    # the exact call path that crashed before the filter
+    widest = max(cands, key=lambda c: c.num_splits)
+    assert measure_plan(widest, 8, 8, 32, warmup=1, iters=1) > 0
+    # sanity: the filter is the reason (an over-wide plan IS invalid)
+    import dataclasses as dc
+    assert not plan_schedule_ok(dc.replace(cands[0], num_splits=20), 32)
+    # f64 plans have no f32 scale ceiling: nothing is filtered there
+    f64 = candidate_plans(8, 8, 32, accum="f64", search_num_splits=12,
+                          max_candidates=None)
+    s0 = f64[0].num_splits
+    assert max(c.num_splits for c in f64) == s0 + 12
+
+
+def test_candidates_pair_budgets_are_accuracy_checked(rng):
+    """With a target, pair-budget candidates appear — every one meeting
+    the guaranteed bound, so no measured winner can violate the target."""
+    from repro.core.accuracy import truncation_eta
+    from repro.core.splitting import slice_width
+
+    k = 96
+    tgt = 1e-6
+    cands = candidate_plans(24, 24, k, accum="f64", target_error=tgt,
+                            fast_mode=True, max_candidates=None)
+    budgets = [c for c in cands if c.pair_policy.startswith("budget:")]
+    assert budgets                               # the space really widened
+    for c in cands:
+        w = slice_width(k, fuse_terms=c.num_splits)
+        eta = truncation_eta(c.num_splits, w, pair_policy=c.pair_policy)
+        assert k * eta <= tgt, (c.pair_policy, k * eta)
+    # distinct budgets: the measurement can trade pairs for time
+    assert len({c.pair_policy for c in cands}) >= 2
+
+
+def test_cache_hit_rejected_on_pair_policy_mismatch():
+    """A plan cached with the full schedule must not serve a fast-mode
+    request (pair_policy is result-affecting, like num_splits)."""
+    cache = PlanCache()
+    key = plan_cache_key(8, 16, 32, accum="f64", device_kind="cpu")
+    full_plan = select_pipeline_plan(8, 16, 32, accum="f64")
+    cache.put(key, full_plan)
+    got = select_pipeline_plan(8, 16, 32, accum="f64", fast_mode=True,
+                               cache=cache, device_kind="cpu")
+    assert got.pair_policy == "diagonal"         # resolved, not the hit
+    # and the exact-policy request hits
+    cache.put(key, got)
+    again = select_pipeline_plan(8, 16, 32, accum="f64", fast_mode=True,
+                                 cache=cache, device_kind="cpu")
+    assert again == got
+
+
+def test_unpinned_request_never_served_truncated_plan():
+    """The inverse direction: a truncated plan cached by a fast-mode run
+    (e.g. the serving pre-warm) must NOT be silently served to a caller
+    with no accuracy knobs — that would degrade a full-accuracy run."""
+    import dataclasses as dc
+
+    cache = PlanCache()
+    key = plan_cache_key(8, 16, 32, accum="f64", device_kind="cpu")
+    truncated = dc.replace(select_pipeline_plan(8, 16, 32, accum="f64"),
+                           pair_policy="budget:5")
+    cache.put(key, truncated)
+    got = select_pipeline_plan(8, 16, 32, accum="f64", cache=cache,
+                               device_kind="cpu")
+    assert got.pair_policy == "full"             # analytic, not the hit
+
+
+def test_target_pinned_hit_accepts_any_point_meeting_target():
+    """Under a pinned target the TARGET is the acceptance contract: a
+    cached winner with MORE pairs than the minimal resolved budget (or
+    the full schedule) still meets it and must hit — rejecting it would
+    re-tune on every call forever."""
+    cache = PlanCache()
+    k = 96
+    key = plan_cache_key(24, 24, k, accum="f64", device_kind="cpu")
+    full_plan = select_pipeline_plan(24, 24, k, accum="f64")
+    cache.put(key, full_plan)                    # full: meets any target
+    got = select_pipeline_plan(24, 24, k, accum="f64", target_error=1e-6,
+                               fast_mode=True, cache=cache,
+                               device_kind="cpu")
+    assert got == full_plan and cache.hits == 1
+    # but a cached point too coarse for the target is rejected
+    import dataclasses as dc
+    cache2 = PlanCache()
+    cache2.put(key, dc.replace(full_plan, pair_policy="budget:2"))
+    got2 = select_pipeline_plan(24, 24, k, accum="f64", target_error=1e-6,
+                                fast_mode=True, cache=cache2,
+                                device_kind="cpu")
+    assert got2.pair_policy != "budget:2"
+
+
+def test_autotune_target_second_call_is_pure_hit(tmp_path, monkeypatch):
+    """Whatever accuracy-checked candidate wins the measurement, the
+    next identical target-pinned call must be a pure cache hit (the
+    winner's policy may differ from the minimal resolution)."""
+    cache = PlanCache(tmp_path / "plans.json")
+    rep = autotune_plan(16, 16, 48, accum="f64", target_error=1e-6,
+                        fast_mode=True, cache=cache, max_candidates=6,
+                        warmup=1, iters=1)
+    assert len(cache) == 1
+
+    def boom(*a, **kw):
+        raise AssertionError("measured on a target-pinned cache hit")
+    monkeypatch.setattr(at, "measure_plan", boom)
+    rep2 = autotune_plan(16, 16, 48, accum="f64", target_error=1e-6,
+                         fast_mode=True, cache=cache)
+    assert rep2.best == rep.best
 
 
 def test_candidates_all_bitwise_equal_to_analytic(rng):

@@ -120,13 +120,15 @@ def test_epilogue_keeps_fusion_on_batch_grid(rng):
 def test_epilogue_batch_grid_env_fallback_warns_once(rng, monkeypatch):
     """REPRO_OZAKI_BATCHED_EPILOGUE=0 restores the stage-fused fallback
     for stacked-weights batches — with ONE warning stating the reason,
-    not a silent fusion-mode switch — and stays bitwise."""
+    not a silent fusion-mode switch — and stays bitwise. (The warn-once
+    latch is reset per test by the conftest fixture via the public
+    ``reset_downgrade_warnings`` API — no monkeypatching module
+    internals.)"""
     import warnings
 
     from repro.core import tuning
 
     monkeypatch.setenv(tuning.BATCHED_EPILOGUE_ENV, "0")
-    monkeypatch.setattr(tuning, "_DOWNGRADE_WARNED", set())
     cfg = OzakiConfig(num_splits=7, backend="pallas_fused",
                       fuse_epilogue=True)
     with pytest.warns(UserWarning, match="fuse_epilogue downgraded"):
@@ -141,6 +143,58 @@ def test_epilogue_batch_grid_env_fallback_warns_once(rng, monkeypatch):
     b = jnp.stack([_phi_matrix(rng, 32, 8) for _ in range(2)])
     got = np.asarray(ozaki_matmul_batched(a, b, cfg))
     base = np.asarray(ozaki_matmul_batched(a, b, OzakiConfig(num_splits=7)))
+    np.testing.assert_array_equal(got, base)
+
+
+def test_env_fallback_warning_refires_after_reset(rng, monkeypatch):
+    """The latch leaking across tests was a bug: a SECOND consumer of the
+    downgrade (fresh process, re-configured deployment, the next test)
+    must see the warning again once the latch is reset."""
+    from repro.core import tuning
+
+    monkeypatch.setenv(tuning.BATCHED_EPILOGUE_ENV, "0")
+    cfg = OzakiConfig(num_splits=7, backend="pallas_fused",
+                      fuse_epilogue=True)
+    with pytest.warns(UserWarning, match="fuse_epilogue downgraded"):
+        cfg.plan(batch_layout="grid")
+    tuning.reset_downgrade_warnings()
+    with pytest.warns(UserWarning, match="fuse_epilogue downgraded"):
+        cfg.plan(batch_layout="grid")            # fires again: fresh state
+
+
+# fast-mode pair policies ride the SAME executor matrix: "full" must stay
+# bitwise-identical to the plain xla pipeline, truncated policies bitwise
+# equal to xla under the same policy (truncation is a schedule property,
+# not a backend property — the Pallas pair grids shrink with it).
+PAIR_POLICIES_TESTED = ("full", "diagonal", "budget:7")
+
+
+@pytest.mark.parametrize("executor", sorted(EXECUTORS))
+@pytest.mark.parametrize("policy", PAIR_POLICIES_TESTED)
+def test_pair_policy_parity_matrix(rng, executor, policy):
+    a = _phi_matrix(rng, 24, 96)
+    b = _phi_matrix(rng, 96, 16)
+    kw = dict(num_splits=9, pair_policy=policy)
+    base = np.asarray(ozaki_matmul(a, b, OzakiConfig(backend="xla", **kw)))
+    got = np.asarray(ozaki_matmul(
+        a, b, OzakiConfig(interpret=True, **EXECUTORS[executor], **kw)))
+    np.testing.assert_array_equal(got, base)
+    if policy == "full":
+        plain = np.asarray(ozaki_matmul(a, b, OzakiConfig(num_splits=9)))
+        np.testing.assert_array_equal(got, plain)
+
+
+@pytest.mark.parametrize("policy", ["diagonal", "budget:5"])
+def test_pair_policy_batch_grid_parity(rng, policy):
+    """Truncated pair grids on the batch-grid epilogue kernel: bitwise
+    equal to the xla batched pipeline under the same policy."""
+    kw = dict(num_splits=7, pair_policy=policy)
+    a = jnp.stack([_phi_matrix(rng, 9, 33) for _ in range(3)])
+    b = jnp.stack([_phi_matrix(rng, 33, 11) for _ in range(3)])
+    got = np.asarray(ozaki_matmul_batched(
+        a, b, OzakiConfig(backend="pallas_fused", fuse_epilogue=True, **kw)))
+    base = np.asarray(ozaki_matmul_batched(
+        a, b, OzakiConfig(backend="xla", **kw)))
     np.testing.assert_array_equal(got, base)
 
 

@@ -8,8 +8,8 @@ import pytest
 from repro.core.ozaki import OzakiConfig
 from repro.core.tuning import (BATCH_LAYOUTS, FUSION_MODES, PipelinePlan,
                                TilePlan, VMEM_BUDGET, apply_pipeline_plan,
-                               hbm_pass_model, plan_for, select_pipeline_plan,
-                               select_plan)
+                               diagonal_groups, hbm_pass_model, plan_for,
+                               select_pipeline_plan, select_plan)
 from repro.kernels.launch import LANE, SUBLANE_F32, SUBLANE_I8
 
 
@@ -74,6 +74,10 @@ def test_pipeline_plan_validation():
         PipelinePlan(batch_layout="bogus")
     with pytest.raises(ValueError, match="accum"):
         PipelinePlan(accum="f32")
+    with pytest.raises(ValueError, match="pair_policy"):
+        PipelinePlan(pair_policy="bogus")
+    with pytest.raises(ValueError, match="budget"):
+        PipelinePlan(pair_policy="budget:0")
     # epilogue + grid is a VALID plan since the batch-grid epilogue kernel
     plan = PipelinePlan(backend="pallas_fused", fusion="epilogue",
                         batch_layout="grid")
@@ -121,7 +125,11 @@ def test_apply_pipeline_plan_roundtrip():
 
 @pytest.mark.parametrize("plan", [
     PipelinePlan(),
+    PipelinePlan(pair_policy="diagonal"),
+    PipelinePlan(pair_policy="budget:7"),
     select_pipeline_plan(64, 64, 256),
+    select_pipeline_plan(64, 64, 256, fast_mode=True),
+    select_pipeline_plan(64, 64, 256, target_error=1e-8, fast_mode=True),
     select_pipeline_plan(8, 64, 7, batch=32, broadcast_weights=True,
                          accum="df32", shard_axis="model"),
     select_pipeline_plan(9, 65, 129, batch=3, backend="pallas",
@@ -132,6 +140,41 @@ def test_pipeline_plan_json_roundtrip(plan):
     back = PipelinePlan.from_dict(json.loads(wire))
     assert back == plan
     assert isinstance(back.tile, TilePlan)
+
+
+def test_pipeline_plan_from_dict_without_pair_policy():
+    """Plans serialized before the pair_policy field (PR 3 caches) load
+    with the full schedule — cache files stay forward-compatible."""
+    d = PipelinePlan().to_dict()
+    d.pop("pair_policy")
+    assert PipelinePlan.from_dict(d).pair_policy == "full"
+
+
+def test_select_pipeline_plan_accuracy_knobs():
+    full = select_pipeline_plan(64, 64, 128)
+    fast = select_pipeline_plan(64, 64, 128, fast_mode=True)
+    assert fast.pair_policy == "diagonal"
+    assert fast.num_gemms < full.num_gemms
+    targeted = select_pipeline_plan(64, 64, 128, target_error=1e-8,
+                                    fast_mode=True)
+    assert targeted.num_splits < full.num_splits     # reduced, not raised
+    assert targeted.pair_policy.startswith("budget:")
+    # apply_pipeline_plan carries the policy into the config and back
+    cfg = apply_pipeline_plan(OzakiConfig(), targeted)
+    assert cfg.pair_policy == targeted.pair_policy
+    assert plan_for(cfg) == targeted
+
+
+def test_diagonal_groups_pair_budget():
+    full = diagonal_groups(5)
+    assert sum(len(p) for _, p in full) == 15
+    cut = diagonal_groups(5, pair_budget=7)
+    assert sum(len(p) for _, p in cut) == 7
+    # truncation keeps the significance-ascending prefix; the partial
+    # diagonal keeps its leading pairs
+    assert [t for t, _ in cut] == [0, 1, 2, 3]
+    assert cut[-1][1] == full[3][1][:1]
+    assert diagonal_groups(5, pair_budget=1) == [(0, [(0, 0)])]
 
 
 # ----------------------------------------------------------------------------
@@ -180,6 +223,18 @@ def test_hbm_pass_model_batched_epilogue_closes_fusion_gap():
     epi = hbm_pass_model(9, fused=True, fuse_epilogue=True, batch=4,
                          batch_layout="grid")
     assert stages["accum"] == 3 * 9 * 4 and epi["accum"] == 2 * 9 * 4
+
+
+def test_hbm_pass_model_pair_policy():
+    """Pair truncation drops whole accumulation groups (fused diagonals)
+    or individual pair passes (paper-faithful schedule)."""
+    full = hbm_pass_model(9, fused=True, fuse_epilogue=True)
+    diag = hbm_pass_model(9, fused=True, fuse_epilogue=True,
+                          pair_policy="diagonal")
+    assert diag["accum"] == 2 * 8 and full["accum"] == 2 * 9
+    unfused_budget = hbm_pass_model(9, fused=False, fuse_diagonals=False,
+                                    pair_policy="budget:10")
+    assert unfused_budget["accum"] == 10 * 5
 
 
 def test_hbm_pass_model_validates_batch_layout():

@@ -1,13 +1,19 @@
 """Shared benchmark utilities: timing, CSV emission, input generators,
-and the plan-cache/autotune context every registered benchmark runs in.
+and the policy/plan-cache/autotune context every registered benchmark
+runs in.
 
-CSV schema: ``name,us_per_call,derived,plan`` — ``plan`` is the chosen
-``PipelinePlan`` as JSON (CSV-quoted; empty for rows that plan nothing),
-so any perf row can be reproduced from its exact launch parameters.
+CSV schema: ``name,us_per_call,derived,plan,policy`` — ``plan`` is the
+chosen ``PipelinePlan`` as JSON (CSV-quoted; empty for rows that plan
+nothing) and ``policy`` is the run's resolved ``MatmulPolicy`` spec
+string (empty when the run pinned no policy), so any perf row can be
+reproduced from its exact launch parameters AND its precision operating
+point.
 
 ``benchmarks.run`` (and each benchmark's ``__main__``) parses
-``--plan-cache PATH`` / ``--autotune`` into the module-level ``CONTEXT``;
-benchmarks call ``plan_gemm`` to resolve plans through it, so the same
+``--policy SPEC`` / ``--plan-cache PATH`` / ``--autotune`` into the
+module-level ``CONTEXT``; a ``--policy`` naming a cache path or
+``|autotune`` maps onto the same machinery as the dedicated flags.
+Benchmarks call ``plan_gemm`` to resolve plans through it, so the same
 flags reach every registered benchmark without threading arguments.
 """
 from __future__ import annotations
@@ -21,28 +27,43 @@ import jax
 import numpy as np
 
 if TYPE_CHECKING:                      # deferred: repro imports stay lazy
+    from repro.api import MatmulPolicy
     from repro.core.autotune import PlanCache
 
 ROWS = []
 
-CSV_HEADER = "name,us_per_call,derived,plan"
+CSV_HEADER = "name,us_per_call,derived,plan,policy"
 
 
 @dataclasses.dataclass
 class BenchContext:
-    """Plan resolution policy shared by all benchmarks in one run."""
+    """Plan/policy resolution shared by all benchmarks in one run."""
 
     plan_cache: Optional["PlanCache"] = None    # core.autotune.PlanCache
     autotune: bool = False
+    policy: Optional["MatmulPolicy"] = None     # repro.api.MatmulPolicy
 
 
 CONTEXT = BenchContext()
 
 
 def configure(plan_cache_path: Optional[str] = None,
-              autotune: bool = False) -> BenchContext:
-    """Install the run-wide plan context (from --plan-cache/--autotune)."""
+              autotune: bool = False,
+              policy: Optional[str] = None) -> BenchContext:
+    """Install the run-wide context (--policy/--plan-cache/--autotune).
+
+    A ``--policy`` spec naming a plan cache (``|cache=PATH``) or
+    ``|autotune`` feeds the SAME plan-cache/autotune machinery as the
+    dedicated flags (the dedicated flags win when both are given).
+    """
     from repro.core.autotune import PlanCache
+    pol = None
+    if policy is not None:
+        from repro.api import MatmulPolicy
+        pol = MatmulPolicy.of(policy)
+        plan_cache_path = plan_cache_path or pol.plan_cache
+        autotune = autotune or pol.autotune
+    CONTEXT.policy = pol
     CONTEXT.plan_cache = (PlanCache.load(plan_cache_path)
                           if plan_cache_path else None)
     CONTEXT.autotune = autotune
@@ -50,7 +71,12 @@ def configure(plan_cache_path: Optional[str] = None,
 
 
 def add_plan_args(ap) -> None:
-    """The shared --plan-cache/--autotune argparse surface."""
+    """The shared --policy/--plan-cache/--autotune argparse surface."""
+    ap.add_argument("--policy", metavar="SPEC", default=None,
+                    help="matmul policy spec (repro.api.MatmulPolicy, "
+                         "e.g. 'ozaki-fp64@1e-25:fast/pallas_fused"
+                         "+epilogue|cache=plans.json|autotune') applied "
+                         "to every planned GEMM and recorded per CSV row")
     ap.add_argument("--plan-cache", metavar="PATH", default=None,
                     help="persistent PlanCache JSON consulted (and, with "
                          "--autotune, populated) for every planned GEMM")
@@ -61,7 +87,13 @@ def add_plan_args(ap) -> None:
 
 def configure_from_args(args) -> BenchContext:
     return configure(plan_cache_path=args.plan_cache,
-                     autotune=args.autotune)
+                     autotune=args.autotune,
+                     policy=getattr(args, "policy", None))
+
+
+def policy_spec() -> str:
+    """The run's resolved policy spec string ("" without --policy)."""
+    return CONTEXT.policy.spec() if CONTEXT.policy is not None else ""
 
 
 def plan_gemm(m: int, n: int, k: int, **kwargs):
@@ -69,9 +101,25 @@ def plan_gemm(m: int, n: int, k: int, **kwargs):
 
     Analytic when no cache/autotune is configured; cache hits return
     without re-tuning; misses autotune when --autotune was passed (the
-    winner is persisted to the cache file immediately).
+    winner is persisted to the cache file immediately). A run-wide
+    --policy seeds the planner's precision knobs (backend, fusion,
+    splits, target, fast mode, pair policy) — explicit kwargs win.
     """
     from repro.core.tuning import select_pipeline_plan
+    pol = CONTEXT.policy
+    if pol is not None and pol.scheme == "ozaki_fp64":
+        kwargs.setdefault("backend", pol.backend)
+        kwargs.setdefault("fuse_epilogue", pol.fuse_epilogue)
+        if pol.num_splits is not None:
+            kwargs.setdefault("num_splits", pol.num_splits)
+        if pol.target_error is not None:
+            kwargs.setdefault("target_error", pol.target_error)
+        if pol.fast_mode:
+            kwargs.setdefault("fast_mode", True)
+        if pol.pair_policy != "full":
+            kwargs.setdefault("pair_policy", pol.pair_policy)
+        if pol.shard_axis is not None:
+            kwargs.setdefault("shard_axis", pol.shard_axis)
     return select_pipeline_plan(m, n, k, cache=CONTEXT.plan_cache,
                                 autotune=CONTEXT.autotune, **kwargs)
 
@@ -88,8 +136,10 @@ def plan_json(plan) -> str:
 
 def emit(name: str, us_per_call: float, derived: str = "", plan=None):
     pj = plan_json(plan)
-    ROWS.append((name, us_per_call, derived, pj))
-    print(f"{name},{us_per_call:.1f},{derived},{_csv_field(pj)}", flush=True)
+    spec = policy_spec()
+    ROWS.append((name, us_per_call, derived, pj, spec))
+    print(f"{name},{us_per_call:.1f},{derived},{_csv_field(pj)},"
+          f"{_csv_field(spec)}", flush=True)
 
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:

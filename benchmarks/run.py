@@ -1,14 +1,19 @@
 """Benchmark aggregator: one section per paper figure/table.
 
 ``PYTHONPATH=src python -m benchmarks.run`` prints
-``name,us_per_call,derived,plan`` CSV rows for every benchmark; section
-mapping lives in DESIGN.md §5 and EXPERIMENTS.md.
+``name,us_per_call,derived,plan,policy`` CSV rows for every benchmark;
+section mapping lives in DESIGN.md §5 and EXPERIMENTS.md.
 
-``--plan-cache PATH`` routes every planned GEMM through a persistent
-``core.autotune.PlanCache`` and ``--autotune`` measures candidates on
-misses — the chosen plan lands in the ``plan`` CSV column of each row it
-applies to, so perf numbers are reproducible from the row alone. The
-flags reach every registered benchmark through ``common.CONTEXT``.
+``--policy SPEC`` pins a run-wide ``repro.api.MatmulPolicy`` (one front
+door for backend/fusion/splits/target/fast-mode; a spec naming
+``|cache=PATH`` / ``|autotune`` maps onto the same machinery as the
+dedicated flags below) and the resolved spec string is recorded in the
+``policy`` column of every row. ``--plan-cache PATH`` routes every
+planned GEMM through a persistent ``core.autotune.PlanCache`` and
+``--autotune`` measures candidates on misses — the chosen plan lands in
+the ``plan`` CSV column of each row it applies to, so perf numbers are
+reproducible from the row alone. The flags reach every registered
+benchmark through ``common.CONTEXT``.
 """
 import argparse
 

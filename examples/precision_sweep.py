@@ -1,6 +1,7 @@
 """The Ozaki scheme as a *variable-precision dial* (paper Sec. 2.3.3):
-sweep the split count and chart accuracy vs. #int8-GEMMs, including the
-intermediate-precision regime between FP32 and FP64 the paper highlights.
+sweep the split count through ``repro.matmul`` policy specs and chart
+accuracy vs. #int8-GEMMs, including the intermediate-precision regime
+between FP32 and FP64 the paper highlights.
 
     PYTHONPATH=src python examples/precision_sweep.py
 """
@@ -11,8 +12,8 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core.ozaki import (OzakiConfig, gemm_fp32_pass,  # noqa: E402
-                              ozaki_matmul)
+import repro  # noqa: E402
+from repro.core.ozaki import gemm_fp32_pass  # noqa: E402
 from repro.core.xmath import dd_matmul_np, rel_error_vs_dd  # noqa: E402
 
 
@@ -28,19 +29,19 @@ def main():
     def err(c):
         return float(np.max(rel_error_vs_dd(np.asarray(c), hi, lo)))
 
-    print(f"{'mode':>12s} {'#int8 GEMMs':>12s} {'max rel err':>12s}")
+    print(f"{'policy':>14s} {'#int8 GEMMs':>12s} {'max rel err':>12s}")
     e32 = err(gemm_fp32_pass(a, b))
-    print(f"{'FP32':>12s} {'-':>12s} {e32:12.2e}")
+    print(f"{'FP32':>14s} {'-':>12s} {e32:12.2e}")
     for s in range(2, 14):
-        cfg = OzakiConfig(num_splits=s)
-        e = err(ozaki_matmul(a, b, cfg))
+        spec = f"ozaki-fp64x{s}"
+        cfg = repro.MatmulPolicy.parse(spec).ozaki_config(k)
+        e = err(repro.matmul(a, b, precision=spec))
         marker = ""
         if e < e32 and s <= 5:
             marker = "   <- between FP32 and FP64"
         if e < 1e-15:
             marker = "   <- FP64-equivalent"
-        print(f"{'INT8x%d' % s:>12s} {cfg.num_gemms:12d} {e:12.2e}"
-              f"{marker}")
+        print(f"{spec:>14s} {cfg.num_gemms:12d} {e:12.2e}{marker}")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
-"""Quickstart: FP64-accurate GEMM out of int8 matmuls, in five lines.
+"""Quickstart: FP64-accurate GEMM out of int8 matmuls, via the one
+front door — ``repro.matmul`` + a ``MatmulPolicy`` precision spec.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,7 +10,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core.ozaki import OzakiConfig, ozaki_matmul  # noqa: E402
+import repro  # noqa: E402
 
 
 def main():
@@ -17,21 +18,31 @@ def main():
     a = jnp.asarray(rng.uniform(-0.5, 0.5, (512, 512)))
     b = jnp.asarray(rng.uniform(-0.5, 0.5, (512, 512)))
 
-    # The paper: split into int8 slices, exact int32 GEMMs, one
-    # high-precision accumulation (INT8x9 = 9 splits).
-    c = ozaki_matmul(a, b, OzakiConfig(num_splits=9))
+    # The paper as a drop-in DGEMM: ask for FP64 accuracy, the scheme
+    # decides splits and kernels (default policy = ozaki-fp64, auto s).
+    c = repro.matmul(a, b)
 
     ref = a @ b                                  # plain FP64 GEMM
     err = float(jnp.max(jnp.abs(c - ref)) / jnp.max(jnp.abs(ref)))
-    print(f"ozaki INT8x9 vs FP64 DGEMM: max rel diff = {err:.2e}")
+    print(f"repro.matmul (ozaki-fp64, auto) vs FP64 DGEMM: "
+          f"max rel diff = {err:.2e}")
     assert err < 1e-14
 
-    # Variable precision: fewer splits = faster + coarser (Sec. 2.3.3)
+    # Variable precision: the spec string IS the dial (Sec. 2.3.3) —
+    # fewer splits = faster + coarser. "ozaki-fp64x9" pins INT8x9.
     for s in (4, 6, 9):
-        c = ozaki_matmul(a, b, OzakiConfig(num_splits=s))
+        c = repro.matmul(a, b, precision=f"ozaki-fp64x{s}")
         err = float(jnp.max(jnp.abs(c - ref)) / jnp.max(jnp.abs(ref)))
-        print(f"  INT8x{s}: {s * (s + 1) // 2:3d} int8 GEMMs, "
+        print(f"  ozaki-fp64x{s}: {s * (s + 1) // 2:3d} int8 GEMMs, "
               f"rel err {err:.2e}")
+
+    # The same spec scopes ambiently (mirrors jax.default_matmul_precision)
+    with repro.default_matmul_precision("ozaki-fp64x9/pallas_fused"
+                                        "+epilogue"):
+        c_fused = repro.matmul(a, b)
+    c_ref = repro.matmul(a, b, precision="ozaki-fp64x9")
+    assert bool(jnp.all(c_fused == c_ref))       # backends are bitwise-equal
+    print("fused-kernel backend bitwise == xla reference ✓")
 
 
 if __name__ == "__main__":

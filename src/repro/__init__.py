@@ -1,5 +1,16 @@
 """ozJAX — DGEMM on integer matrix multiplication units, in JAX/Pallas.
 
+Public API (the package's front door — see ``repro.api``):
+
+* ``matmul(a, b, precision=...)`` — one precision-policy entry point
+  over every Ozaki pipeline (unbatched/batched/DW/complex).
+* ``MatmulPolicy`` — the frozen precision spec (``"ozaki-fp64x9"``,
+  ``"ozaki-fp64@1e-25:fast/pallas_fused+epilogue"``, ``"bf16"``, ...).
+* ``default_matmul_precision(spec)`` — scope the ambient policy (and
+  its plan cache), mirroring ``jax.default_matmul_precision``.
+* ``OzakiConfig`` — the core-layer configuration object, for callers
+  driving ``repro.core`` directly.
+
 Package-wide numerics policy, applied before any RNG or kernel runs:
 
 * partitionable threefry — sharded parameter init must draw the SAME
@@ -13,3 +24,10 @@ Package-wide numerics policy, applied before any RNG or kernel runs:
 import jax
 
 jax.config.update("jax_threefry_partitionable", True)
+
+from repro.api import (MatmulPolicy, default_matmul_precision,  # noqa: E402
+                       matmul)
+from repro.core.ozaki import OzakiConfig  # noqa: E402
+
+__all__ = ["matmul", "MatmulPolicy", "default_matmul_precision",
+           "OzakiConfig"]

@@ -18,6 +18,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.core.warn_once import WarnOnceLatch
+
+# one-shot DeprecationWarning for legacy ozaki_* fields (resettable in
+# tests via core.warn_once.reset_all_warn_latches — conftest does this)
+_LEGACY_FIELD_LATCH = WarnOnceLatch("archconfig_legacy_ozaki_fields")
+
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
@@ -70,6 +76,13 @@ class ArchConfig:
     num_codebooks: int = 1          # audio stub: EnCodec codebooks summed
 
     # --- numerics / the paper's knob ------------------------------------
+    # ONE policy spec is the supported surface (repro.api.MatmulPolicy):
+    # e.g. "ozaki-fp64x9@1e-25:fast/pallas_fused+epilogue|shard=data".
+    # When set it is authoritative — matmul_precision and every ozaki_*
+    # field below are back-filled from it so legacy readers stay
+    # consistent. When empty, the legacy fields below stand (deprecated:
+    # any non-default ozaki_* value emits a one-shot DeprecationWarning).
+    matmul_policy: str = ""
     matmul_precision: str = "bf16"  # bf16 | int8_quant | ozaki_fp64
     ozaki_splits: int = 9
     ozaki_backend: str = "xla"      # xla | pallas | pallas_fused
@@ -109,9 +122,67 @@ class ArchConfig:
         if self.num_heads and not self.head_dim:
             object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
         assert self.family in ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+        self._sync_matmul_policy()
         assert self.matmul_precision in ("bf16", "int8_quant", "ozaki_fp64")
         assert self.ozaki_backend in ("xla", "pallas", "pallas_fused")
         assert self.ozaki_target_error >= 0.0
+
+    def _sync_matmul_policy(self):
+        """Keep ``matmul_policy`` and the legacy fields consistent.
+
+        * ``matmul_policy`` set — it is authoritative: parse/validate it
+          (canonicalizing the spec) and back-fill ``matmul_precision`` +
+          every ``ozaki_*`` field so legacy readers agree with it.
+        * ``matmul_policy`` empty — the legacy fields stand; any
+          non-default ``ozaki_*`` value emits a one-shot
+          DeprecationWarning pointing at the spec equivalent
+          (``self.policy().spec()``). The spec is NOT stored back (so
+          ``dataclasses.replace`` with legacy kwargs keeps working).
+        """
+        from repro.api import policy_from_legacy_fields
+        if self.matmul_policy:
+            from repro.api import MatmulPolicy
+            pol = MatmulPolicy.parse(self.matmul_policy)
+            set_ = object.__setattr__
+            set_(self, "matmul_policy", pol.spec())
+            set_(self, "matmul_precision", pol.scheme)
+            if pol.scheme == "ozaki_fp64":
+                set_(self, "ozaki_backend", pol.backend)
+                if pol.num_splits is not None:
+                    set_(self, "ozaki_splits", pol.num_splits)
+                elif self.ozaki_splits != \
+                        _legacy_ozaki_defaults()["ozaki_splits"]:
+                    # the one legacy field an auto-split spec cannot
+                    # back-fill: a pinned count alongside the spec would
+                    # silently diverge from what actually runs
+                    _LEGACY_FIELD_LATCH.warn(
+                        "splits_vs_auto_spec",
+                        f"ozaki_splits={self.ozaki_splits} is ignored: "
+                        f"matmul_policy {pol.spec()!r} selects the split "
+                        "count automatically (pin it with an 'xN' scheme "
+                        "suffix instead)", stacklevel=6)
+                set_(self, "ozaki_fuse_epilogue", pol.fuse_epilogue)
+                set_(self, "ozaki_shard_axis", pol.shard_axis or "")
+                set_(self, "ozaki_plan_cache", pol.plan_cache or "")
+                set_(self, "ozaki_autotune", pol.autotune)
+                set_(self, "ozaki_target_error", pol.target_error or 0.0)
+                set_(self, "ozaki_fast_mode", pol.fast_mode)
+            return
+        stale = [f for f, dflt in _legacy_ozaki_defaults().items()
+                 if getattr(self, f) != dflt]
+        if stale:
+            _LEGACY_FIELD_LATCH.warn(
+                "ozaki_fields",
+                f"ArchConfig ozaki_* fields ({', '.join(sorted(stale))}) "
+                f"are deprecated; set matmul_policy="
+                f"{policy_from_legacy_fields(self).spec()!r} instead "
+                "(repro.api.MatmulPolicy)",
+                category=DeprecationWarning, stacklevel=5)
+
+    def policy(self):
+        """The ``repro.api.MatmulPolicy`` this config resolves to."""
+        from repro.api import policy_of
+        return policy_of(self)
 
     @property
     def attention_free(self) -> bool:
@@ -187,6 +258,15 @@ class ArchConfig:
         if isinstance(kw.get("ssm"), dict):
             kw["ssm"] = SSMConfig(**kw["ssm"])
         return ArchConfig(**kw)
+
+
+def _legacy_ozaki_defaults() -> dict:
+    """The legacy ``ozaki_*`` fields and their dataclass defaults — a
+    non-default value on a config WITHOUT a matmul_policy spec is the
+    deprecated surface. Derived from the dataclass itself so a changed
+    default cannot drift out of sync with the deprecation check."""
+    return {f.name: f.default for f in dataclasses.fields(ArchConfig)
+            if f.name.startswith("ozaki_")}
 
 
 def _attn_params(c: ArchConfig) -> int:

@@ -57,7 +57,6 @@ from __future__ import annotations
 import dataclasses
 import math
 import os
-import warnings
 from typing import Optional, Sequence
 
 # alignment vocabulary is owned by the kernels' shared launch layer, so
@@ -69,6 +68,7 @@ from repro.kernels.launch import (LANE, SUBLANE_F32 as SUBLANE, SUBLANE_I8,
 
 from .analytic import DGEMM_MANTISSA_SPACE, INT8_INT32, MMUSpec
 from .splitting import slice_width
+from .warn_once import WarnOnceLatch
 
 VMEM_BYTES = 16 * 2 ** 20
 VMEM_BUDGET = VMEM_BYTES // 2      # leave half for double buffering
@@ -88,9 +88,10 @@ PAIR_POLICIES = ("full", "diagonal", "budget:N")
 # for deployments that need to fall back to the stage-fused pipeline on
 # batched calls (e.g. a backend where the 5-D epilogue grid is not yet
 # validated). The fallback warns once per reason instead of silently
-# switching fusion mode.
+# switching fusion mode. The latch is a shared ``WarnOnceLatch`` so the
+# conftest-wide ``reset_all_warn_latches`` covers it.
 BATCHED_EPILOGUE_ENV = "REPRO_OZAKI_BATCHED_EPILOGUE"
-_DOWNGRADE_WARNED: set[str] = set()
+_DOWNGRADE_LATCH = WarnOnceLatch("fuse_epilogue_downgrade")
 
 
 def batched_epilogue_enabled() -> bool:
@@ -98,11 +99,9 @@ def batched_epilogue_enabled() -> bool:
 
 
 def _warn_downgrade_once(reason: str) -> None:
-    if reason in _DOWNGRADE_WARNED:
-        return
-    _DOWNGRADE_WARNED.add(reason)
-    warnings.warn(f"fuse_epilogue downgraded to fusion='stages': {reason}",
-                  stacklevel=3)
+    _DOWNGRADE_LATCH.warn(
+        reason, f"fuse_epilogue downgraded to fusion='stages': {reason}",
+        stacklevel=4)
 
 
 def reset_downgrade_warnings() -> None:
@@ -111,10 +110,11 @@ def reset_downgrade_warnings() -> None:
     The latch is module-level state, so without a reset only the FIRST
     plan built after the env knob flips would warn — a second test (or a
     re-configured long-lived process) would see silence. Test fixtures
-    (``tests/conftest.py``) call this around every test; deployments that
-    re-read the env knob at runtime should call it when they do.
+    (``tests/conftest.py``) reset every registered latch around every
+    test (``core.warn_once.reset_all_warn_latches``); deployments that
+    re-read the env knob at runtime should call this when they do.
     """
-    _DOWNGRADE_WARNED.clear()
+    _DOWNGRADE_LATCH.reset()
 
 
 @dataclasses.dataclass(frozen=True)

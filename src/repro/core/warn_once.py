@@ -1,0 +1,57 @@
+"""Resettable warn-once latches, shared by every module that must warn
+exactly once per process *and* stay testable.
+
+PR 4 grew the first instance of this pattern for the
+``REPRO_OZAKI_BATCHED_EPILOGUE`` downgrade warning: module-level
+warn-once state leaks across tests (the first test that trips the
+warning latches it and every later test sees silence), so the latch
+needs a public reset the test fixtures can call. PR 5 adds a second
+consumer (the ``ozaki_*`` ArchConfig deprecation warning), so the
+pattern moves here:
+
+* ``WarnOnceLatch(name)`` — one latch per warning family. ``warn(key,
+  message)`` emits ``message`` the first time ``key`` is seen and stays
+  silent afterwards; ``reset()`` restores fresh-process state.
+* Every latch registers itself in a module-level registry;
+  ``reset_all_warn_latches()`` resets them all. ``tests/conftest.py``
+  calls it around every test, so any future warn-once consumer is
+  covered without touching the fixture again.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Type
+
+_LATCHES: list["WarnOnceLatch"] = []
+
+
+class WarnOnceLatch:
+    """A named warn-once latch: one warning per key until ``reset()``."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._seen: set[str] = set()
+        _LATCHES.append(self)
+
+    def warn(self, key: str, message: str, *,
+             category: Type[Warning] = UserWarning,
+             stacklevel: int = 3) -> bool:
+        """Emit ``message`` once per ``key``; True when it fired."""
+        if key in self._seen:
+            return False
+        self._seen.add(key)
+        warnings.warn(message, category, stacklevel=stacklevel)
+        return True
+
+    def seen(self, key: str) -> bool:
+        return key in self._seen
+
+    def reset(self) -> None:
+        """Restore fresh-process state (the next ``warn`` fires again)."""
+        self._seen.clear()
+
+
+def reset_all_warn_latches() -> None:
+    """Reset every registered latch — the one call test fixtures need."""
+    for latch in _LATCHES:
+        latch.reset()

@@ -28,9 +28,19 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", metavar="SPEC", default=None,
+                    help="matmul policy spec for this engine (the one "
+                         "front door; repro.api.MatmulPolicy), e.g. "
+                         "'ozaki-fp64@1e-25:fast/pallas_fused+epilogue"
+                         "|cache=plans.json|autotune'. Subsumes (and "
+                         "cannot be combined with) --precision/"
+                         "--target-error/--fast-mode; --plan-cache/"
+                         "--autotune stay combinable and override the "
+                         "spec's |cache=/|autotune sections")
     ap.add_argument("--precision", default=None,
                     choices=["bf16", "int8_quant", "ozaki_fp64"],
-                    help="override cfg.matmul_precision for this engine")
+                    help="legacy: override cfg.matmul_precision only "
+                         "(prefer --policy)")
     ap.add_argument("--plan-cache", metavar="PATH", default=None,
                     help="persistent PlanCache JSON the engine pre-warms "
                          "at startup (ozaki_fp64 only)")
@@ -54,13 +64,26 @@ def main():
     params, _ = init_model(cfg, jax.random.key(args.seed))
     rng = np.random.default_rng(args.seed)
 
-    engine = ServingEngine(cfg, params, num_slots=args.slots,
-                           max_len=args.max_len,
-                           matmul_precision=args.precision,
-                           ozaki_target_error=args.target_error,
-                           ozaki_fast_mode=args.fast_mode or None,
-                           plan_cache=args.plan_cache,
-                           autotune_plans=args.autotune or None)
+    if args.policy is not None and (args.precision or args.target_error
+                                    or args.fast_mode):
+        raise SystemExit("--policy subsumes --precision/--target-error/"
+                         "--fast-mode; pass one or the other")
+    if args.policy is not None:
+        from repro.api import MatmulPolicy
+        pol = MatmulPolicy.parse(args.policy)
+        print(f"[serve] matmul policy: {pol.spec()}")
+        engine = ServingEngine(cfg, params, num_slots=args.slots,
+                               max_len=args.max_len, policy=pol,
+                               plan_cache=args.plan_cache,
+                               autotune_plans=args.autotune or None)
+    else:
+        engine = ServingEngine(cfg, params, num_slots=args.slots,
+                               max_len=args.max_len,
+                               matmul_precision=args.precision,
+                               ozaki_target_error=args.target_error,
+                               ozaki_fast_mode=args.fast_mode or None,
+                               plan_cache=args.plan_cache,
+                               autotune_plans=args.autotune or None)
     if engine.plan_cache is not None:
         print(f"[serve] plan cache pre-warmed: {len(engine.plan_cache)} "
               f"plans ({engine.plan_cache.path})")

@@ -97,38 +97,35 @@ def _matmul_int8_quant(x, w):
     return acc.astype(jnp.float32) * xs * ws
 
 
-def _apply_cached_plan(cfg, x, w, backend: str):
+def _apply_cached_plan(cfg, x, w):
     """Fold the ambient plan cache's tuned plan into an OzakiConfig.
 
     Trace-time lookup (shapes are static under jit) against the cache
     the serving engine pre-warmed and scoped around the tick
     (``core.autotune.use_plan_cache``) — a miss, or no ambient cache,
-    leaves the config untouched. Only the RESULT-INVARIANT plan fields
-    are applied (tile shapes and the stage/epilogue fusion flip, both
-    bitwise-neutral per the backend-parity suite); num_splits and the
-    accumulation schedule stay the model config's, so serving results
-    are bit-identical with and without a cache.
+    leaves the config untouched. The application rule is SHARED with
+    ``repro.matmul`` (``api._apply_tuned_plan``): only the
+    RESULT-INVARIANT plan fields apply (tile shapes and the
+    stage/epilogue fusion flip, both bitwise-neutral per the
+    backend-parity suite); num_splits and the accumulation schedule stay
+    the model config's, so serving results are bit-identical with and
+    without a cache.
     """
-    import dataclasses as _dc
+    from repro.api import _apply_tuned_plan
+    from repro.core.autotune import active_plan_cache
 
-    from repro.core.autotune import active_plan_cache, plan_cache_key
-
-    cache = active_plan_cache()
-    if cache is None:
-        return cfg
     batch, m = (x.shape[0], x.shape[1]) if x.ndim == 3 else (1, x.shape[0])
-    plan = cache.get(plan_cache_key(m, w.shape[1], w.shape[0], batch=batch,
-                                    dtype="float32", backend=backend))
-    if plan is None:
-        return cfg
-    return _dc.replace(cfg, tile=plan.tile,
-                       fuse_epilogue=(plan.fusion == "epilogue"))
+    return _apply_tuned_plan(cfg, active_plan_cache(), m=m, n=w.shape[1],
+                             k=w.shape[0], batch=batch)
 
 
-def _matmul_ozaki(x, w, num_splits: int, backend: str = "xla",
-                  fuse_epilogue: bool = False, shard_axis: str = "",
-                  target_error: float = 0.0, fast_mode: bool = False):
+def _matmul_ozaki(x, w, policy):
     """The paper's path: FP64-accurate x @ w out of int8 MXU GEMMs.
+
+    ``policy`` is the ``repro.api.MatmulPolicy`` carrying every precision
+    decision (backend, split count, fusion, accuracy target, fast mode,
+    shard axis) — the one object that replaced the six per-knob kwargs
+    this function used to take.
 
     x: (..., k) f32, w: (k, n) f32, deployable on TPU ({int8, int32, f32}
     only), f32 result rounded from df32. 3-D activations — the serving
@@ -136,12 +133,13 @@ def _matmul_ozaki(x, w, num_splits: int, backend: str = "xla",
     ``ozaki_matmul_batched``'s broadcast-weights route (the batch folds
     into rows: ONE slice GEMM per anti-diagonal for the whole batch);
     other ranks flatten leading dims onto the df32 matmul directly.
-    ``shard_axis`` k-shards the contraction over the registered shard
-    mesh (``parallel.ozaki_shard``) — a no-op when no mesh is active.
-    ``target_error`` (> 0) / ``fast_mode`` opt into accuracy-adaptive
-    planning (``core.accuracy``): the driver resolves them into a
-    reduced split count / truncated pair schedule per GEMM shape at
-    trace time (shape-only, so the jitted step stays trace-stable).
+    ``policy.shard_axis`` k-shards the contraction over the registered
+    shard mesh (``parallel.ozaki_shard``) — a no-op when no mesh is
+    active. ``policy.target_error`` / ``policy.fast_mode`` opt into
+    accuracy-adaptive planning (``core.accuracy``): the driver resolves
+    them into a reduced split count / truncated pair schedule per GEMM
+    shape at trace time (shape-only, so the jitted step stays
+    trace-stable).
 
     Sharding hints are applied ONLY to plain 2-D matmul calls, the path
     verified bitwise-safe under the constraints. Projections inside the
@@ -153,54 +151,43 @@ def _matmul_ozaki(x, w, num_splits: int, backend: str = "xla",
     through ``parallel.ozaki_shard.ozaki_matmul_kshard_auto``, which
     owns its jit and is bitwise-verified on the mesh.
     """
-    from repro.core.ozaki import (OzakiConfig, ozaki_matmul_batched,
-                                  ozaki_matmul_dw)
+    from repro.core.ozaki import ozaki_matmul_batched, ozaki_matmul_dw
     from repro.core.xmath import DW, dw_to_single
-    from repro.kernels.ops import INTERPRET
 
-    # INTERPRET follows the backend: interpret-mode on CPU validation
-    # hosts, real Mosaic lowering on TPU deployments.
-    cfg = OzakiConfig(num_splits=num_splits, accum="df32", backend=backend,
-                      fuse_epilogue=fuse_epilogue,
-                      shard_axis=shard_axis or None,
-                      target_error=target_error or None,
-                      fast_mode=fast_mode,
-                      fuse_diagonals=True, interpret=INTERPRET)
     x = x.astype(jnp.float32)
     w = w.astype(jnp.float32)
-    cfg = _apply_cached_plan(cfg, x, w, backend)
+    # INTERPRET follows the backend (policy.ozaki_config default):
+    # interpret-mode on CPU validation hosts, Mosaic lowering on TPU.
+    cfg = policy.ozaki_config(x.shape[-1], accum="df32")
+    cfg = _apply_cached_plan(cfg, x, w)
     if x.ndim == 3:
         return ozaki_matmul_batched(x, w, cfg)
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
-    if shard_axis and x.ndim == 2:             # plain 2-D matmuls only
+    if policy.shard_axis and x.ndim == 2:      # plain 2-D matmuls only
         from repro.parallel.ozaki_shard import constrain_batched_kshard
-        x2, w = constrain_batched_kshard(x2, w, shard_axis)
+        x2, w = constrain_batched_kshard(x2, w, policy.shard_axis)
     out = ozaki_matmul_dw(DW(x2, jnp.zeros_like(x2)),
                           DW(w.T, jnp.zeros_like(w.T)), cfg)
     return dw_to_single(out).reshape(*lead, w.shape[1])
 
 
 def policy_matmul(cfg, x: jax.Array, w: jax.Array) -> jax.Array:
-    """cfg is an ArchConfig (or anything with the two precision fields)."""
-    p = cfg.matmul_precision
-    if p == "bf16":
-        return _matmul_bf16(x, w, jnp.dtype(cfg.compute_dtype),
+    """cfg is an ArchConfig (or anything resolvable to a MatmulPolicy:
+    a ``matmul_policy`` spec, or the legacy precision fields)."""
+    from repro.api import policy_of
+
+    pol = policy_of(cfg)
+    if pol.scheme == "bf16":
+        return _matmul_bf16(x, w, jnp.dtype(getattr(cfg, "compute_dtype",
+                                                    "bfloat16")),
                             jnp.dtype(getattr(cfg, "accum_dtype",
                                               "float32")))
-    if p == "int8_quant":
+    if pol.scheme == "int8_quant":
         return _matmul_int8_quant(x.astype(jnp.float32),
                                   w.astype(jnp.float32))
-    if p == "ozaki_fp64":
-        return _matmul_ozaki(x.astype(jnp.float32), w.astype(jnp.float32),
-                             cfg.ozaki_splits,
-                             getattr(cfg, "ozaki_backend", "xla"),
-                             getattr(cfg, "ozaki_fuse_epilogue", False),
-                             getattr(cfg, "ozaki_shard_axis", ""),
-                             getattr(cfg, "ozaki_target_error", 0.0),
-                             getattr(cfg, "ozaki_fast_mode", False))
-    raise ValueError(f"unknown matmul_precision {p!r}")
+    return _matmul_ozaki(x, w, pol)
 
 
 # ----------------------------------------------------------------------------

@@ -9,10 +9,13 @@ jitted step (idle slots compute masked garbage — the static-shape tax).
 Finished rows free their slot immediately, so new requests join mid-
 flight without draining the batch.
 
-Matmul precision: the engine can override the model config's
-``matmul_precision`` / ``ozaki_backend`` / ``ozaki_fuse_epilogue`` /
-``ozaki_shard_axis`` per deployment (e.g. serve an FP64-accurate variant
-of a checkpoint without a new config). With
+Matmul precision: the engine takes ONE ``policy`` per deployment — a
+``repro.api.MatmulPolicy`` (or spec string like
+``"ozaki-fp64@1e-25:fast/pallas_fused+epilogue"``) that overrides the
+model config's matmul policy wholesale (e.g. serve an FP64-accurate
+variant of a checkpoint without a new config). The pre-PR-5 per-knob
+kwargs (``matmul_precision`` / ``ozaki_backend`` / ... ) still work for
+legacy callers but cannot be mixed with ``policy``. With
 ``matmul_precision="ozaki_fp64"`` every dense projection in the batched
 decode step is a ``(num_slots, 1, k) @ (k, n)`` matmul against shared
 weights — exactly ``ozaki_matmul_batched``'s broadcast-weights case, so
@@ -112,6 +115,7 @@ class ServingEngine:
     def __init__(self, cfg, params, *, num_slots: int = 4,
                  max_len: int = 256, cache_dtype=jnp.float32,
                  sample_fn: Callable = greedy_sample,
+                 policy=None,
                  matmul_precision: Optional[str] = None,
                  ozaki_backend: Optional[str] = None,
                  ozaki_fuse_epilogue: Optional[bool] = None,
@@ -120,6 +124,11 @@ class ServingEngine:
                  ozaki_fast_mode: Optional[bool] = None,
                  mesh=None, plan_cache=None,
                  autotune_plans: Optional[bool] = None):
+        # ONE policy object/spec replaces the six per-knob overrides: it
+        # becomes the config's matmul_policy (authoritative — ArchConfig
+        # back-fills matmul_precision and the legacy ozaki_* fields from
+        # it, so every downstream reader agrees). The per-knob kwargs
+        # stay for legacy callers but cannot be mixed with `policy`.
         overrides = {}
         if matmul_precision is not None:
             overrides["matmul_precision"] = matmul_precision
@@ -133,8 +142,23 @@ class ServingEngine:
             overrides["ozaki_target_error"] = ozaki_target_error
         if ozaki_fast_mode is not None:
             overrides["ozaki_fast_mode"] = ozaki_fast_mode
-        if overrides:
-            cfg = dataclasses.replace(cfg, **overrides)
+        if policy is not None:
+            if overrides:
+                raise ValueError(
+                    "pass either policy=... or the legacy ozaki_*/"
+                    f"matmul_precision kwargs, not both: {sorted(overrides)}")
+            from repro.api import MatmulPolicy
+            cfg = dataclasses.replace(
+                cfg, matmul_policy=MatmulPolicy.of(policy).spec())
+        elif overrides:
+            # legacy kwargs merge INTO the config's resolved policy (one
+            # spec stays authoritative), so spec-only knobs the legacy
+            # fields can't express — pair_policy, auto split count — are
+            # not silently discarded by a per-knob override.
+            from repro.api import merge_legacy_overrides
+            cfg = dataclasses.replace(
+                cfg,
+                matmul_policy=merge_legacy_overrides(cfg, overrides).spec())
         self.mesh = mesh
         self.cfg = cfg
         # plan cache: a PlanCache, a path, or the config's path; pre-warm
@@ -236,26 +260,24 @@ class ServingEngine:
         projection is a cache HIT afterwards, and the cache file (when
         backed by a path) holds the plans for the next process.
         """
+        from repro.api import policy_of
         from repro.core.autotune import plan_cache_key
         from repro.core.tuning import select_pipeline_plan
         from repro.kernels.ops import INTERPRET
         cfg = self.cfg
-        backend = getattr(cfg, "ozaki_backend", "xla")
-        fuse_epilogue = getattr(cfg, "ozaki_fuse_epilogue", False)
-        num_splits = getattr(cfg, "ozaki_splits", None)
-        target_error = getattr(cfg, "ozaki_target_error", 0.0) or None
-        fast_mode = getattr(cfg, "ozaki_fast_mode", False)
+        pol = policy_of(cfg)             # one object carries every knob
         for k, n in ozaki_projection_shapes(cfg):
             key = plan_cache_key(1, n, k, batch=self.num_slots,
-                                 dtype="float32", backend=backend)
+                                 dtype="float32", backend=pol.backend)
             if key in self.plan_cache:
                 self.plan_cache.get(key)         # count the hit
                 continue
             plan = select_pipeline_plan(
                 1, n, k, batch=self.num_slots, broadcast_weights=True,
-                backend=backend, accum="df32", num_splits=num_splits,
-                fuse_epilogue=fuse_epilogue, interpret=INTERPRET,
-                target_error=target_error, fast_mode=fast_mode,
+                backend=pol.backend, accum="df32",
+                num_splits=pol.num_splits,
+                fuse_epilogue=pol.fuse_epilogue, interpret=INTERPRET,
+                target_error=pol.target_error, fast_mode=pol.fast_mode,
                 dtype="float32", cache=self.plan_cache,
                 autotune=self.autotune_plans)
             if key not in self.plan_cache:       # analytic miss: store it

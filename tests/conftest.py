@@ -19,11 +19,13 @@ def rng():
 
 
 @pytest.fixture(autouse=True)
-def _fresh_downgrade_warn_latch():
-    """Per-test fresh-process semantics for the fuse_epilogue downgrade
-    warn-once latch: without the reset, the first test that trips the
-    warning latches module state and every later test sees silence."""
-    from repro.core.tuning import reset_downgrade_warnings
-    reset_downgrade_warnings()
+def _fresh_warn_once_latches():
+    """Per-test fresh-process semantics for EVERY warn-once latch (the
+    fuse_epilogue downgrade warning, the ArchConfig ozaki_* deprecation
+    warning, and any future ``core.warn_once`` consumer): without the
+    reset, the first test that trips a warning latches module state and
+    every later test sees silence."""
+    from repro.core.warn_once import reset_all_warn_latches
+    reset_all_warn_latches()
     yield
-    reset_downgrade_warnings()
+    reset_all_warn_latches()

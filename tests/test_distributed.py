@@ -110,6 +110,7 @@ def test_layers_shard_axis_wiring():
     projections must pass through untouched (see ``_matmul_ozaki``)."""
     out = run_multidevice("""
 import jax, numpy as np, jax.numpy as jnp
+from repro.api import MatmulPolicy
 from repro.launch.mesh import make_mesh_compat
 from repro.models.layers import _matmul_ozaki
 from repro.parallel.ozaki_shard import use_shard_mesh
@@ -118,21 +119,28 @@ x = jnp.asarray(rng.standard_normal((4, 1, 64)), jnp.float32)
 w = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
 x2 = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)    # plain 2-D
 mesh = make_mesh_compat((1, 8), ('data', 'model'))
-ref = np.asarray(_matmul_ozaki(x, w, 9, 'pallas_fused', True))
-ref2 = np.asarray(_matmul_ozaki(x2, w, 9, 'pallas_fused', True))
+pol = MatmulPolicy.parse('ozaki-fp64x9/pallas_fused+epilogue')
+shp = MatmulPolicy.parse('ozaki-fp64x9/pallas_fused+epilogue|shard=model')
+ref = np.asarray(_matmul_ozaki(x, w, pol))
+ref2 = np.asarray(_matmul_ozaki(x2, w, pol))
 with use_shard_mesh(mesh):
     # 2-D: constraints applied (eager + jit), bitwise identical
-    f2 = jax.jit(lambda x, w: _matmul_ozaki(x, w, 9, 'pallas_fused', True,
-                                            'model'))
+    f2 = jax.jit(lambda x, w: _matmul_ozaki(x, w, shp))
     assert np.array_equal(np.asarray(f2(x2, w)), ref2)
-    assert np.array_equal(np.asarray(_matmul_ozaki(
-        x2, w, 9, 'pallas_fused', True, 'model')), ref2)
+    assert np.array_equal(np.asarray(_matmul_ozaki(x2, w, shp)), ref2)
     # 3-D model projections: shard_axis is a structural no-op
-    assert np.array_equal(np.asarray(_matmul_ozaki(
-        x, w, 9, 'pallas_fused', True, 'model')), ref)
+    assert np.array_equal(np.asarray(_matmul_ozaki(x, w, shp)), ref)
 # absent mesh: silent no-op
-assert np.array_equal(np.asarray(_matmul_ozaki(
-    x2, w, 9, 'pallas_fused', True, 'model')), ref2)
+assert np.array_equal(np.asarray(_matmul_ozaki(x2, w, shp)), ref2)
+# the public facade applies the same 2-D constraints under the mesh
+import repro
+fa = jnp.asarray(np.float64(np.asarray(x2)))
+fw = jnp.asarray(np.float64(np.asarray(w)))
+fref = np.asarray(repro.matmul(fa, fw, precision='ozaki-fp64x9'))
+with use_shard_mesh(mesh):
+    fsh = np.asarray(repro.matmul(fa, fw,
+                                  precision='ozaki-fp64x9|shard=model'))
+assert np.array_equal(fsh, fref)
 print('OK')
 """)
     assert "OK" in out

@@ -1,0 +1,492 @@
+"""The public API façade: ``MatmulPolicy`` spec round-trips, legacy
+ArchConfig field conversion, and the ``repro.matmul`` parity matrix.
+
+Acceptance contract (ISSUE 5): ``repro.matmul(a, b, precision=spec)`` is
+bitwise-identical to the corresponding legacy entry point for every row
+of the backend-parity matrix (xla/pallas/fused/epilogue/batch-grid,
+batched and fast-mode included), and legacy ``ozaki_*`` ArchConfig
+fields still work, emitting exactly one DeprecationWarning.
+"""
+import dataclasses
+import itertools
+import json
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.api import (MatmulPolicy, default_policy, policy_from_legacy_fields,
+                       policy_of)
+from repro.configs.base import ArchConfig
+from repro.core.ozaki import (OzakiConfig, ozaki_matmul,
+                              ozaki_matmul_batched, ozaki_matmul_complex,
+                              ozaki_matmul_dw)
+from repro.core.xmath import DW, df32_from_f64, df32_to_f64
+
+
+def _phi_matrix(rng, m, k, phi=1.0):
+    return jnp.asarray(rng.uniform(-0.5, 0.5, (m, k))
+                       * np.exp(phi * rng.standard_normal((m, k))))
+
+
+def _dense_cfg(**kw):
+    return ArchConfig(name="t", family="dense", num_layers=1, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      **kw)
+
+
+# ----------------------------------------------------------------------------
+# Spec parse / format / JSON round-trips
+# ----------------------------------------------------------------------------
+
+ROUND_TRIP_SPECS = [
+    "bf16",
+    "int8-quant",
+    "ozaki-fp64",
+    "ozaki-fp64x9",
+    "ozaki-fp64@1e-25:fast/pallas_fused+epilogue",
+    "ozaki-fp64x7:budget:12/pallas|shard=data|cache=plans.json|autotune",
+    "ozaki-fp64:diagonal",
+    "ozaki-fp64x5@2.5e-09:fast,budget:7/pallas_fused",
+]
+
+
+@pytest.mark.parametrize("spec", ROUND_TRIP_SPECS)
+def test_spec_round_trip(spec):
+    pol = MatmulPolicy.parse(spec)
+    assert MatmulPolicy.parse(pol.spec()) == pol
+    assert str(pol) == pol.spec()
+    # JSON round-trip through plain dicts
+    via_json = MatmulPolicy.from_dict(json.loads(json.dumps(pol.to_dict())))
+    assert via_json == pol
+    assert via_json.spec() == pol.spec()
+
+
+def test_spec_canonicalizes_aliases():
+    """Underscore spellings and the legacy matmul_precision vocabulary
+    parse to the same policy as the canonical dashed spec."""
+    assert MatmulPolicy.parse("ozaki_fp64") == MatmulPolicy.parse(
+        "ozaki-fp64")
+    assert MatmulPolicy.parse("int8_quant") == MatmulPolicy.parse(
+        "int8-quant")
+    assert (MatmulPolicy.parse("ozaki-fp64/pallas-fused").backend
+            == "pallas_fused")
+    # parse is cached — identical spec strings share one frozen instance
+    assert MatmulPolicy.parse("ozaki-fp64x9") is MatmulPolicy.parse(
+        "ozaki-fp64x9")
+
+
+def test_spec_field_mapping():
+    pol = MatmulPolicy.parse(
+        "ozaki-fp64x7@1e-25:fast,budget:12/pallas_fused+epilogue"
+        "|shard=data|cache=/tmp/p.json|autotune")
+    assert pol.scheme == "ozaki_fp64"
+    assert pol.num_splits == 7
+    assert pol.target_error == 1e-25
+    assert pol.fast_mode and pol.pair_policy == "budget:12"
+    assert pol.backend == "pallas_fused" and pol.fuse_epilogue
+    assert pol.shard_axis == "data"
+    assert pol.plan_cache == "/tmp/p.json"
+    assert pol.autotune
+
+
+@pytest.mark.parametrize("bad", [
+    "",                              # empty
+    "nope",                          # unknown scheme
+    "bf16x9",                        # splits on a non-ozaki scheme
+    "bf16@1e-10",                    # target on a non-ozaki scheme
+    "bf16/pallas_fused",             # backend on a non-ozaki scheme
+    "ozaki-fp64x0",                  # num_splits < 1
+    "ozaki-fp64@abc",                # malformed target
+    "ozaki-fp64@-1e-3",              # non-positive target
+    "ozaki-fp64:warp",               # unknown mode
+    "ozaki-fp64:budget:0",           # non-positive pair budget
+    "ozaki-fp64:budget:x",           # malformed pair budget
+    "ozaki-fp64:diagonal,budget:3",  # conflicting pair policies
+    "ozaki-fp64:full,budget:3",      # conflicting, order-independent
+    "ozaki-fp64:budget:3,full",      # conflicting, order-independent
+    "ozaki-fp64/cuda",               # unknown backend
+    "ozaki-fp64|wat=1",              # unknown option
+])
+def test_malformed_specs_rejected(bad):
+    with pytest.raises(ValueError):
+        MatmulPolicy.parse(bad)
+
+
+def test_policy_object_validation_matches_spec_validation():
+    """The validation that used to live in OzakiConfig/ArchConfig/serve
+    flag handling is centralized on the policy object itself."""
+    with pytest.raises(ValueError, match="unknown backend"):
+        MatmulPolicy(backend="cuda")
+    with pytest.raises(ValueError, match="unknown scheme"):
+        MatmulPolicy(scheme="fp8")
+    with pytest.raises(ValueError, match="target_error"):
+        MatmulPolicy(target_error=0.0)
+    with pytest.raises(ValueError, match="pair"):
+        MatmulPolicy(pair_policy="budget:-3")
+    with pytest.raises(ValueError, match="only applies"):
+        MatmulPolicy(scheme="bf16", fuse_epilogue=True)
+
+
+def test_policy_of_coercion():
+    pol = MatmulPolicy.parse("ozaki-fp64x9")
+    assert MatmulPolicy.of(pol) is pol
+    assert MatmulPolicy.of("ozaki-fp64x9") == pol
+    assert MatmulPolicy.of(None) == default_policy()
+    with pytest.raises(TypeError):
+        MatmulPolicy.of(9)
+
+
+# ----------------------------------------------------------------------------
+# Ambient default (context manager) + plan-cache scoping
+# ----------------------------------------------------------------------------
+
+def test_default_matmul_precision_scopes_policy():
+    base = default_policy()
+    with repro.default_matmul_precision("ozaki-fp64x5") as pol:
+        assert default_policy() == pol
+        assert pol.num_splits == 5
+        with repro.default_matmul_precision("bf16"):
+            assert default_policy().scheme == "bf16"
+        assert default_policy() == pol           # inner scope restored
+    assert default_policy() == base
+
+
+def test_default_matmul_precision_scopes_plan_cache(tmp_path):
+    """A policy naming a cache path subsumes use_plan_cache: the ambient
+    core.autotune registry holds the loaded cache for the scope."""
+    from repro.core.autotune import active_plan_cache
+    path = tmp_path / "plans.json"
+    assert active_plan_cache() is None
+    with repro.default_matmul_precision(f"ozaki-fp64|cache={path}"):
+        cache = active_plan_cache()
+        assert cache is not None and cache.path == str(path)
+    assert active_plan_cache() is None
+
+
+# ----------------------------------------------------------------------------
+# Legacy ArchConfig field conversion
+# ----------------------------------------------------------------------------
+
+def test_legacy_fields_convert_and_warn_exactly_once():
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        cfg = _dense_cfg(matmul_precision="ozaki_fp64",
+                         ozaki_backend="pallas_fused",
+                         ozaki_fuse_epilogue=True, ozaki_splits=7,
+                         ozaki_target_error=1e-8, ozaki_fast_mode=True,
+                         ozaki_shard_axis="model")
+        # a second legacy config: the one-shot latch keeps it silent
+        _dense_cfg(matmul_precision="ozaki_fp64", ozaki_splits=5)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "matmul_policy=" in str(dep[0].message)
+    pol = cfg.policy()
+    assert pol == MatmulPolicy.parse(
+        "ozaki-fp64x7@1e-08:fast/pallas_fused+epilogue|shard=model")
+    # the derivation round-trips through the spec the warning suggested
+    assert policy_of(dataclasses.replace(cfg, matmul_policy=pol.spec(),
+                                         )) == pol
+
+
+def test_default_legacy_fields_do_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg = _dense_cfg()                       # all-default: no warning
+        cfg.reduced()                            # asdict round-trip too
+    assert cfg.policy().scheme == "bf16"
+
+
+def test_matmul_policy_field_is_authoritative():
+    """matmul_policy back-fills matmul_precision + every legacy ozaki_*
+    field, so pre-PR-5 readers see a consistent config — silently."""
+    spec = "ozaki-fp64x7@1e-08:fast/pallas_fused+epilogue|shard=model"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg = _dense_cfg(matmul_policy=spec)
+    assert cfg.matmul_precision == "ozaki_fp64"
+    assert cfg.ozaki_backend == "pallas_fused"
+    assert cfg.ozaki_splits == 7
+    assert cfg.ozaki_fuse_epilogue
+    assert cfg.ozaki_target_error == 1e-8
+    assert cfg.ozaki_fast_mode
+    assert cfg.ozaki_shard_axis == "model"
+    assert cfg.policy() == MatmulPolicy.parse(spec)
+    # asdict/replace round-trips (reduced()) keep the spec authoritative
+    red = cfg.reduced()
+    assert red.policy() == MatmulPolicy.parse(spec)
+
+
+def test_policy_from_legacy_fields_drops_ozaki_knobs_for_bf16():
+    cfg = _dense_cfg(matmul_precision="bf16", ozaki_splits=5)
+    assert policy_from_legacy_fields(cfg) == MatmulPolicy(scheme="bf16")
+
+
+# ----------------------------------------------------------------------------
+# Parity matrix: repro.matmul == the legacy entry points, bitwise
+# ----------------------------------------------------------------------------
+
+BACKEND_SPECS = {
+    "xla": dict(backend="xla"),
+    "pallas": dict(backend="pallas"),
+    "pallas_fused": dict(backend="pallas_fused"),
+    "pallas_fused+epilogue": dict(backend="pallas_fused",
+                                  fuse_epilogue=True),
+}
+
+
+def _spec_for(backend_key: str, prefix: str) -> str:
+    return (prefix + "/" + backend_key) if backend_key != "xla" else prefix
+
+
+@pytest.mark.parametrize("backend", sorted(BACKEND_SPECS))
+def test_matmul_parity_unbatched_f64(rng, backend):
+    a = _phi_matrix(rng, 24, 96)
+    b = _phi_matrix(rng, 96, 16)
+    got = repro.matmul(a, b, precision=_spec_for(backend, "ozaki-fp64x9"))
+    legacy = ozaki_matmul(a, b, OzakiConfig(num_splits=9,
+                                            **BACKEND_SPECS[backend]))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(legacy))
+
+
+@pytest.mark.parametrize("backend", sorted(BACKEND_SPECS))
+def test_matmul_parity_unbatched_f32(rng, backend):
+    """2-D f32 dispatch: the TPU-native df32 pipeline, f32 out."""
+    a = _phi_matrix(rng, 16, 64, 0.5).astype(jnp.float32)
+    b = _phi_matrix(rng, 64, 8, 0.5).astype(jnp.float32)
+    got = repro.matmul(a, b, precision=_spec_for(backend, "ozaki-fp64x7"))
+    assert got.dtype == jnp.float32
+    cfg = OzakiConfig(num_splits=7, accum="df32", **BACKEND_SPECS[backend])
+    from repro.core.xmath import dw_to_single
+    legacy = dw_to_single(ozaki_matmul_dw(
+        DW(a, jnp.zeros_like(a)), DW(b.T, jnp.zeros_like(b.T)), cfg))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(legacy))
+
+
+@pytest.mark.parametrize("backend,stacked", list(itertools.product(
+    sorted(BACKEND_SPECS), [True, False])))
+def test_matmul_parity_batched(rng, backend, stacked):
+    """3-D dispatch: stacked weights (batch-grid kernels) and broadcast
+    weights (rows fold) both route through ozaki_matmul_batched."""
+    a = jnp.stack([_phi_matrix(rng, 9, 33) for _ in range(3)])
+    b = (jnp.stack([_phi_matrix(rng, 33, 11) for _ in range(3)])
+         if stacked else _phi_matrix(rng, 33, 11))
+    got = repro.matmul(a, b, precision=_spec_for(backend, "ozaki-fp64x7"))
+    legacy = ozaki_matmul_batched(
+        a, b, OzakiConfig(num_splits=7, **BACKEND_SPECS[backend]))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(legacy))
+
+
+@pytest.mark.parametrize("backend", sorted(BACKEND_SPECS))
+@pytest.mark.parametrize("mode", ["fast", "diagonal", "budget:7"])
+def test_matmul_parity_fast_mode(rng, backend, mode):
+    """Fast-mode rows of the acceptance matrix: truncated schedules stay
+    bitwise-identical between the façade and the legacy driver."""
+    a = _phi_matrix(rng, 24, 96)
+    b = _phi_matrix(rng, 96, 16)
+    spec = _spec_for(backend, f"ozaki-fp64x9@1e-06:{mode}")
+    if mode == "fast":
+        cfg = OzakiConfig(num_splits=9, target_error=1e-6, fast_mode=True,
+                          **BACKEND_SPECS[backend])
+    else:
+        cfg = OzakiConfig(num_splits=9, target_error=1e-6,
+                          pair_policy=mode, **BACKEND_SPECS[backend])
+    got = repro.matmul(a, b, precision=spec)
+    legacy = ozaki_matmul(a, b, cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(legacy))
+
+
+def test_matmul_parity_fast_mode_batch_grid(rng):
+    """Fast mode on the batch-grid epilogue kernel through the façade."""
+    a = jnp.stack([_phi_matrix(rng, 9, 33) for _ in range(3)])
+    b = jnp.stack([_phi_matrix(rng, 33, 11) for _ in range(3)])
+    got = repro.matmul(
+        a, b,
+        precision="ozaki-fp64x7:diagonal/pallas_fused+epilogue")
+    legacy = ozaki_matmul_batched(
+        a, b, OzakiConfig(num_splits=7, pair_policy="diagonal",
+                          backend="pallas_fused", fuse_epilogue=True))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(legacy))
+
+
+def test_matmul_parity_dw(rng):
+    """DW-ness dispatch: natural-orientation operands reach the legacy
+    transposed-B entry bitwise (transposition is a permutation)."""
+    a = df32_from_f64(_phi_matrix(rng, 16, 64, 0.5))
+    b_t = df32_from_f64(_phi_matrix(rng, 8, 64, 0.5))          # (n, k)
+    b = DW(b_t.hi.T, b_t.lo.T)                                 # (k, n)
+    got = repro.matmul(a, b, precision="ozaki-fp64x9/pallas_fused")
+    legacy = ozaki_matmul_dw(a, b_t, OzakiConfig(num_splits=9,
+                                                 accum="df32",
+                                                 backend="pallas_fused"))
+    np.testing.assert_array_equal(np.asarray(df32_to_f64(got)),
+                                  np.asarray(df32_to_f64(legacy)))
+
+
+def test_matmul_parity_complex(rng):
+    a = (_phi_matrix(rng, 12, 48) + 1j * _phi_matrix(rng, 12, 48))
+    b = (_phi_matrix(rng, 48, 10) + 1j * _phi_matrix(rng, 48, 10))
+    got = repro.matmul(a, b, precision="ozaki-fp64x9")
+    legacy = ozaki_matmul_complex(a, b, OzakiConfig(num_splits=9))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(legacy))
+
+
+def test_matmul_bf16_and_int8_schemes(rng):
+    a = _phi_matrix(rng, 8, 32).astype(jnp.float32)
+    b = _phi_matrix(rng, 32, 8).astype(jnp.float32)
+    got = repro.matmul(a, b, precision="bf16")
+    ref = jnp.matmul(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    from repro.models.layers import _matmul_int8_quant
+    got8 = repro.matmul(a, b, precision="int8-quant")
+    np.testing.assert_array_equal(np.asarray(got8),
+                                  np.asarray(_matmul_int8_quant(a, b)))
+
+
+def test_matmul_rejects_mixed_and_integer_dtypes(rng):
+    """The front door validates operands instead of silently degrading
+    an f64 @ f32 call to f32-grade accuracy."""
+    a64 = _phi_matrix(rng, 8, 32)
+    b32 = _phi_matrix(rng, 32, 8).astype(jnp.float32)
+    with pytest.raises(TypeError, match="dtype mismatch"):
+        repro.matmul(a64, b32, precision="ozaki-fp64x5")
+    with pytest.raises(TypeError, match="float32/float64"):
+        repro.matmul(jnp.ones((4, 4), jnp.int32),
+                     jnp.ones((4, 4), jnp.int32), precision="ozaki-fp64")
+
+
+def test_archconfig_pinned_splits_with_auto_spec_warns():
+    """ozaki_splits alongside an auto-split spec cannot be back-filled:
+    the config must say so instead of silently running a different
+    split count than the legacy field reads."""
+    with pytest.warns(UserWarning, match="ozaki_splits=13 is ignored"):
+        cfg = _dense_cfg(matmul_policy="ozaki-fp64@1e-25",
+                         ozaki_splits=13)
+    assert cfg.policy().num_splits is None       # the spec wins
+
+
+def test_matmul_rejects_3d_complex(rng):
+    """Batched complex has no pipeline: reject clearly at the front
+    door instead of crashing inside the splitting stage."""
+    a = jnp.stack([_phi_matrix(rng, 4, 16) + 1j * _phi_matrix(rng, 4, 16)
+                   for _ in range(2)])
+    b = _phi_matrix(rng, 16, 4) + 1j * _phi_matrix(rng, 16, 4)
+    with pytest.raises(ValueError, match="complex operands must be 2-D"):
+        repro.matmul(a, b, precision="ozaki-fp64x5")
+
+
+def test_matmul_shard_axis_no_mesh_is_bitwise_noop(rng):
+    """|shard=AXIS| without a registered mesh: constraints are skipped,
+    results identical to the unsharded spec (the mesh-active case is
+    covered by tests/test_distributed.py)."""
+    a = _phi_matrix(rng, 8, 64)
+    b = _phi_matrix(rng, 64, 8)
+    got = repro.matmul(a, b, precision="ozaki-fp64x7|shard=model")
+    base = repro.matmul(a, b, precision="ozaki-fp64x7")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_matmul_rejects_bad_ranks(rng):
+    a = _phi_matrix(rng, 8, 32)
+    with pytest.raises(ValueError, match="2-D or 3-D"):
+        repro.matmul(a.reshape(8, 32, 1, 1)[..., 0, 0].reshape(2, 2, 8, 8),
+                     a, precision="ozaki-fp64")
+    with pytest.raises(TypeError, match="DW"):
+        repro.matmul(DW(a.astype(jnp.float32),
+                        jnp.zeros((8, 32), jnp.float32)), a,
+                     precision="ozaki-fp64")
+
+
+# ----------------------------------------------------------------------------
+# policy_matmul / engine integration through the one policy object
+# ----------------------------------------------------------------------------
+
+def test_policy_matmul_spec_config_matches_legacy_config(rng):
+    """A policy-spec ArchConfig and its legacy-field equivalent drive
+    policy_matmul to bitwise-identical results."""
+    from repro.models.layers import policy_matmul
+    x = _phi_matrix(rng, 6, 64, 0.5).astype(jnp.float32)
+    w = _phi_matrix(rng, 64, 16, 0.5).astype(jnp.float32)
+    new = _dense_cfg(matmul_policy="ozaki-fp64x7/pallas_fused+epilogue")
+    old = _dense_cfg(matmul_precision="ozaki_fp64", ozaki_splits=7,
+                     ozaki_backend="pallas_fused",
+                     ozaki_fuse_epilogue=True)
+    np.testing.assert_array_equal(np.asarray(policy_matmul(new, x, w)),
+                                  np.asarray(policy_matmul(old, x, w)))
+
+
+def test_engine_policy_kwarg_equals_legacy_kwargs():
+    cfg = _dense_cfg().reduced()
+    from repro.serving.engine import ServingEngine
+    from repro.models import init_model
+    import jax
+    params, _ = init_model(cfg, jax.random.key(0))
+    e_new = ServingEngine(cfg, params, num_slots=2, max_len=32,
+                          policy="ozaki-fp64x5/pallas_fused")
+    e_old = ServingEngine(cfg, params, num_slots=2, max_len=32,
+                          matmul_precision="ozaki_fp64",
+                          ozaki_backend="pallas_fused")
+    e_old.cfg = dataclasses.replace(e_old.cfg, ozaki_splits=5)
+    assert e_new.cfg.matmul_precision == "ozaki_fp64"
+    assert e_new.cfg.ozaki_backend == "pallas_fused"
+    assert e_new.cfg.ozaki_splits == 5
+    assert e_new.cfg.policy().num_splits == 5
+    with pytest.raises(ValueError, match="not both"):
+        ServingEngine(cfg, params, num_slots=2, max_len=32,
+                      policy="bf16", matmul_precision="bf16")
+
+
+def test_engine_legacy_kwarg_preserves_spec_only_knobs():
+    """A per-knob legacy override on a policy-configured config merges
+    into the spec: pair_policy and the auto split count survive."""
+    cfg = dataclasses.replace(
+        _dense_cfg(matmul_policy="ozaki-fp64@1e-25:budget:12").reduced())
+    from repro.serving.engine import ServingEngine
+    from repro.models import init_model
+    import jax
+    params, _ = init_model(cfg, jax.random.key(0))
+    eng = ServingEngine(cfg, params, num_slots=2, max_len=32,
+                        ozaki_fast_mode=True)
+    pol = eng.cfg.policy()
+    assert pol.fast_mode                         # the override applied
+    assert pol.pair_policy == "budget:12"        # spec-only knob kept
+    assert pol.num_splits is None                # auto count kept
+    assert pol.target_error == 1e-25
+
+
+def test_plan_cache_memo_reloads_on_file_change(tmp_path):
+    """The per-path cache memo must follow the file: plans persisted
+    mid-process (engine pre-warm, --autotune) reach later loads."""
+    from repro.api import _load_plan_cache
+    from repro.core.autotune import PlanCache, plan_cache_key
+    from repro.core.tuning import PipelinePlan
+    path = str(tmp_path / "plans.json")
+    first = _load_plan_cache(path)               # missing file: empty
+    assert len(first) == 0
+    writer = PlanCache(path)
+    writer.put(plan_cache_key(8, 8, 64, dtype="float32", backend="xla"),
+               PipelinePlan(backend="xla"))
+    writer.save()
+    second = _load_plan_cache(path)
+    assert second is not first and len(second) == 1
+    assert _load_plan_cache(path) is second      # unchanged file: memo hit
+
+
+# ----------------------------------------------------------------------------
+# Shared warn-once helper
+# ----------------------------------------------------------------------------
+
+def test_warn_once_latch_is_resettable():
+    from repro.core.warn_once import WarnOnceLatch, reset_all_warn_latches
+    latch = WarnOnceLatch("test_latch")
+    with pytest.warns(UserWarning, match="hello"):
+        assert latch.warn("k", "hello")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert not latch.warn("k", "hello")      # latched: silent
+    reset_all_warn_latches()
+    with pytest.warns(UserWarning, match="hello"):
+        assert latch.warn("k", "hello")          # fresh state: refires

@@ -1,5 +1,6 @@
-"""Fused-pipeline benchmark: pallas_fused (stage- and epilogue-fused) vs
-xla Ozaki, modeled HBM passes, and the measured autotuner.
+"""Fused-pipeline benchmark: pallas_fused (stage-, epilogue-, and
+streaming-fused) vs xla Ozaki, modeled HBM passes, and the measured
+autotuner.
 
 The paper's Fig. 9 shows the split and accumulation stages — not the int8
 GEMMs — dominating the memory-bound cost of the scheme. The fused
@@ -16,7 +17,10 @@ This benchmark reports
   * the modeled HBM round-trips per stage (``core.tuning.hbm_pass_model``)
     — the deployable claim: the epilogue mode drops each accumulation
     group from 3 passes (read P + read/write C) to 2 (read/write C only),
-    on top of the fused path's s-pass -> 1-pass split,
+    on top of the fused path's s-pass -> 1-pass split; the streaming mode
+    then zeroes the ``slices`` line item entirely (slice extraction runs
+    inside the GEMM grid, int8 slices never touch HBM) — the measured
+    mode comparison is persisted as versioned ``BENCH_streaming.json``,
   * the batched broadcast-weights case through ``ozaki_matmul_batched``
     AND the stacked-weights batch on the batch-grid epilogue kernel
     (which keeps ``fuse_epilogue=True`` — the lifted PR 2 limitation),
@@ -40,7 +44,8 @@ from repro.core.ozaki import OzakiConfig, ozaki_matmul, ozaki_matmul_batched
 from repro.core.tuning import (apply_pipeline_plan, hbm_pass_model,
                                select_plan)
 
-from .common import CONTEXT, emit, phi_matrix, plan_gemm, time_fn
+from .common import (CONTEXT, emit, phi_matrix, plan_gemm, time_fn,
+                     write_bench_json)
 
 
 def run(n: int = 128, num_splits: int | None = None, quick: bool = False):
@@ -60,8 +65,12 @@ def run(n: int = 128, num_splits: int | None = None, quick: bool = False):
         "pallas_fused_epilogue": OzakiConfig(num_splits=num_splits,
                                              backend="pallas_fused",
                                              fuse_epilogue=True, tile=tile),
+        "pallas_fused_streaming": OzakiConfig(num_splits=num_splits,
+                                              backend="pallas_fused",
+                                              streaming=True, tile=tile),
     }
     outs = {}
+    bench_rows = []
     for name, cfg in cfgs.items():
         if cfg.backend != "xla" and (CONTEXT.plan_cache is not None or
                                      CONTEXT.autotune):
@@ -69,32 +78,50 @@ def run(n: int = 128, num_splits: int | None = None, quick: bool = False):
             # but PIN this row's fusion mode afterwards: the cache key is
             # fusion-agnostic (fusion is result-invariant and part of the
             # search space), and these rows exist to compare the modes
-            want_epilogue = cfg.fuse_epilogue
+            want_epilogue, want_streaming = cfg.fuse_epilogue, cfg.streaming
             cfg = apply_pipeline_plan(cfg, plan_gemm(
                 n, n, n, backend=cfg.backend, accum="f64",
-                num_splits=num_splits, fuse_epilogue=want_epilogue))
-            cfg = dataclasses.replace(cfg, fuse_epilogue=want_epilogue)
+                num_splits=num_splits, fuse_epilogue=want_epilogue,
+                streaming=want_streaming))
+            cfg = dataclasses.replace(cfg, fuse_epilogue=want_epilogue,
+                                      streaming=want_streaming)
             cfgs[name] = cfg
         us = time_fn(lambda c=cfg: ozaki_matmul(a, b, c))
         outs[name] = np.asarray(ozaki_matmul(a, b, cfgs[name]))
-        passes = hbm_pass_model(num_splits, fused=(cfg.backend ==
-                                                   "pallas_fused"),
-                                fuse_epilogue=cfg.fuse_epilogue)
+        plan = cfg.plan()
+        passes = hbm_pass_model(num_splits, fusion=plan.fusion)
         emit(f"fused_pipeline/{name}/n={n}", us,
              f"hbm_passes_split={passes['split']};"
+             f"hbm_passes_slices={passes['slices']};"
              f"hbm_passes_accum={passes['accum']};"
-             f"hbm_passes_total={passes['total']}", plan=cfg.plan())
+             f"hbm_passes_total={passes['total']}", plan=plan)
+        bench_rows.append({"name": name, "n": n,
+                           "num_splits": num_splits, "us_per_call": us,
+                           "fusion": plan.fusion, "hbm_passes": passes})
     bitwise = all(np.array_equal(outs["xla"], c) for c in outs.values())
     px = hbm_pass_model(num_splits, fused=False)
     pf = hbm_pass_model(num_splits, fused=True)
     pe = hbm_pass_model(num_splits, fused=True, fuse_epilogue=True)
+    pst = hbm_pass_model(num_splits, fusion="streaming")
     # ISSUE 2 acceptance: epilogue fusion models strictly fewer passes
     # than the PR 1 stage-fused pipeline (which beat the XLA path).
-    assert pe["total"] < pf["total"] < px["total"], (pe, pf, px)
+    # ISSUE 6 acceptance: with the slice-stack traffic charged (the
+    # ``slices`` line item the model used to hide), streaming — whose
+    # slices never touch HBM — models strictly fewer again.
+    assert pst["total"] < pe["total"] < pf["total"] < px["total"], \
+        (pst, pe, pf, px)
+    assert pst["slices"] == 0 and pe["slices"] > 0, (pst, pe)
     emit("fused_pipeline/parity", 0.0,
          f"bitwise_equal={bitwise};"
          f"pass_reduction_fused={px['total'] / pf['total']:.2f}x;"
-         f"pass_reduction_epilogue={px['total'] / pe['total']:.2f}x")
+         f"pass_reduction_epilogue={px['total'] / pe['total']:.2f}x;"
+         f"pass_reduction_streaming={px['total'] / pst['total']:.2f}x")
+    # persist the measured mode comparison as a versioned CI artifact
+    from repro.kernels.ops import INTERPRET
+    import jax
+    write_bench_json("BENCH_streaming.json", bench_rows,
+                     device_kind=jax.devices()[0].device_kind,
+                     interpret=INTERPRET, bitwise_equal_xla=bool(bitwise))
 
     # batched serving case (BATCHED_CONFIG shape, CPU-scaled): the
     # (B, m, k) @ (k, n) broadcast-weights route of ozaki_matmul_batched.

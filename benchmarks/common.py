@@ -110,6 +110,7 @@ def plan_gemm(m: int, n: int, k: int, **kwargs):
     if pol is not None and pol.scheme == "ozaki_fp64":
         kwargs.setdefault("backend", pol.backend)
         kwargs.setdefault("fuse_epilogue", pol.fuse_epilogue)
+        kwargs.setdefault("streaming", pol.streaming)
         if pol.num_splits is not None:
             kwargs.setdefault("num_splits", pol.num_splits)
         if pol.target_error is not None:
@@ -140,6 +141,27 @@ def emit(name: str, us_per_call: float, derived: str = "", plan=None):
     ROWS.append((name, us_per_call, derived, pj, spec))
     print(f"{name},{us_per_call:.1f},{derived},{_csv_field(pj)},"
           f"{_csv_field(spec)}", flush=True)
+
+
+# versioned measured-run persistence (the BENCH_*.json CI artifacts):
+# like the plan cache, the wire format carries a version plus the two
+# facts a consumer needs to trust a number — the device it ran on and
+# whether the kernels ran in Pallas interpret mode (CPU emulation
+# timings rank, they don't predict hardware).
+BENCH_JSON_VERSION = 1
+
+
+def write_bench_json(path: str, rows: list, **meta) -> str:
+    """Persist measured benchmark rows as versioned JSON.
+
+    ``rows`` is a list of JSON-ready dicts; ``meta`` keys (e.g.
+    ``device_kind=...``, ``interpret=...``) ride at the top level next
+    to ``version``.
+    """
+    payload = {"version": BENCH_JSON_VERSION, **meta, "rows": rows}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
 
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:

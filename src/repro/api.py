@@ -15,6 +15,7 @@ module collapses all of it into two objects:
       ozaki-fp64                      # the paper, auto split count
       ozaki-fp64x9                    # pinned INT8x9 operating point
       ozaki-fp64@1e-25:fast/pallas_fused+epilogue
+      ozaki-fp64x9/pallas_fused+streaming   # slices never leave VMEM
       ozaki-fp64x7:budget:12/pallas|shard=data|cache=plans.json|autotune
       bf16                            # the TPU-native baseline
       int8-quant                      # lossy inference quantization
@@ -22,7 +23,7 @@ module collapses all of it into two objects:
   Grammar (sections in fixed order, every one optional but the scheme)::
 
       SPEC    := SCHEME ["x" SPLITS] ["@" TARGET] [":" MODES]
-                 ["/" BACKEND ["+epilogue"]] ("|" OPTION)*
+                 ["/" BACKEND ["+epilogue" | "+streaming"]] ("|" OPTION)*
       MODES   := MODE ("," MODE)*   MODE := "fast" | "full" | "diagonal"
                                           | "budget:" N
       OPTION  := "shard=" AXIS | "cache=" PATH | "autotune"
@@ -49,6 +50,7 @@ array exists.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import functools
@@ -83,6 +85,11 @@ class MatmulPolicy:
                    operating point (``core.tuning.select_num_splits``).
     fuse_epilogue: pallas_fused: GEMM + scaled accumulation in one kernel
                    (int32 slice products never reach HBM).
+    streaming:     pallas_fused: slice EXTRACTION fused into the epilogue
+                   GEMM grid too — int8 slices live only in VMEM, never
+                   written to or re-read from HBM (``fusion="streaming"``;
+                   spec suffix ``+streaming``). Mutually exclusive with
+                   ``fuse_epilogue`` (it subsumes it).
     target_error:  accuracy target on the scaled error (``core.accuracy``)
                    — lets the planner REDUCE the split count per shape.
     fast_mode:     truncate slice pairs to the minimal budget meeting
@@ -101,6 +108,7 @@ class MatmulPolicy:
     backend: str = "xla"
     num_splits: Optional[int] = None
     fuse_epilogue: bool = False
+    streaming: bool = False
     target_error: Optional[float] = None
     fast_mode: bool = False
     pair_policy: str = "full"
@@ -122,6 +130,11 @@ class MatmulPolicy:
         if self.target_error is not None and not self.target_error > 0.0:
             raise ValueError(f"target_error must be > 0, got "
                              f"{self.target_error}")
+        if self.streaming and self.fuse_epilogue:
+            raise ValueError(
+                "streaming and fuse_epilogue are mutually exclusive: "
+                "streaming subsumes the epilogue fusion (pick one of "
+                "'+streaming' / '+epilogue')")
         _validate_pair_policy(self.pair_policy)
         if self.scheme != "ozaki_fp64":
             for field, default in _ozaki_only_fields().items():
@@ -142,9 +155,10 @@ class MatmulPolicy:
             ([self.pair_policy] if self.pair_policy != "full" else [])
         if modes:
             s += ":" + ",".join(modes)
-        if self.backend != "xla" or self.fuse_epilogue:
+        if self.backend != "xla" or self.fuse_epilogue or self.streaming:
             s += "/" + self.backend + \
-                ("+epilogue" if self.fuse_epilogue else "")
+                ("+epilogue" if self.fuse_epilogue else "") + \
+                ("+streaming" if self.streaming else "")
         if self.shard_axis:
             s += f"|shard={self.shard_axis}"
         if self.plan_cache:
@@ -206,6 +220,7 @@ class MatmulPolicy:
         return OzakiConfig(
             num_splits=self.resolve_num_splits(k), accum=accum,
             backend=self.backend, fuse_epilogue=self.fuse_epilogue,
+            streaming=self.streaming,
             pair_policy=self.pair_policy, target_error=self.target_error,
             fast_mode=self.fast_mode, shard_axis=self.shard_axis,
             fuse_diagonals=True, interpret=interpret)
@@ -258,6 +273,9 @@ def _parse_spec(spec: str) -> MatmulPolicy:
 
     if "/" in core:
         core, backend = core.split("/", 1)
+        if backend.endswith("+streaming"):
+            kw["streaming"] = True
+            backend = backend[: -len("+streaming")]
         if backend.endswith("+epilogue"):
             kw["fuse_epilogue"] = True
             backend = backend[: -len("+epilogue")]
@@ -347,7 +365,13 @@ def default_matmul_precision(precision):
         _DEFAULT_POLICY.value = prev
 
 
-_PLAN_CACHE_MEMO: dict = {}          # path -> (mtime, PlanCache)
+# path -> (mtime, PlanCache), LRU-bounded: a serving process cycling
+# through many per-model cache paths must not grow this without limit,
+# and concurrent matmul callers (the engine is threaded) must not race
+# the check-then-insert. Mutated only under _PLAN_CACHE_LOCK.
+_PLAN_CACHE_MEMO: collections.OrderedDict = collections.OrderedDict()
+_PLAN_CACHE_MEMO_MAX = 16
+_PLAN_CACHE_LOCK = threading.Lock()
 
 
 def _load_plan_cache(path: str):
@@ -360,11 +384,19 @@ def _load_plan_cache(path: str):
         mtime = os.stat(path).st_mtime_ns
     except OSError:
         mtime = None
-    hit = _PLAN_CACHE_MEMO.get(path)
-    if hit is not None and hit[0] == mtime:
-        return hit[1]
+    with _PLAN_CACHE_LOCK:
+        hit = _PLAN_CACHE_MEMO.get(path)
+        if hit is not None and hit[0] == mtime:
+            _PLAN_CACHE_MEMO.move_to_end(path)
+            return hit[1]
+    # load outside the lock: file I/O + JSON parse must not serialize
+    # every other thread's memo hits behind it
     cache = PlanCache.load(path)
-    _PLAN_CACHE_MEMO[path] = (mtime, cache)
+    with _PLAN_CACHE_LOCK:
+        _PLAN_CACHE_MEMO[path] = (mtime, cache)
+        _PLAN_CACHE_MEMO.move_to_end(path)
+        while len(_PLAN_CACHE_MEMO) > _PLAN_CACHE_MEMO_MAX:
+            _PLAN_CACHE_MEMO.popitem(last=False)
     return cache
 
 
@@ -381,9 +413,9 @@ def _active_plan_cache(pol: MatmulPolicy):
 
 def _apply_tuned_plan(cfg, cache, *, m: int, n: int, k: int, batch: int):
     """Fold a cached tuned plan into an OzakiConfig — RESULT-INVARIANT
-    fields only (tile shapes + the stages/epilogue fusion flip, both
-    bitwise-neutral per the backend-parity suite), so a cached plan can
-    never change what ``matmul`` returns, only how fast it runs."""
+    fields only (tile shapes + the stages/epilogue/streaming fusion flip,
+    all bitwise-neutral per the backend-parity suite), so a cached plan
+    can never change what ``matmul`` returns, only how fast it runs."""
     if cache is None:
         return cfg
     from repro.core.autotune import plan_cache_key
@@ -393,7 +425,8 @@ def _apply_tuned_plan(cfg, cache, *, m: int, n: int, k: int, batch: int):
     if plan is None:
         return cfg
     return dataclasses.replace(cfg, tile=plan.tile,
-                               fuse_epilogue=(plan.fusion == "epilogue"))
+                               fuse_epilogue=(plan.fusion == "epilogue"),
+                               streaming=(plan.fusion == "streaming"))
 
 
 # ----------------------------------------------------------------------------

@@ -57,13 +57,25 @@ from .splitting import slice_width
 from .tuning import (CONCAT_K_MAX, PipelinePlan, _cached_hit_acceptable,
                      diagonal_groups, plan_schedule_ok, select_num_splits,
                      select_pipeline_plan)
+from .warn_once import WarnOnceLatch
 
 __all__ = ["PLAN_CACHE_VERSION", "PlanKey", "PlanCache", "plan_cache_key",
            "candidate_plans", "measure_plan", "autotune_plan",
            "AutotuneReport", "use_plan_cache", "active_plan_cache",
-           "set_plan_cache"]
+           "set_plan_cache", "warn_if_interpret_ranked"]
 
-PLAN_CACHE_VERSION = 1
+# v2: entries carry a ``meta`` dict recording the measurement mode
+# (``{"interpret": bool | None}``). v1 files load as empty (the standard
+# fallback-to-empty path) — the old entries were indistinguishable from
+# hardware-measured plans, which is exactly the bug the bump fixes.
+PLAN_CACHE_VERSION = 2
+
+# Warns (once per cache key) when a compiled run is served a plan whose
+# measurement ranking ran in Pallas interpret mode: interpret timings
+# order candidates but are not Mosaic timings, so the ranking deserves a
+# re-tune on hardware. Registered in ``warn_once`` so the test suite's
+# ``reset_all_warn_latches`` covers it.
+_INTERPRET_LATCH = WarnOnceLatch("interpret_ranked_plans")
 
 
 def default_device_kind() -> str:
@@ -147,20 +159,26 @@ class PlanCache:
     corrupted file loads as an EMPTY cache with a warning, so planning
     falls back to the analytic model instead of failing)::
 
-        {"version": 1,
+        {"version": 2,
          "plans": {"m=..;n=..;..": {"key": {...PlanKey...},
                                     "plan": {...PipelinePlan.to_dict...},
-                                    "us": 123.4}}}
+                                    "us": 123.4,
+                                    "meta": {"interpret": true}}}}
 
     Entries are decoded from the structured ``key`` dict (the string key
-    is display/dedup only). ``hits``/``misses`` count ``get`` outcomes
-    for the pre-warm/steady-state tests and ops introspection.
+    is display/dedup only). ``meta`` records how the entry's measurement
+    ran — today ``interpret`` (Pallas interpret mode vs compiled Mosaic;
+    None for entries stored without measurement) — so consumers can tell
+    a CPU-interpret ranking from a hardware one
+    (``warn_if_interpret_ranked``). ``hits``/``misses`` count ``get``
+    outcomes for the pre-warm/steady-state tests and ops introspection.
     """
 
     def __init__(self, path: Optional[str] = None):
         self.path = os.fspath(path) if path is not None else None
         self._plans: dict[PlanKey, PipelinePlan] = {}
         self._us: dict[PlanKey, Optional[float]] = {}
+        self._meta: dict[PlanKey, dict] = {}
         self.hits = 0
         self.misses = 0
 
@@ -185,12 +203,14 @@ class PlanCache:
                 key = PlanKey.from_dict(entry["key"])
                 cache._plans[key] = PipelinePlan.from_dict(entry["plan"])
                 cache._us[key] = entry.get("us")
+                cache._meta[key] = dict(entry.get("meta") or {})
         except (OSError, ValueError, KeyError, TypeError) as e:
             warnings.warn(f"plan cache {cache.path}: unreadable "
                           f"({type(e).__name__}: {e}); starting from an "
                           "empty cache (analytic plans until re-tuned)")
             cache._plans.clear()
             cache._us.clear()
+            cache._meta.clear()
         return cache
 
     def save(self, path: Optional[str] = None) -> Optional[str]:
@@ -202,7 +222,8 @@ class PlanCache:
         data = {"version": PLAN_CACHE_VERSION, "plans": {
             key.encode(): {"key": key.to_dict(),
                            "plan": self._plans[key].to_dict(),
-                           "us": self._us.get(key)}
+                           "us": self._us.get(key),
+                           "meta": self._meta.get(key, {})}
             for key in sorted(self._plans, key=lambda kk: kk.encode())}}
         d = os.path.dirname(os.path.abspath(path))
         os.makedirs(d, exist_ok=True)
@@ -228,12 +249,18 @@ class PlanCache:
         return plan
 
     def put(self, key: PlanKey, plan: PipelinePlan,
-            measured_us: Optional[float] = None) -> None:
+            measured_us: Optional[float] = None,
+            interpret: Optional[bool] = None) -> None:
         self._plans[key] = plan
         self._us[key] = measured_us
+        self._meta[key] = {"interpret": interpret}
 
     def measured_us(self, key: PlanKey) -> Optional[float]:
         return self._us.get(key)
+
+    def meta(self, key: PlanKey) -> dict:
+        """Measurement metadata of one entry ({} when unknown)."""
+        return self._meta.get(key, {})
 
     def __len__(self) -> int:
         return len(self._plans)
@@ -243,6 +270,30 @@ class PlanCache:
 
     def keys(self):
         return self._plans.keys()
+
+
+def warn_if_interpret_ranked(cache: PlanCache, key: PlanKey,
+                             interpret: bool) -> None:
+    """Warn once per key when a compiled consumer gets an interpret-ranked
+    plan.
+
+    Called on every cache-hit path (``select_pipeline_plan`` and
+    ``autotune_plan``) with the CONSUMER's interpret mode: a compiled run
+    (``interpret=False``) served a plan whose candidate ranking was timed
+    in Pallas interpret mode is running an ordering CPU emulation picked —
+    bitwise-correct, but not a Mosaic timing. Entries with unknown
+    provenance (``meta`` absent: stored without measurement, or loaded
+    from a pre-v2 cache) stay silent.
+    """
+    if interpret:
+        return
+    if cache.meta(key).get("interpret"):
+        _INTERPRET_LATCH.warn(
+            key.encode(),
+            f"plan cache {cache.path or '<memory>'}: plan for "
+            f"[{key.encode()}] was ranked in Pallas interpret mode but is "
+            "being consumed by a compiled run — re-tune on hardware "
+            "(autotune with interpret=False) for a trustworthy ranking")
 
 
 # ----------------------------------------------------------------------------
@@ -299,6 +350,7 @@ def candidate_plans(m: int, n: int, k: int, *, batch: int = 1,
                     backend: str = "pallas_fused", accum: str = "df32",
                     num_splits: Optional[int] = None,
                     fuse_epilogue: bool = True,
+                    streaming: bool = False,
                     shard_axis: Optional[str] = None,
                     interpret: bool = True,
                     search_num_splits: int = 0,
@@ -331,7 +383,8 @@ def candidate_plans(m: int, n: int, k: int, *, batch: int = 1,
     base = select_pipeline_plan(
         m, n, k, batch=batch, broadcast_weights=broadcast_weights,
         backend=backend, accum=accum, num_splits=num_splits,
-        fuse_epilogue=fuse_epilogue, shard_axis=shard_axis,
+        fuse_epilogue=fuse_epilogue, streaming=streaming,
+        shard_axis=shard_axis,
         interpret=interpret, target_error=target_error,
         fast_mode=fast_mode, pair_policy=pair_policy, **analytic_kwargs)
     cands = [base]
@@ -340,10 +393,13 @@ def candidate_plans(m: int, n: int, k: int, *, batch: int = 1,
         if plan not in cands and plan_schedule_ok(plan, k):
             cands.append(plan)
 
-    # fusion-mode flip (pallas_fused only; both modes bitwise-equal)
-    if base.fusion in ("stages", "epilogue"):
-        flip = "stages" if base.fusion == "epilogue" else "epilogue"
-        add(dataclasses.replace(base, fusion=flip))
+    # fusion-mode flips (pallas_fused only; all modes bitwise-equal —
+    # streaming included, so the measurement decides whether eliminating
+    # the HBM slice stacks beats re-reading the operand words per group)
+    if base.fusion in ("stages", "epilogue", "streaming"):
+        for flip in ("stages", "epilogue", "streaming"):
+            if flip != base.fusion:
+                add(dataclasses.replace(base, fusion=flip))
 
     # concat_k flip: exact int32 regrouping; never for a stacked batch
     # (the concatenated operands would materialize once per batch row)
@@ -479,6 +535,7 @@ def autotune_plan(m: int, n: int, k: int, *, batch: int = 1,
                   backend: str = "pallas_fused", accum: str = "df32",
                   num_splits: Optional[int] = None,
                   fuse_epilogue: bool = True,
+                  streaming: bool = False,
                   shard_axis: Optional[str] = None, interpret: bool = True,
                   target_error: Optional[float] = None,
                   fast_mode: bool = False,
@@ -527,6 +584,7 @@ def autotune_plan(m: int, n: int, k: int, *, batch: int = 1,
                 hit, k, num_splits=num_splits, target_error=target_error,
                 accuracy_pinned=accuracy_pinned,
                 policy=pair_policy if pair_policy is not None else "full"):
+            warn_if_interpret_ranked(cache, key, interpret)
             return AutotuneReport(key=key, best=hit,
                                   best_us=cache.measured_us(key) or 0.0,
                                   measurements=((hit, 0.0),))
@@ -534,7 +592,8 @@ def autotune_plan(m: int, n: int, k: int, *, batch: int = 1,
         candidates = candidate_plans(
             m, n, k, batch=batch, broadcast_weights=broadcast_weights,
             backend=backend, accum=accum, num_splits=num_splits,
-            fuse_epilogue=fuse_epilogue, shard_axis=shard_axis,
+            fuse_epilogue=fuse_epilogue, streaming=streaming,
+            shard_axis=shard_axis,
             interpret=interpret, target_error=target_error,
             pair_policy=pair_policy, max_candidates=max_candidates,
             **analytic_kwargs)
@@ -549,7 +608,7 @@ def autotune_plan(m: int, n: int, k: int, *, batch: int = 1,
         measurements.append((plan, us))
     best, best_us = min(measurements, key=lambda pu: pu[1])
     if cache is not None:
-        cache.put(key, best, measured_us=best_us)
+        cache.put(key, best, measured_us=best_us, interpret=interpret)
         if save and cache.path is not None:
             cache.save()
     return AutotuneReport(key=key, best=best, best_us=best_us,

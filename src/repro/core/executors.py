@@ -34,6 +34,8 @@ importable without ``repro.kernels`` and cycle-free.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 
@@ -42,7 +44,8 @@ from .tuning import BACKENDS, PipelinePlan
 from .xmath import DW, dw_add, dw_normalize
 
 __all__ = ["BACKENDS", "XlaExecutor", "PallasExecutor", "FusedExecutor",
-           "EpilogueExecutor", "get_executor", "gemm_xla", "int32_to_dw"]
+           "EpilogueExecutor", "StreamingExecutor", "StreamingSplit",
+           "get_executor", "gemm_xla", "int32_to_dw"]
 
 
 def gemm_xla(a8: jax.Array, bt8: jax.Array) -> jax.Array:
@@ -254,12 +257,76 @@ class EpilogueExecutor(FusedExecutor):
         return DW(jnp.ldexp(c_hi, e_base), jnp.ldexp(c_lo, e_base))
 
 
+class StreamingSplit(NamedTuple):
+    """Stage-1 "result" of the streaming pipeline: nothing is split yet.
+
+    ``split`` only computes the per-row exponents; the (hi, lo) operand
+    words ride forward so the streaming GEMM kernels can extract the int8
+    slices tile-wise in VMEM — the slice stacks never exist in HBM.
+    Duck-types the ``SplitResult`` fields the driver reads (exp, w).
+    """
+
+    hi: jax.Array
+    lo: jax.Array
+    exp: jax.Array
+    w: int
+
+
+class StreamingExecutor(EpilogueExecutor):
+    """``fusion="streaming"``: split + GEMM + accumulation in one kernel.
+
+    The anti-diagonal group schedule, rounding sequences and accumulation
+    order are exactly the epilogue executor's; the difference is purely
+    where the slices live. ``split``/``split_dw`` are no-ops that carry
+    the operand words plus precomputed row exponents forward (the
+    exponents are full-row reductions, so they must be computed before
+    tiling), and each group's kernel extracts the slice prefix it needs
+    into VMEM scratch. Extraction is elementwise per (row, col) given the
+    row exponent, so the tile-wise in-kernel split is bitwise identical
+    to the materialized stacks — the parity matrix enforces it.
+    """
+
+    def split(self, x: jax.Array, w: int) -> StreamingSplit:
+        return StreamingSplit(x, jnp.zeros_like(x), row_exponents(x), w)
+
+    def split_dw(self, x: DW, w: int) -> StreamingSplit:
+        return StreamingSplit(x.hi, x.lo, row_exponents(x.hi), w)
+
+    def contract(self, sa: StreamingSplit, sb: StreamingSplit, w: int,
+                 e_base: jax.Array, shape):
+        from repro.kernels import (int8_matmul_nt_streaming_dw,
+                                   int8_matmul_nt_streaming_sw)
+        assert len(shape) in (2, 3), shape    # 3-D: batch-grid kernels
+        plan = self.plan
+        tile = plan.tile
+        kw = dict(num_splits=plan.num_splits, w=w, bm=tile.bm, bn=tile.bn,
+                  bk=tile.bk, interpret=plan.interpret)
+        a_ops = (sa.hi, sa.lo, sa.exp)
+        b_ops = (sb.hi, sb.lo, sb.exp)
+        if plan.accum == "f64":
+            c = jnp.zeros(shape, jnp.float64)
+            for t, p_lo, npairs in self._groups():
+                c = int8_matmul_nt_streaming_sw(
+                    *a_ops, *b_ops, c, p_lo=p_lo, t=t, npairs=npairs,
+                    scale=2.0 ** (-(t + 2) * w), **kw)
+            return jnp.ldexp(c, e_base)
+        c_hi = jnp.zeros(shape, jnp.float32)
+        c_lo = jnp.zeros(shape, jnp.float32)
+        for t, p_lo, npairs in self._groups():
+            c_hi, c_lo = int8_matmul_nt_streaming_dw(
+                *a_ops, *b_ops, c_hi, c_lo, p_lo=p_lo, t=t, npairs=npairs,
+                scale=2.0 ** (-(t + 2) * w), **kw)
+        return DW(jnp.ldexp(c_hi, e_base), jnp.ldexp(c_lo, e_base))
+
+
 def get_executor(plan: PipelinePlan) -> XlaExecutor:
     if plan.backend == "xla":
         return XlaExecutor(plan)
     if plan.backend == "pallas":
         return PallasExecutor(plan)
     if plan.backend == "pallas_fused":
+        if plan.fusion == "streaming":
+            return StreamingExecutor(plan)
         if plan.fusion == "epilogue":
             return EpilogueExecutor(plan)
         return FusedExecutor(plan)

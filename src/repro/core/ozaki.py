@@ -69,7 +69,7 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from .executors import get_executor, int32_to_dw
+from .executors import StreamingSplit, get_executor, int32_to_dw
 from .splitting import SplitResult, slice_width
 from .tuning import (BACKENDS, PipelinePlan, TilePlan, diagonal_groups,
                      parse_pair_policy, plan_for)
@@ -89,6 +89,14 @@ class OzakiConfig:
         the batch-grid epilogue kernel (set the
         ``REPRO_OZAKI_BATCHED_EPILOGUE=0`` env knob to fall back to the
         stage-fused pipeline on batched calls; the fallback warns once).
+    streaming: with ``backend="pallas_fused"``, fuse the SPLIT into the
+        GEMM grid as well (``fusion="streaming"``): each (k-panel, pair)
+        grid step extracts the int8 slices of its operand tiles in VMEM,
+        so the slice stacks never materialize in HBM (see
+        ``tuning.hbm_pass_model``'s "slices" item). Wins over
+        ``fuse_epilogue`` when both are set; ignored by other backends;
+        gated by the same env knob as the epilogue kernels on stacked
+        batches.
     fuse_diagonals: O1 — exact int32 pre-accumulation per anti-diagonal.
     concat_k: O2 — one GEMM per anti-diagonal via k-concatenation.
     full_pairs: compute all s*s pairs (paper computes i+j <= s+1 only).
@@ -114,6 +122,7 @@ class OzakiConfig:
     accum: str = "f64"
     backend: str = "xla"
     fuse_epilogue: bool = False
+    streaming: bool = False
     fuse_diagonals: bool = True
     concat_k: bool = False
     full_pairs: bool = False
@@ -211,6 +220,12 @@ def _fold_rows(split_fn, x3, w: int) -> SplitResult:
     else:
         bsz, r, k = x3.shape
         res = split_fn(x3.reshape(bsz * r, k), w)
+    if isinstance(res, StreamingSplit):
+        # nothing was split: un-fold the carried operand words so the
+        # batch-grid streaming kernels see (B, r, k) / (B, r) blocks
+        return StreamingSplit(res.hi.reshape(bsz, r, k),
+                              res.lo.reshape(bsz, r, k),
+                              res.exp.reshape(bsz, r), res.w)
     s = res.slices.shape[0]
     return SplitResult(res.slices.reshape(s, bsz, r, k),
                        res.exp.reshape(bsz, r), res.w)

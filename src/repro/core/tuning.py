@@ -64,18 +64,17 @@ from typing import Optional, Sequence
 # repro.kernels.launch only — the kernels themselves import repro.core
 # lazily, so there is no cycle).
 from repro.kernels.launch import (LANE, SUBLANE_F32 as SUBLANE, SUBLANE_I8,
-                                  align_up as _align_up)
+                                  VMEM_BYTES, align_up as _align_up)
 
 from .analytic import DGEMM_MANTISSA_SPACE, INT8_INT32, MMUSpec
 from .splitting import slice_width
 from .warn_once import WarnOnceLatch
 
-VMEM_BYTES = 16 * 2 ** 20
 VMEM_BUDGET = VMEM_BYTES // 2      # leave half for double buffering
 CONCAT_K_MAX = 2048                 # below this, slice GEMMs are launch-bound
 
 BACKENDS = ("xla", "pallas", "pallas_fused")
-FUSION_MODES = ("none", "stages", "epilogue")
+FUSION_MODES = ("none", "stages", "epilogue", "streaming")
 BATCH_LAYOUTS = ("none", "rows", "grid")
 # Fast-mode pair truncation (see core.accuracy): "full" keeps the whole
 # schedule; "diagonal" drops the last (least-significant) anti-diagonal
@@ -296,11 +295,16 @@ class PipelinePlan:
                   own num_splits/schedule fields are advisory — the plan's
                   top-level fields below are authoritative).
     backend:      "xla" | "pallas" | "pallas_fused" — executor family.
-    fusion:       "none"     — every stage a separate op/kernel;
-                  "stages"   — one-pass split + fused accumulation kernels
-                               (the PR 1 ``pallas_fused`` pipeline);
-                  "epilogue" — GEMM and scaled accumulation in ONE kernel:
-                               int32 group products never reach HBM.
+    fusion:       "none"      — every stage a separate op/kernel;
+                  "stages"    — one-pass split + fused accumulation kernels
+                                (the PR 1 ``pallas_fused`` pipeline);
+                  "epilogue"  — GEMM and scaled accumulation in ONE kernel:
+                                int32 group products never reach HBM;
+                  "streaming" — split + GEMM + accumulation in ONE kernel:
+                                the int8 slice stacks are extracted
+                                tile-wise in VMEM and never reach HBM
+                                either (only the operand words and the
+                                carried C cross the HBM boundary).
     batch_layout: "none" — unbatched (m, k) x (k, n);
                   "rows" — broadcast weights, batch folded into rows;
                   "grid" — explicit batch grid dimension on every stage.
@@ -367,9 +371,21 @@ class PipelinePlan:
         return cls(**d)
 
 
-def _fusion_for(backend: str, fuse_epilogue: bool, batch_layout: str) -> str:
+def _fusion_for(backend: str, fuse_epilogue: bool, batch_layout: str,
+                streaming: bool = False) -> str:
     if backend != "pallas_fused":
         return "none"
+    if streaming:
+        if batch_layout == "grid" and not batched_epilogue_enabled():
+            # streaming reuses the batch-grid epilogue machinery, so the
+            # same env knob gates it (and the same warn-once fires).
+            _warn_downgrade_once(
+                f"stacked-weights batch with {BATCHED_EPILOGUE_ENV}=0 — "
+                "the batch-grid streaming kernel is disabled, falling "
+                "back to the stage-fused pipeline (batched GEMM + fused "
+                "accumulation)")
+            return "stages"
+        return "streaming"
     if not fuse_epilogue:
         return "stages"
     if batch_layout == "grid" and not batched_epilogue_enabled():
@@ -394,7 +410,8 @@ def plan_for(cfg, *, batch_layout: str = "none") -> PipelinePlan:
     return PipelinePlan(
         num_splits=cfg.num_splits, tile=tile, backend=cfg.backend,
         fusion=_fusion_for(cfg.backend, getattr(cfg, "fuse_epilogue", False),
-                           batch_layout),
+                           batch_layout,
+                           streaming=getattr(cfg, "streaming", False)),
         batch_layout=batch_layout,
         shard_axis=getattr(cfg, "shard_axis", None),
         pair_policy=getattr(cfg, "pair_policy", "full"),
@@ -421,6 +438,7 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
                          backend: str = "pallas_fused", accum: str = "df32",
                          num_splits: int | None = None,
                          fuse_epilogue: bool = True,
+                         streaming: bool = False,
                          shard_axis: Optional[str] = None,
                          interpret: bool = True,
                          target_error: Optional[float] = None,
@@ -476,7 +494,8 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
             k, base_s, target_error=target_error, fast_mode=fast_mode,
             pair_policy=policy)
     if cache is not None or autotune:
-        from .autotune import autotune_plan, plan_cache_key   # lazy: no cycle
+        from .autotune import (autotune_plan, plan_cache_key,   # lazy: no cycle
+                               warn_if_interpret_ranked)
         key = plan_cache_key(m, n, k, batch=batch, dtype=dtype, accum=accum,
                              backend=backend, device_kind=device_kind)
         if cache is not None:
@@ -496,12 +515,14 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
                     hit, k, num_splits=num_splits,
                     target_error=target_error,
                     accuracy_pinned=accuracy_pinned, policy=policy):
+                warn_if_interpret_ranked(cache, key, interpret)
                 return hit
         if autotune:
             return autotune_plan(
                 m, n, k, batch=batch, broadcast_weights=broadcast_weights,
                 backend=backend, accum=accum, num_splits=num_splits,
-                fuse_epilogue=fuse_epilogue, shard_axis=shard_axis,
+                fuse_epilogue=fuse_epilogue, streaming=streaming,
+                shard_axis=shard_axis,
                 interpret=interpret, target_error=target_error,
                 pair_policy=policy if accuracy_pinned else None,
                 dtype=dtype, device_kind=device_kind,
@@ -513,7 +534,8 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
                        mmu=mmu, vmem_budget=vmem_budget)
     return PipelinePlan(
         num_splits=tile.num_splits, tile=tile, backend=backend,
-        fusion=_fusion_for(backend, fuse_epilogue, layout),
+        fusion=_fusion_for(backend, fuse_epilogue, layout,
+                           streaming=streaming),
         batch_layout=layout, shard_axis=shard_axis, pair_policy=policy,
         fuse_diagonals=tile.fuse_diagonals, concat_k=tile.concat_k,
         accum=accum, interpret=interpret)
@@ -526,13 +548,15 @@ def apply_pipeline_plan(cfg, plan: PipelinePlan):
         fuse_diagonals=plan.fuse_diagonals, concat_k=plan.concat_k,
         full_pairs=plan.full_pairs, accum=plan.accum, tile=plan.tile,
         fuse_epilogue=(plan.fusion == "epilogue"),
+        streaming=(plan.fusion == "streaming"),
         pair_policy=plan.pair_policy,
         shard_axis=plan.shard_axis, interpret=plan.interpret)
 
 
-def hbm_pass_model(num_splits: int, *, fused: bool,
+def hbm_pass_model(num_splits: int, *, fused: bool = False,
                    fuse_diagonals: bool = True,
                    fuse_epilogue: bool = False,
+                   fusion: Optional[str] = None,
                    batch: int = 1, batch_layout: str = "none",
                    pair_policy: str = "full") -> dict:
     """Modeled HBM round-trips per stage for one operand/output matrix.
@@ -543,14 +567,41 @@ def hbm_pass_model(num_splits: int, *, fused: bool,
 
     * split — Algorithm 4 re-reads the residual every iteration
       (``s`` passes) while the one-pass kernel reads the input once.
+      Streaming mode has no standalone split pass; instead each group's
+      kernel re-reads the operand words (``groups`` input passes).
+    * slices — every non-streaming mode materializes the (s, m, k) int8
+      slice stack between split and GEMM: ``s`` write passes at the end
+      of split plus one read pass per kept slice pair in the GEMM stage.
+      Streaming extracts slices tile-wise in VMEM, so this item is 0 —
+      the O(s·m·k) traffic the mode exists to remove (and which this
+      model previously omitted entirely, hiding the win).
     * accum — the unfused path materializes the int32->float conversion
       and the scaled term before the compensated add (2 extra passes per
       accumulation group); the stage-fused kernel does conversion + scale
       + add in registers within one VMEM pass but still reads the int32
-      group product the GEMM materialized; the epilogue-fused GEMM
-      (``fuse_epilogue=True``, implies ``fused``) accumulates inside the
-      GEMM grid so the int32 product never round-trips at all — only the
-      carried C read/write remains.
+      group product the GEMM materialized; the epilogue-fused and
+      streaming GEMMs accumulate inside the GEMM grid so the int32
+      product never round-trips at all — only the carried C read/write
+      remains.
+
+    Per-operand passes at s=9, full schedule (45 pairs, 9 groups):
+
+    ====================  =====  ======  =====  =====
+    fusion                split  slices  accum  total
+    ====================  =====  ======  =====  =====
+    "none"                    9      54     45    108
+    "stages"                  1      54     27     82
+    "epilogue"                1      54     18     73
+    "streaming"               9       0     18     27
+    ====================  =====  ======  =====  =====
+
+    Streaming is strictly below epilogue for every schedule: the saved
+    slice traffic ``s + kept`` always exceeds the extra operand re-reads
+    ``groups - 1`` (``kept >= groups``).
+
+    ``fusion`` names the plan's mode directly (``PipelinePlan.fusion``)
+    and overrides the legacy ``fused``/``fuse_epilogue`` flags, which
+    remain for callers modeling the pre-streaming pipelines.
 
     ``batch``/``batch_layout`` model the batched pipeline: every layout
     runs the identical per-element pipeline (the "rows" layout folds the
@@ -569,20 +620,40 @@ def hbm_pass_model(num_splits: int, *, fused: bool,
         raise ValueError(f"batch must be >= 1, got {batch}")
     if batch > 1 and batch_layout == "none":
         raise ValueError("batch > 1 requires batch_layout 'rows' or 'grid'")
+    if fusion is not None:
+        if fusion not in FUSION_MODES:
+            raise ValueError(f"unknown fusion {fusion!r}; "
+                             f"expected one of {FUSION_MODES}")
+        fused = fusion in ("stages", "epilogue", "streaming")
+        fuse_epilogue = fusion == "epilogue"
+    streaming = fusion == "streaming"
     fused = fused or fuse_epilogue      # epilogue fusion implies fused
     s = num_splits
     # pair truncation drops whole accumulation groups (fuse_diagonals)
     # or individual pair products (paper-faithful schedule)
     gl = diagonal_groups(s, False,
                          pair_budget=parse_pair_policy(pair_policy, s))
-    groups = len(gl) if fuse_diagonals else sum(len(p) for _, p in gl)
-    split_passes = 1 if fused else s
-    if fuse_epilogue:
+    kept = sum(len(p) for _, p in gl)
+    groups = len(gl) if fuse_diagonals else kept
+    if streaming:
+        # one operand-word read per group kernel; no slice stack at all
+        split_passes = groups
+        slices_passes = 0
         accum_passes = groups * 2        # read C + write C, nothing else
     else:
-        # per group: read P + read/write C(hi,lo); unfused adds temp traffic
-        accum_passes = groups * (3 if fused else 5)
+        split_passes = 1 if fused else s
+        # the materialized (s, m, k) stack: written once by split, then
+        # one slice plane read per kept pair by the GEMM stage
+        slices_passes = s + kept
+        if fuse_epilogue:
+            accum_passes = groups * 2    # read C + write C, nothing else
+        else:
+            # per group: read P + read/write C(hi,lo); unfused adds
+            # temp traffic
+            accum_passes = groups * (3 if fused else 5)
     split_passes *= batch
+    slices_passes *= batch
     accum_passes *= batch
-    return {"split": split_passes, "accum": accum_passes,
-            "total": split_passes + accum_passes}
+    return {"split": split_passes, "slices": slices_passes,
+            "accum": accum_passes,
+            "total": split_passes + slices_passes + accum_passes}

@@ -5,9 +5,11 @@ and (b) the high-precision accumulation + the splitting stage it profiles
 in Fig. 9. One kernel each:
 
   int8_gemm.py    — MXU int8xint8->int32 tiled GEMM (NT layout), plus a
-                    batch-grid variant for the batched Ozaki API and the
+                    batch-grid variant for the batched Ozaki API, the
                     epilogue-fused GEMM+accumulate variants (int32 group
-                    products never leave VMEM)
+                    products never leave VMEM) and the streaming-split
+                    variants (slices extracted in VMEM — the int8 stacks
+                    never touch HBM either)
   ozaki_split.py  — fused one-pass SplitInt (s slices per HBM read)
   ozaki_accum.py  — fused int32->float scaled accumulation (df32
                     compensated, or single-word for the f64 oracle path)
@@ -19,9 +21,11 @@ wrappers; ref.py holds the pure-jnp oracles.
 from . import int8_gemm, launch, ozaki_accum, ozaki_split, ref
 from .ops import (accum_scaled_dw, accum_scaled_sw, fused_split_dw,
                   int8_matmul_nt, int8_matmul_nt_batched,
-                  int8_matmul_nt_epilogue_dw, int8_matmul_nt_epilogue_sw)
+                  int8_matmul_nt_epilogue_dw, int8_matmul_nt_epilogue_sw,
+                  int8_matmul_nt_streaming_dw, int8_matmul_nt_streaming_sw)
 
 __all__ = ["int8_gemm", "launch", "ozaki_accum", "ozaki_split", "ref",
            "accum_scaled_dw", "accum_scaled_sw", "fused_split_dw",
            "int8_matmul_nt", "int8_matmul_nt_batched",
-           "int8_matmul_nt_epilogue_dw", "int8_matmul_nt_epilogue_sw"]
+           "int8_matmul_nt_epilogue_dw", "int8_matmul_nt_epilogue_sw",
+           "int8_matmul_nt_streaming_dw", "int8_matmul_nt_streaming_sw"]

@@ -41,8 +41,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .launch import gemm_blocks, grid_for, pad_tail
+from .launch import gemm_blocks, grid_for, pad_tail, streaming_blocks
 from .ozaki_accum import dw_accum_step
+from .ozaki_split import split_tile
 
 
 def _kernel(a_ref, b_ref, o_ref):
@@ -376,4 +377,308 @@ def int8_matmul_nt_epilogue_dw(a_slices: jax.Array, b_slices: jax.Array,
                                   _epilogue_kernel_dw, p_lo=p_lo, t=t,
                                   npairs=npairs, scale=scale, bm=bm, bn=bn,
                                   bk=bk, interpret=interpret)
+    return o_hi, o_lo
+
+
+# ----------------------------------------------------------------------------
+# Streaming-split variants: split + GEMM + scaled accumulation in one
+# launch. Operands arrive as (hi, lo) word pairs plus per-row exponents;
+# the int8 slices are extracted in VMEM at the head of each k-panel and
+# never materialize to HBM.
+# ----------------------------------------------------------------------------
+#
+# Grid is (m/bm, n/bn, k/bk, npairs) with the PAIR dimension innermost —
+# the opposite nesting of the epilogue kernels — so each (i, j, kk)
+# operand-tile load is split exactly once (at pp == 0) into persistent
+# int8 VMEM scratches, then all of the group's pairs consume the resident
+# slice planes. The slice chain is prefix-stable, so the scratches hold
+# only the prefix the group touches: A needs slices [0, p_lo + npairs),
+# B needs [0, t - p_lo + 1). The (kk, pp) walk sums the same int32
+# products as the epilogue kernels' (pp, kk) walk — int32 accumulation is
+# exact, hence order-independent — and the float epilogue runs the
+# identical rounding sequence at the last grid step, so streaming stays
+# bitwise identical to every other executor. Padded rows/cols carry
+# hi = lo = 0 with exponent 0 and split to all-zero slices, matching the
+# zero-padded materialized stacks.
+#
+# The batch-grid variants prepend the batch as the OUTERMOST grid
+# dimension, exactly like the epilogue family.
+
+
+def _streaming_kernel_sw(w, scale, p_lo, t, npairs, nk, ns_a, ns_b,
+                         ahi_ref, alo_ref, aexp_ref, bhi_ref, blo_ref,
+                         bexp_ref, c_ref, o_ref, asl_ref, bsl_ref, acc_ref):
+    kk = pl.program_id(2)
+    pp = pl.program_id(3)
+
+    @pl.when(pp == 0)
+    def _split():
+        split_tile(asl_ref, ahi_ref[...], alo_ref[...], aexp_ref[...],
+                   ns_a, w)
+        split_tile(bsl_ref, bhi_ref[...], blo_ref[...], bexp_ref[...],
+                   ns_b, w)
+
+    @pl.when((kk == 0) & (pp == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        asl_ref[pl.ds(p_lo + pp, 1)][0], bsl_ref[pl.ds(t - p_lo - pp, 1)][0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when((kk == nk - 1) & (pp == npairs - 1))
+    def _epilogue():
+        c = c_ref[...]
+        o_ref[...] = c + acc_ref[...].astype(c.dtype) * jnp.asarray(
+            scale, c.dtype)
+
+
+def _streaming_kernel_dw(w, scale, p_lo, t, npairs, nk, ns_a, ns_b,
+                         ahi_ref, alo_ref, aexp_ref, bhi_ref, blo_ref,
+                         bexp_ref, chi_ref, clo_ref, ohi_ref, olo_ref,
+                         asl_ref, bsl_ref, acc_ref):
+    kk = pl.program_id(2)
+    pp = pl.program_id(3)
+
+    @pl.when(pp == 0)
+    def _split():
+        split_tile(asl_ref, ahi_ref[...], alo_ref[...], aexp_ref[...],
+                   ns_a, w)
+        split_tile(bsl_ref, bhi_ref[...], blo_ref[...], bexp_ref[...],
+                   ns_b, w)
+
+    @pl.when((kk == 0) & (pp == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        asl_ref[pl.ds(p_lo + pp, 1)][0], bsl_ref[pl.ds(t - p_lo - pp, 1)][0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when((kk == nk - 1) & (pp == npairs - 1))
+    def _epilogue():
+        n_hi, n_lo = dw_accum_step(acc_ref[...], chi_ref[...], clo_ref[...],
+                                   scale)
+        ohi_ref[...] = n_hi
+        olo_ref[...] = n_lo
+
+
+def _streaming_kernel_batched_sw(w, scale, p_lo, t, npairs, nk, ns_a, ns_b,
+                                 ahi_ref, alo_ref, aexp_ref, bhi_ref,
+                                 blo_ref, bexp_ref, c_ref, o_ref, asl_ref,
+                                 bsl_ref, acc_ref):
+    kk = pl.program_id(3)
+    pp = pl.program_id(4)
+
+    @pl.when(pp == 0)
+    def _split():
+        split_tile(asl_ref, ahi_ref[0], alo_ref[0], aexp_ref[0], ns_a, w)
+        split_tile(bsl_ref, bhi_ref[0], blo_ref[0], bexp_ref[0], ns_b, w)
+
+    @pl.when((kk == 0) & (pp == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        asl_ref[pl.ds(p_lo + pp, 1)][0], bsl_ref[pl.ds(t - p_lo - pp, 1)][0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when((kk == nk - 1) & (pp == npairs - 1))
+    def _epilogue():
+        c = c_ref[0]
+        o_ref[...] = (c + acc_ref[...].astype(c.dtype) * jnp.asarray(
+            scale, c.dtype))[None]
+
+
+def _streaming_kernel_batched_dw(w, scale, p_lo, t, npairs, nk, ns_a, ns_b,
+                                 ahi_ref, alo_ref, aexp_ref, bhi_ref,
+                                 blo_ref, bexp_ref, chi_ref, clo_ref,
+                                 ohi_ref, olo_ref, asl_ref, bsl_ref,
+                                 acc_ref):
+    kk = pl.program_id(3)
+    pp = pl.program_id(4)
+
+    @pl.when(pp == 0)
+    def _split():
+        split_tile(asl_ref, ahi_ref[0], alo_ref[0], aexp_ref[0], ns_a, w)
+        split_tile(bsl_ref, bhi_ref[0], blo_ref[0], bexp_ref[0], ns_b, w)
+
+    @pl.when((kk == 0) & (pp == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        asl_ref[pl.ds(p_lo + pp, 1)][0], bsl_ref[pl.ds(t - p_lo - pp, 1)][0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when((kk == nk - 1) & (pp == npairs - 1))
+    def _epilogue():
+        n_hi, n_lo = dw_accum_step(acc_ref[...], chi_ref[0], clo_ref[0],
+                                   scale)
+        ohi_ref[...] = n_hi[None]
+        olo_ref[...] = n_lo[None]
+
+
+_STREAMING_BATCHED = {_streaming_kernel_sw: _streaming_kernel_batched_sw,
+                      _streaming_kernel_dw: _streaming_kernel_batched_dw}
+
+
+def _streaming_launch(a_ops, b_ops, c_arrays, kernel, *, num_splits, p_lo,
+                      t, npairs, w, scale, bm, bn, bk, interpret):
+    """Shared launch recipe for both streaming variants, 2-D and batched.
+
+    a_ops/b_ops: (hi, lo, exp) operand triples — (m, k)/(m, k)/(m,) for
+    the 2-D form, (B, m, k)/(B, m, k)/(B, m) for the batch grid.
+    c_arrays: accumulator planes (1 for sw, 2 for dw), carried through
+    ``input_output_aliases``.
+    """
+    ns_a = p_lo + npairs
+    ns_b = t - p_lo + 1
+    assert 0 <= p_lo and ns_a <= num_splits, (p_lo, npairs, num_splits)
+    assert 0 <= t - p_lo - (npairs - 1) and ns_b <= num_splits, \
+        (p_lo, t, npairs, num_splits)
+    a_hi, a_lo, a_exp = a_ops
+    b_hi, b_lo, b_exp = b_ops
+    if a_hi.ndim == 3:
+        return _streaming_launch_batched(
+            a_ops, b_ops, c_arrays, _STREAMING_BATCHED[kernel],
+            ns_a=ns_a, ns_b=ns_b, p_lo=p_lo, t=t, npairs=npairs, w=w,
+            scale=scale, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    m, k = a_hi.shape
+    n, k2 = b_hi.shape
+    assert k == k2, (a_hi.shape, b_hi.shape)
+    bm_, bn_, bk_ = streaming_blocks(m, n, k, bm, bn, bk, num_splits_a=ns_a,
+                                     num_splits_b=ns_b,
+                                     el_bytes=a_hi.dtype.itemsize)
+    a_p = [pad_tail(a_hi, (bm_, bk_)), pad_tail(a_lo, (bm_, bk_)),
+           pad_tail(a_exp, (bm_,))]
+    b_p = [pad_tail(b_hi, (bn_, bk_)), pad_tail(b_lo, (bn_, bk_)),
+           pad_tail(b_exp, (bn_,))]
+    c_p = [pad_tail(c, (bm_, bn_)) for c in c_arrays]
+    mp, kp = a_p[0].shape
+    np_, _ = b_p[0].shape
+    gm, gn, gk = grid_for((mp, np_, kp), (bm_, bn_, bk_))
+    nc = len(c_p)
+    c_spec = pl.BlockSpec((bm_, bn_), lambda i, j, kk, pp: (i, j))
+    outs = pl.pallas_call(
+        functools.partial(kernel, w, scale, p_lo, t, npairs, gk, ns_a, ns_b),
+        grid=(gm, gn, gk, npairs),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk, pp: (i, kk)),
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk, pp: (i, kk)),
+            pl.BlockSpec((bm_,), lambda i, j, kk, pp: (i,)),
+            pl.BlockSpec((bn_, bk_), lambda i, j, kk, pp: (j, kk)),
+            pl.BlockSpec((bn_, bk_), lambda i, j, kk, pp: (j, kk)),
+            pl.BlockSpec((bn_,), lambda i, j, kk, pp: (j,)),
+        ] + [c_spec] * nc,
+        out_specs=[c_spec] * nc,
+        out_shape=[jax.ShapeDtypeStruct((mp, np_), c.dtype) for c in c_p],
+        scratch_shapes=[pltpu.VMEM((ns_a, bm_, bk_), jnp.int8),
+                        pltpu.VMEM((ns_b, bn_, bk_), jnp.int8),
+                        pltpu.VMEM((bm_, bn_), jnp.int32)],
+        input_output_aliases={6 + i: i for i in range(nc)},
+        interpret=interpret,
+    )(*a_p, *b_p, *c_p)
+    return [o[:m, :n] for o in outs]
+
+
+def _streaming_launch_batched(a_ops, b_ops, c_arrays, kernel, *, ns_a, ns_b,
+                              p_lo, t, npairs, w, scale, bm, bn, bk,
+                              interpret):
+    """Batch-grid streaming launch: (B, m, k) operand words, (B, m) row
+    exponents, (B, m, n) carried accumulators, batch outermost."""
+    a_hi, a_lo, a_exp = a_ops
+    b_hi, b_lo, b_exp = b_ops
+    B, m, k = a_hi.shape
+    B2, n, k2 = b_hi.shape
+    assert k == k2 and B == B2, (a_hi.shape, b_hi.shape)
+    bm_, bn_, bk_ = streaming_blocks(m, n, k, bm, bn, bk, num_splits_a=ns_a,
+                                     num_splits_b=ns_b,
+                                     el_bytes=a_hi.dtype.itemsize)
+    a_p = [pad_tail(a_hi, (bm_, bk_)), pad_tail(a_lo, (bm_, bk_)),
+           pad_tail(a_exp, (bm_,))]
+    b_p = [pad_tail(b_hi, (bn_, bk_)), pad_tail(b_lo, (bn_, bk_)),
+           pad_tail(b_exp, (bn_,))]
+    c_p = [pad_tail(c, (bm_, bn_)) for c in c_arrays]
+    _, mp, kp = a_p[0].shape
+    _, np_, _ = b_p[0].shape
+    gm, gn, gk = grid_for((mp, np_, kp), (bm_, bn_, bk_))
+    nc = len(c_p)
+    c_spec = pl.BlockSpec((1, bm_, bn_), lambda b, i, j, kk, pp: (b, i, j))
+    outs = pl.pallas_call(
+        functools.partial(kernel, w, scale, p_lo, t, npairs, gk, ns_a, ns_b),
+        grid=(B, gm, gn, gk, npairs),
+        in_specs=[
+            pl.BlockSpec((1, bm_, bk_), lambda b, i, j, kk, pp: (b, i, kk)),
+            pl.BlockSpec((1, bm_, bk_), lambda b, i, j, kk, pp: (b, i, kk)),
+            pl.BlockSpec((1, bm_), lambda b, i, j, kk, pp: (b, i)),
+            pl.BlockSpec((1, bn_, bk_), lambda b, i, j, kk, pp: (b, j, kk)),
+            pl.BlockSpec((1, bn_, bk_), lambda b, i, j, kk, pp: (b, j, kk)),
+            pl.BlockSpec((1, bn_), lambda b, i, j, kk, pp: (b, j)),
+        ] + [c_spec] * nc,
+        out_specs=[c_spec] * nc,
+        out_shape=[jax.ShapeDtypeStruct((B, mp, np_), c.dtype) for c in c_p],
+        scratch_shapes=[pltpu.VMEM((ns_a, bm_, bk_), jnp.int8),
+                        pltpu.VMEM((ns_b, bn_, bk_), jnp.int8),
+                        pltpu.VMEM((bm_, bn_), jnp.int32)],
+        input_output_aliases={6 + i: i for i in range(nc)},
+        interpret=interpret,
+    )(*a_p, *b_p, *c_p)
+    return [o[:, :m, :n] for o in outs]
+
+
+@functools.partial(jax.jit, static_argnames=("num_splits", "p_lo", "t",
+                                             "npairs", "w", "scale", "bm",
+                                             "bn", "bk", "interpret"))
+def int8_matmul_nt_streaming_sw(a_hi: jax.Array, a_lo: jax.Array,
+                                a_exp: jax.Array, b_hi: jax.Array,
+                                b_lo: jax.Array, b_exp: jax.Array,
+                                c: jax.Array, *, num_splits: int, p_lo: int,
+                                t: int, npairs: int, w: int, scale: float,
+                                bm: int = 256, bn: int = 256, bk: int = 512,
+                                interpret: bool = True) -> jax.Array:
+    """c += (sum_pp A[p_lo+pp] @ B[t-p_lo-pp].T) * scale — with the int8
+    slices extracted in VMEM from the (hi, lo, exp) operand words.
+
+    One launch covers one anti-diagonal group, exactly like the epilogue
+    variants, but no slice stack exists in HBM: (m, k)/(m,) operand
+    arrays in, (m, n) accumulator through. Batch-grid form: (B, m, k)
+    words with (B, m) exponents and a (B, m, n) accumulator.
+    """
+    (out,) = _streaming_launch((a_hi, a_lo, a_exp), (b_hi, b_lo, b_exp),
+                               [c], _streaming_kernel_sw,
+                               num_splits=num_splits, p_lo=p_lo, t=t,
+                               npairs=npairs, w=w, scale=scale, bm=bm,
+                               bn=bn, bk=bk, interpret=interpret)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("num_splits", "p_lo", "t",
+                                             "npairs", "w", "scale", "bm",
+                                             "bn", "bk", "interpret"))
+def int8_matmul_nt_streaming_dw(a_hi: jax.Array, a_lo: jax.Array,
+                                a_exp: jax.Array, b_hi: jax.Array,
+                                b_lo: jax.Array, b_exp: jax.Array,
+                                c_hi: jax.Array, c_lo: jax.Array, *,
+                                num_splits: int, p_lo: int, t: int,
+                                npairs: int, w: int, scale: float,
+                                bm: int = 256, bn: int = 256, bk: int = 512,
+                                interpret: bool = True
+                                ) -> tuple[jax.Array, jax.Array]:
+    """(c_hi, c_lo) += df32(group product) * scale, streaming-split.
+
+    The epilogue runs ``ozaki_accum.dw_accum_step`` — the identical
+    rounding sequence of every other executor — so streaming stays
+    bitwise identical to the XLA reference. Batch-grid form as in the sw
+    variant.
+    """
+    o_hi, o_lo = _streaming_launch((a_hi, a_lo, a_exp), (b_hi, b_lo, b_exp),
+                                   [c_hi, c_lo], _streaming_kernel_dw,
+                                   num_splits=num_splits, p_lo=p_lo, t=t,
+                                   npairs=npairs, w=w, scale=scale, bm=bm,
+                                   bn=bn, bk=bk, interpret=interpret)
     return o_hi, o_lo

@@ -16,12 +16,16 @@ launch parameters lower to Mosaic unchanged.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 LANE = 128          # last-dim tile multiple (all dtypes)
 SUBLANE_F32 = 8     # second-to-last multiple, 4-byte dtypes
 SUBLANE_I8 = 32     # second-to-last multiple, 1-byte dtypes
+
+VMEM_BYTES = 16 * 2 ** 20   # per-core VMEM (v4/v5 class)
 
 
 def align_up(x: int, align: int) -> int:
@@ -79,3 +83,49 @@ def int8_tile_blocks(m: int, k: int, bm: int, bk: int) -> tuple[int, int]:
 def elementwise_blocks(m: int, n: int, bm: int, bn: int) -> tuple[int, int]:
     """Blocks for elementwise (m, n) kernels over 4-byte dtypes (accum)."""
     return shrink_block(bm, m, SUBLANE_F32), shrink_block(bn, n, LANE)
+
+
+def _streaming_working_set(bm: int, bn: int, bk: int, *, num_splits_a: int,
+                           num_splits_b: int, el_bytes: int) -> int:
+    """VMEM bytes resident per streaming-GEMM grid step.
+
+    Operand tiles arrive as (hi, lo) word pairs plus per-row exponent
+    vectors; the in-kernel split lands ``num_splits_a`` / ``num_splits_b``
+    int8 slice planes in persistent scratch next to the int32 product
+    accumulator and up to two carried float accumulator planes.
+    """
+    operands = 2 * el_bytes * (bm * bk + bn * bk) + 4 * (bm + bn)
+    slices = num_splits_a * bm * bk + num_splits_b * bn * bk
+    accum = 4 * bm * bn + 2 * 2 * el_bytes * bm * bn   # int32 + in/out C
+    return operands + slices + accum
+
+
+def streaming_blocks(m: int, n: int, k: int, bm: int, bn: int, bk: int, *,
+                     num_splits_a: int, num_splits_b: int, el_bytes: int,
+                     vmem_budget: int = VMEM_BYTES // 2
+                     ) -> tuple[int, int, int]:
+    """Blocks for the streaming-split GEMM: validated against the VMEM
+    budget including the (s, bm, bk) / (s, bn, bk) slice scratches.
+
+    Starts from the standard GEMM shrink, then halves bk -> bm -> bn (to
+    their alignment floors) until the streaming working set fits. Raises
+    ``ValueError`` if even the floor tile exceeds the budget — streaming
+    needs the whole slice chain resident, so there is no smaller launch.
+    """
+    bm_, bn_, bk_ = gemm_blocks(m, n, k, bm, bn, bk)
+    ws = functools.partial(_streaming_working_set, num_splits_a=num_splits_a,
+                           num_splits_b=num_splits_b, el_bytes=el_bytes)
+    while ws(bm_, bn_, bk_) > vmem_budget:
+        if bk_ > LANE:
+            bk_ //= 2
+        elif bm_ > SUBLANE_I8:
+            bm_ //= 2
+        elif bn_ > LANE:
+            bn_ //= 2
+        else:
+            raise ValueError(
+                "streaming split cannot fit VMEM: floor tile "
+                f"({bm_}, {bn_}, {bk_}) with {num_splits_a}+{num_splits_b} "
+                f"slice planes needs {ws(bm_, bn_, bk_)} bytes "
+                f"> budget {vmem_budget}")
+    return bm_, bn_, bk_

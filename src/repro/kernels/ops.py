@@ -10,7 +10,9 @@ import jax
 
 from .int8_gemm import (int8_matmul_nt, int8_matmul_nt_batched,
                         int8_matmul_nt_epilogue_dw,
-                        int8_matmul_nt_epilogue_sw)
+                        int8_matmul_nt_epilogue_sw,
+                        int8_matmul_nt_streaming_dw,
+                        int8_matmul_nt_streaming_sw)
 from .ozaki_accum import accum_scaled_dw, accum_scaled_sw
 from .ozaki_split import fused_split_dw
 
@@ -18,5 +20,6 @@ INTERPRET = jax.default_backend() != "tpu"
 
 __all__ = ["int8_matmul_nt", "int8_matmul_nt_batched",
            "int8_matmul_nt_epilogue_dw", "int8_matmul_nt_epilogue_sw",
+           "int8_matmul_nt_streaming_dw", "int8_matmul_nt_streaming_sw",
            "fused_split_dw", "accum_scaled_dw", "accum_scaled_sw",
            "INTERPRET"]

@@ -30,11 +30,17 @@ from repro.core.xmath import two_sum
 from .launch import grid_for, int8_tile_blocks, pad_tail
 
 
-def _split_kernel(num_splits: int, w: int, hi_ref, lo_ref, exp_ref, out_ref):
-    hi = hi_ref[...]
-    lo = lo_ref[...]
-    exp = exp_ref[...]
+def split_tile(out_ref, hi, lo, exp, num_splits: int, w: int):
+    """Emit ``num_splits`` int8 slices of a (bm, bk) tile into ``out_ref``.
 
+    The extraction is elementwise per (row, col) given the (full-row)
+    exponent, so any tiling of the operand produces bitwise-identical
+    slices — the streaming GEMM kernels call this on VMEM scratch refs
+    with the same guarantee as the standalone split pass. The slice
+    chain is prefix-stable: the first p slices do not depend on how many
+    more will be extracted, so callers may size ``num_splits`` down to
+    just the prefix they consume.
+    """
     neg = (hi < 0) | ((hi == 0) & (lo < 0))
     sign = jnp.where(neg, -1, 1).astype(jnp.int8)
     a_hi = jnp.where(neg, -hi, hi)
@@ -54,6 +60,11 @@ def _split_kernel(num_splits: int, w: int, hi_ref, lo_ref, exp_ref, out_ref):
         r_hi, t1 = two_sum(f_hi, e)
         r_lo = t1 + f_e
         out_ref[p, :, :] = sign * y.astype(jnp.int8)
+
+
+def _split_kernel(num_splits: int, w: int, hi_ref, lo_ref, exp_ref, out_ref):
+    split_tile(out_ref, hi_ref[...], lo_ref[...], exp_ref[...],
+               num_splits, w)
 
 
 @functools.partial(jax.jit,

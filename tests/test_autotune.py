@@ -108,6 +108,63 @@ def test_plan_cache_missing_file_is_empty(tmp_path):
 
 
 # ----------------------------------------------------------------------------
+# PlanCache v2 metadata: the measurement MODE rides with the plan
+# ----------------------------------------------------------------------------
+
+def test_plan_cache_meta_interpret_roundtrip(tmp_path):
+    """ISSUE 6 satellite: a PlanKey used to say nothing about HOW the
+    winner was ranked — interpret-mode timings silently ranked compiled
+    runs. v2 entries persist the measurement mode."""
+    path = tmp_path / "plans.json"
+    cache = PlanCache(path)
+    cache.put(KEY, _distinct_plan(), measured_us=3.0, interpret=True)
+    assert cache.meta(KEY) == {"interpret": True}
+    cache.save()
+    back = PlanCache.load(path)
+    assert back.meta(KEY) == {"interpret": True}
+    data = json.loads(path.read_text())
+    (entry,) = data["plans"].values()
+    assert entry["meta"] == {"interpret": True}
+
+
+def test_interpret_ranked_plan_warns_compiled_consumer_once(tmp_path):
+    from repro.core.autotune import warn_if_interpret_ranked
+
+    cache = PlanCache()
+    cache.put(KEY, _distinct_plan(), interpret=True)
+    with pytest.warns(UserWarning, match="interpret mode"):
+        warn_if_interpret_ranked(cache, KEY, interpret=False)
+    import warnings
+    with warnings.catch_warnings():             # latched: once per key
+        warnings.simplefilter("error")
+        warn_if_interpret_ranked(cache, KEY, interpret=False)
+        # interpret consumers never warn, mode-matched entries never warn
+        warn_if_interpret_ranked(cache, KEY, interpret=True)
+        hw = PlanCache()
+        hw.put(KEY, _distinct_plan(), interpret=False)
+        warn_if_interpret_ranked(hw, KEY, interpret=False)
+        # absent meta (entry not produced by autotune_plan) stays silent
+        bare = PlanCache()
+        bare.put(KEY, _distinct_plan())
+        warn_if_interpret_ranked(bare, KEY, interpret=False)
+
+
+def test_autotune_records_measurement_mode(tmp_path):
+    """autotune_plan stamps its interpret mode on the persisted winner,
+    and a compiled select_pipeline_plan consuming it warns."""
+    cache = PlanCache(tmp_path / "plans.json")
+    rep = autotune_plan(8, 16, 32, accum="f64", num_splits=5, cache=cache,
+                        max_candidates=2, warmup=1, iters=1,
+                        interpret=True)
+    assert cache.meta(rep.key) == {"interpret": True}
+    with pytest.warns(UserWarning, match="interpret mode"):
+        got = select_pipeline_plan(8, 16, 32, accum="f64", num_splits=5,
+                                   cache=cache, interpret=False,
+                                   device_kind=rep.key.device_kind)
+    assert got == rep.best                      # warned, still served
+
+
+# ----------------------------------------------------------------------------
 # select_pipeline_plan x cache: hit short-circuits, miss stays analytic
 # ----------------------------------------------------------------------------
 

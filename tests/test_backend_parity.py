@@ -22,7 +22,8 @@ import numpy as np
 import pytest
 
 from repro.core.ozaki import (OzakiConfig, dgemm_f64, ozaki_matmul,
-                              ozaki_matmul_batched, ozaki_matmul_dw)
+                              ozaki_matmul_batched, ozaki_matmul_complex,
+                              ozaki_matmul_dw)
 from repro.core.tuning import select_plan
 from repro.core.xmath import df32_from_f64, df32_to_f64
 
@@ -38,6 +39,8 @@ EXECUTORS = {
     "pallas_fused": dict(backend="pallas_fused"),
     "pallas_fused_epilogue": dict(backend="pallas_fused",
                                   fuse_epilogue=True),
+    "pallas_fused_streaming": dict(backend="pallas_fused",
+                                   streaming=True),
 }
 
 
@@ -199,7 +202,8 @@ def test_pair_policy_batch_grid_parity(rng, policy):
 
 
 @pytest.mark.parametrize("executor", ["pallas_fused",
-                                      "pallas_fused_epilogue"])
+                                      "pallas_fused_epilogue",
+                                      "pallas_fused_streaming"])
 @pytest.mark.parametrize("schedule", sorted(SCHEDULES))
 def test_backend_parity_dw_native(rng, schedule, executor):
     """TPU-native df32 entry: fused pipelines == XLA pipeline bitwise."""
@@ -226,6 +230,43 @@ def test_parity_with_tuned_plan(rng):
     # tile/schedule changes regroup exact int32 sums only
     ref = np.asarray(dgemm_f64(a, b))
     _assert_within_one_ulp_of_ref(got, base, ref)
+
+
+# complex pipelines x pair truncation x fused executors: truncation is a
+# schedule property, so it must compose with BOTH complex algorithms
+# (4-mul paper form, 3-mul Karatsuba) and with every fused executor,
+# bitwise against xla under the same knobs.
+@pytest.mark.parametrize("executor", ["pallas_fused_epilogue",
+                                      "pallas_fused_streaming"])
+@pytest.mark.parametrize("algo", ["4mul", "3mul"])
+@pytest.mark.parametrize("policy", ["diagonal", "budget:7"])
+def test_complex_pair_policy_parity(rng, executor, algo, policy):
+    a = _phi_matrix(rng, 12, 48) + 1j * np.asarray(_phi_matrix(rng, 12, 48))
+    b = _phi_matrix(rng, 48, 10) + 1j * np.asarray(_phi_matrix(rng, 48, 10))
+    kw = dict(num_splits=9, pair_policy=policy)
+    base = np.asarray(ozaki_matmul_complex(
+        a, b, OzakiConfig(backend="xla", **kw), algo=algo))
+    got = np.asarray(ozaki_matmul_complex(
+        a, b, OzakiConfig(interpret=True, **EXECUTORS[executor], **kw),
+        algo=algo))
+    np.testing.assert_array_equal(got, base)
+
+
+@pytest.mark.parametrize("executor", ["pallas_fused_epilogue",
+                                      "pallas_fused_streaming"])
+@pytest.mark.parametrize("algo", ["4mul", "3mul"])
+def test_complex_fast_mode_parity(rng, executor, algo):
+    """fast_mode (accuracy-adaptive truncation) composes with the complex
+    pipelines on the fused executors — bitwise vs xla, same knobs."""
+    a = _phi_matrix(rng, 12, 48) + 1j * np.asarray(_phi_matrix(rng, 12, 48))
+    b = _phi_matrix(rng, 48, 10) + 1j * np.asarray(_phi_matrix(rng, 48, 10))
+    kw = dict(num_splits=9, fast_mode=True, target_error=1e-20)
+    base = np.asarray(ozaki_matmul_complex(
+        a, b, OzakiConfig(backend="xla", **kw), algo=algo))
+    got = np.asarray(ozaki_matmul_complex(
+        a, b, OzakiConfig(interpret=True, **EXECUTORS[executor], **kw),
+        algo=algo))
+    np.testing.assert_array_equal(got, base)
 
 
 def test_unknown_backend_raises(rng):

@@ -1,0 +1,117 @@
+"""``api._PLAN_CACHE_MEMO`` regression tests (ISSUE 6 satellite).
+
+The per-path PlanCache memo used to be an unbounded plain dict mutated
+with no lock: a serving process cycling through many per-model cache
+paths grew it forever, and two threads racing the check-then-insert
+could interleave. The memo is now an LRU bounded at
+``_PLAN_CACHE_MEMO_MAX`` entries, mutated only under
+``_PLAN_CACHE_LOCK``.
+"""
+import json
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.core.autotune import PlanCache, plan_cache_key
+from repro.core.tuning import select_pipeline_plan
+
+
+def _seed_cache_file(path, m, n, k, num_splits):
+    cache = PlanCache(path)
+    cache.put(plan_cache_key(m, n, k, accum="f64"),
+              select_pipeline_plan(m, n, k, accum="f64",
+                                   num_splits=num_splits))
+    cache.save()
+    return str(path)
+
+
+def test_plan_cache_memo_is_bounded(tmp_path):
+    api._PLAN_CACHE_MEMO.clear()
+    paths = [str(tmp_path / f"plans_{i}.json") for i in range(40)]
+    for p in paths:
+        api._load_plan_cache(p)          # missing files memoize as empty
+    assert len(api._PLAN_CACHE_MEMO) <= api._PLAN_CACHE_MEMO_MAX
+    # LRU: the most recently used paths are the survivors
+    assert paths[-1] in api._PLAN_CACHE_MEMO
+    assert paths[0] not in api._PLAN_CACHE_MEMO
+    # a hit refreshes recency instead of reloading
+    survivor = next(iter(api._PLAN_CACHE_MEMO))
+    hit = api._load_plan_cache(survivor)
+    assert api._load_plan_cache(survivor) is hit
+
+
+def test_plan_cache_memo_reloads_on_file_change(tmp_path):
+    """The mtime guard survives the LRU rewrite: a rewritten file must be
+    re-read, an untouched one must stay memoized."""
+    api._PLAN_CACHE_MEMO.clear()
+    path = _seed_cache_file(tmp_path / "plans.json", 8, 16, 32, 5)
+    first = api._load_plan_cache(path)
+    assert api._load_plan_cache(path) is first
+    data = json.loads(open(path).read())
+    import os
+    with open(path, "w") as f:
+        json.dump(data, f)
+    os.utime(path, ns=(1, 1))            # force a distinct mtime_ns
+    second = api._load_plan_cache(path)
+    assert second is not first
+
+
+def test_matmul_two_threads_distinct_cache_paths(tmp_path, rng):
+    """Two threads hammering ``repro.matmul`` under policies naming
+    DISTINCT plan-cache paths: no race in the memo, every result bitwise
+    equal to the single-threaded uncached run."""
+    api._PLAN_CACHE_MEMO.clear()
+    m, n, k = 16, 16, 48
+    path_a = _seed_cache_file(tmp_path / "a.json", m, n, k, 5)
+    path_b = _seed_cache_file(tmp_path / "b.json", m, n, k, 5)
+    a = jnp.asarray(rng.standard_normal((m, k)))
+    b = jnp.asarray(rng.standard_normal((k, n)))
+    ref = np.asarray(api.matmul(a, b, "ozaki-fp64x5"))
+    errors = []
+    barrier = threading.Barrier(2)
+
+    def worker(path):
+        try:
+            barrier.wait(timeout=30)
+            for _ in range(8):
+                got = api.matmul(a, b, f"ozaki-fp64x5|cache={path}")
+                np.testing.assert_array_equal(np.asarray(got), ref)
+        except Exception as e:                   # surfaced to the main thread
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(p,))
+               for p in (path_a, path_b)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors
+    assert not any(t.is_alive() for t in threads)
+    assert len(api._PLAN_CACHE_MEMO) <= api._PLAN_CACHE_MEMO_MAX
+
+
+def test_load_plan_cache_concurrent_churn(tmp_path):
+    """Many threads loading MANY distinct paths concurrently: the bound
+    holds and no insert is lost mid-eviction (the original dict raced
+    check-then-insert)."""
+    api._PLAN_CACHE_MEMO.clear()
+    errors = []
+    barrier = threading.Barrier(4)
+
+    def worker(tid):
+        try:
+            barrier.wait(timeout=30)
+            for i in range(25):
+                api._load_plan_cache(str(tmp_path / f"c{tid}_{i}.json"))
+        except Exception as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors, errors
+    assert len(api._PLAN_CACHE_MEMO) <= api._PLAN_CACHE_MEMO_MAX

@@ -82,7 +82,11 @@ def test_pipeline_plan_validation():
     plan = PipelinePlan(backend="pallas_fused", fusion="epilogue",
                         batch_layout="grid")
     assert plan.fusion == "epilogue"
-    assert set(FUSION_MODES) == {"none", "stages", "epilogue"}
+    # so is streaming + grid (the batch-grid streaming kernel)
+    plan = PipelinePlan(backend="pallas_fused", fusion="streaming",
+                        batch_layout="grid")
+    assert plan.fusion == "streaming"
+    assert set(FUSION_MODES) == {"none", "stages", "epilogue", "streaming"}
     assert set(BATCH_LAYOUTS) == {"none", "rows", "grid"}
 
 
@@ -99,6 +103,12 @@ def test_plan_for_reflects_config():
     assert plan_for(OzakiConfig(backend="xla")).fusion == "none"
     assert plan_for(OzakiConfig(backend="pallas",
                                 fuse_epilogue=True)).fusion == "none"
+    # streaming wins the fusion slot on the fused backend, any layout
+    scfg = OzakiConfig(backend="pallas_fused", streaming=True)
+    assert plan_for(scfg).fusion == "streaming"
+    assert plan_for(scfg, batch_layout="grid").fusion == "streaming"
+    assert plan_for(OzakiConfig(backend="pallas",
+                                streaming=True)).fusion == "none"
 
 
 def test_plan_for_keeps_explicit_tile_blocks():
@@ -134,6 +144,8 @@ def test_apply_pipeline_plan_roundtrip():
                          accum="df32", shard_axis="model"),
     select_pipeline_plan(9, 65, 129, batch=3, backend="pallas",
                          fuse_epilogue=False, interpret=False),
+    select_pipeline_plan(64, 64, 256, streaming=True),
+    select_pipeline_plan(8, 64, 256, batch=32, streaming=True),
 ])
 def test_pipeline_plan_json_roundtrip(plan):
     wire = json.dumps(plan.to_dict())
@@ -165,6 +177,16 @@ def test_select_pipeline_plan_accuracy_knobs():
     assert plan_for(cfg) == targeted
 
 
+def test_streaming_plan_config_roundtrip():
+    """streaming plan <-> OzakiConfig survives apply/plan_for round trip."""
+    plan = select_pipeline_plan(64, 32, 512, streaming=True)
+    assert plan.fusion == "streaming"
+    cfg = apply_pipeline_plan(OzakiConfig(), plan)
+    assert cfg.streaming and not cfg.fuse_epilogue
+    assert cfg.backend == "pallas_fused"
+    assert plan_for(cfg) == plan
+
+
 def test_diagonal_groups_pair_budget():
     full = diagonal_groups(5)
     assert sum(len(p) for _, p in full) == 15
@@ -178,7 +200,7 @@ def test_diagonal_groups_pair_budget():
 
 
 # ----------------------------------------------------------------------------
-# HBM pass model: epilogue < stage-fused < unfused, for every s
+# HBM pass model: streaming < epilogue < stage-fused < unfused, every s
 # ----------------------------------------------------------------------------
 
 @pytest.mark.parametrize("s", [5, 9, 13])
@@ -189,19 +211,42 @@ def test_hbm_pass_model_epilogue_strictly_fewer(s):
     assert epilogue["total"] < stages["total"] < unfused["total"]
     assert epilogue["split"] == stages["split"] == 1
     assert epilogue["accum"] == 2 * s       # read C + write C per group
+    # every mode pays the slice-stack traffic (the line item the model
+    # used to hide): s slice writes + one read per kept pair per operand
+    kept = s * (s + 1) // 2
+    assert unfused["slices"] == stages["slices"] == \
+        epilogue["slices"] == s + kept
+
+
+@pytest.mark.parametrize("s", [5, 9, 13])
+@pytest.mark.parametrize("pair_policy", ["full", "diagonal", "budget:6"])
+def test_hbm_pass_model_streaming_strictly_fewer(s, pair_policy):
+    """ISSUE 6 acceptance: streaming beats EVERY non-streaming mode on
+    total passes once the slices line item is charged, and models the
+    slice stack as never touching HBM."""
+    streaming = hbm_pass_model(s, fusion="streaming",
+                               pair_policy=pair_policy)
+    assert streaming["slices"] == 0
+    for kw in (dict(fused=False), dict(fused=True),
+               dict(fused=True, fuse_epilogue=True)):
+        other = hbm_pass_model(s, pair_policy=pair_policy, **kw)
+        assert streaming["total"] < other["total"], (s, pair_policy, kw)
 
 
 # regression pins for every (fusion mode, batch layout) combination at
 # s=9: per-element counts are layout-invariant (the "rows" fold and the
 # batch-grid kernels run the identical per-element pipeline — including
-# the batch-grid EPILOGUE kernel, which removes the modeled 3-vs-2
-# passes per group the old stage-fused downgrade cost stacked batches),
-# and scale linearly with the batch size.
+# the batch-grid EPILOGUE and STREAMING kernels, which remove the
+# modeled 3-vs-2 passes per group the old stage-fused downgrade cost
+# stacked batches), and scale linearly with the batch size. Columns:
+# (split, slices, accum, total); streaming re-reads operands per group
+# (split=s) but its int8 slice stack never touches HBM (slices=0).
 _FUSIONS = {"none": dict(fused=False),
             "stages": dict(fused=True),
-            "epilogue": dict(fused=True, fuse_epilogue=True)}
-_PINNED_S9 = {"none": (9, 45, 54), "stages": (1, 27, 28),
-              "epilogue": (1, 18, 19)}
+            "epilogue": dict(fused=True, fuse_epilogue=True),
+            "streaming": dict(fusion="streaming")}
+_PINNED_S9 = {"none": (9, 54, 45, 108), "stages": (1, 54, 27, 82),
+              "epilogue": (1, 54, 18, 73), "streaming": (9, 0, 18, 27)}
 
 
 @pytest.mark.parametrize("layout,batch", [("none", 1), ("rows", 1),
@@ -211,9 +256,9 @@ _PINNED_S9 = {"none": (9, 45, 54), "stages": (1, 27, 28),
 def test_hbm_pass_model_matrix_pinned(fusion, layout, batch):
     got = hbm_pass_model(9, batch=batch, batch_layout=layout,
                          **_FUSIONS[fusion])
-    split, accum, total = (batch * x for x in _PINNED_S9[fusion])
-    assert got == {"split": split, "accum": accum, "total": total}, \
-        (fusion, layout, batch, got)
+    split, slices, accum, total = (batch * x for x in _PINNED_S9[fusion])
+    assert got == {"split": split, "slices": slices, "accum": accum,
+                   "total": total}, (fusion, layout, batch, got)
 
 
 def test_hbm_pass_model_batched_epilogue_closes_fusion_gap():

@@ -121,6 +121,8 @@ def plan_gemm(m: int, n: int, k: int, **kwargs):
             kwargs.setdefault("pair_policy", pol.pair_policy)
         if pol.shard_axis is not None:
             kwargs.setdefault("shard_axis", pol.shard_axis)
+        if pol.comm != "f64":
+            kwargs.setdefault("comm", pol.comm)
     return select_pipeline_plan(m, n, k, cache=CONTEXT.plan_cache,
                                 autotune=CONTEXT.autotune, **kwargs)
 

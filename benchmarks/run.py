@@ -31,10 +31,10 @@ def main(argv=None) -> None:
     common.configure_from_args(args)
 
     print(common.CSV_HEADER)
-    from . import (bench_fig4_analytic, bench_fig6_accuracy,
-                   bench_fig7_zerocancel, bench_fig8_throughput,
-                   bench_fused_pipeline, bench_quantum_sim,
-                   bench_serve_latency)
+    from . import (bench_distributed, bench_fig4_analytic,
+                   bench_fig6_accuracy, bench_fig7_zerocancel,
+                   bench_fig8_throughput, bench_fused_pipeline,
+                   bench_quantum_sim, bench_serve_latency)
     bench_fig4_analytic.run()
     bench_fig6_accuracy.run()
     bench_fig7_zerocancel.run()
@@ -42,6 +42,7 @@ def main(argv=None) -> None:
     bench_fused_pipeline.run()
     bench_quantum_sim.run()
     bench_serve_latency.run()
+    bench_distributed.run()
     if common.CONTEXT.plan_cache is not None:
         common.CONTEXT.plan_cache.save()
 

@@ -26,7 +26,8 @@ module collapses all of it into two objects:
                  ["/" BACKEND ["+epilogue" | "+streaming"]] ("|" OPTION)*
       MODES   := MODE ("," MODE)*   MODE := "fast" | "full" | "diagonal"
                                           | "budget:" N
-      OPTION  := "shard=" AXIS | "cache=" PATH | "autotune"
+      OPTION  := "shard=" AXIS | "comm=" ("f64" | "int8")
+                 | "cache=" PATH | "autotune"
 
 * ``matmul(a, b, precision=...)`` — one entry point dispatching on
   rank/dtype/DW-ness to the existing pipelines (which stay the
@@ -96,6 +97,11 @@ class MatmulPolicy:
                    ``target_error`` (or drop the last anti-diagonal).
     pair_policy:   "full" | "diagonal" | "budget:N" explicit truncation.
     shard_axis:    mesh axis to k-shard over (``parallel.ozaki_shard``).
+    comm:          "f64" | "int8" — what sharded calls move over the
+                   interconnect: f64 operand words (GSPMD baseline) or
+                   the packed int8-slice representation + exact int32
+                   partials (``|comm=int8``; ~8x fewer bytes on k-shard
+                   layouts, bitwise-identical results).
     plan_cache:    path of a persistent ``core.autotune.PlanCache`` —
                    tuned launch plans (result-invariant fields only) are
                    applied to matching shapes.
@@ -113,17 +119,21 @@ class MatmulPolicy:
     fast_mode: bool = False
     pair_policy: str = "full"
     shard_axis: Optional[str] = None
+    comm: str = "f64"
     plan_cache: Optional[str] = None
     autotune: bool = False
 
     def __post_init__(self):
-        from repro.core.tuning import BACKENDS
+        from repro.core.tuning import BACKENDS, COMM_MODES
         if self.scheme not in SCHEMES:
             raise ValueError(f"unknown scheme {self.scheme!r}; expected "
                              f"one of {SCHEMES}")
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; expected "
                              f"one of {BACKENDS}")
+        if self.comm not in COMM_MODES:
+            raise ValueError(f"unknown comm {self.comm!r}; expected one "
+                             f"of {COMM_MODES}")
         if self.num_splits is not None and self.num_splits < 1:
             raise ValueError(f"num_splits must be >= 1, got "
                              f"{self.num_splits}")
@@ -161,6 +171,8 @@ class MatmulPolicy:
                 ("+streaming" if self.streaming else "")
         if self.shard_axis:
             s += f"|shard={self.shard_axis}"
+        if self.comm != "f64":
+            s += f"|comm={self.comm}"
         if self.plan_cache:
             s += f"|cache={self.plan_cache}"
         if self.autotune:
@@ -223,7 +235,7 @@ class MatmulPolicy:
             streaming=self.streaming,
             pair_policy=self.pair_policy, target_error=self.target_error,
             fast_mode=self.fast_mode, shard_axis=self.shard_axis,
-            fuse_diagonals=True, interpret=interpret)
+            comm=self.comm, fuse_diagonals=True, interpret=interpret)
 
 
 @functools.lru_cache(maxsize=1)
@@ -265,11 +277,14 @@ def _parse_spec(spec: str) -> MatmulPolicy:
             kw["autotune"] = True
         elif opt.startswith("shard="):
             kw["shard_axis"] = opt[len("shard="):] or None
+        elif opt.startswith("comm="):
+            kw["comm"] = opt[len("comm="):]
         elif opt.startswith("cache="):
             kw["plan_cache"] = opt[len("cache="):] or None
         else:
             raise ValueError(f"unknown policy option {opt!r} in {spec!r}; "
-                             f"expected shard=AXIS, cache=PATH, autotune")
+                             f"expected shard=AXIS, comm=MODE, cache=PATH, "
+                             f"autotune")
 
     if "/" in core:
         core, backend = core.split("/", 1)
@@ -540,10 +555,24 @@ def _matmul_ozaki_dispatch(a, b, pol: MatmulPolicy):
     m, k = a.shape
     n = b.shape[-1]
     if pol.shard_axis:
+        from repro.parallel.ozaki_shard import (active_shard_mesh,
+                                                constrain_batched_kshard,
+                                                distributed_ozaki_matmul)
+        mesh = active_shard_mesh()
+        if pol.comm == "int8" and mesh is not None and \
+                pol.shard_axis in mesh.axis_names and \
+                a.dtype == jnp.float64 and \
+                k % mesh.shape[pol.shard_axis] == 0:
+            # |comm=int8: run the explicit int8-slice collective
+            # schedule instead of GSPMD f64-operand sharding — exact
+            # int32 psum of the pair partials, bitwise-identical to the
+            # unsharded reference for any mesh shape.
+            cfg = pol.ozaki_config(k, accum="f64")
+            return distributed_ozaki_matmul(a, b, mesh, cfg,
+                                            axis=pol.shard_axis)
         # same composition point as models/layers: pin the reduction dim
         # to the registered shard mesh on plain 2-D calls (the path
         # verified bitwise-safe); silently a no-op without a mesh.
-        from repro.parallel.ozaki_shard import constrain_batched_kshard
         a, b = constrain_batched_kshard(a, b, pol.shard_axis)
     cache = _active_plan_cache(pol)
     if a.dtype == jnp.float64:

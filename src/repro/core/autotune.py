@@ -352,6 +352,7 @@ def candidate_plans(m: int, n: int, k: int, *, batch: int = 1,
                     fuse_epilogue: bool = True,
                     streaming: bool = False,
                     shard_axis: Optional[str] = None,
+                    comm: str = "f64",
                     interpret: bool = True,
                     search_num_splits: int = 0,
                     target_error: Optional[float] = None,
@@ -384,7 +385,7 @@ def candidate_plans(m: int, n: int, k: int, *, batch: int = 1,
         m, n, k, batch=batch, broadcast_weights=broadcast_weights,
         backend=backend, accum=accum, num_splits=num_splits,
         fuse_epilogue=fuse_epilogue, streaming=streaming,
-        shard_axis=shard_axis,
+        shard_axis=shard_axis, comm=comm,
         interpret=interpret, target_error=target_error,
         fast_mode=fast_mode, pair_policy=pair_policy, **analytic_kwargs)
     cands = [base]
@@ -400,6 +401,16 @@ def candidate_plans(m: int, n: int, k: int, *, batch: int = 1,
         for flip in ("stages", "epilogue", "streaming"):
             if flip != base.fusion:
                 add(dataclasses.replace(base, fusion=flip))
+
+    # comm-transport flip (sharded shapes only): both transports are
+    # bitwise-equal to the single-device reference (integer collectives
+    # are associative), so the measurement is free to pick either — on
+    # a single-device measurement host the flip is a no-op to execute
+    # but the cached winner carries the transport for the deployment
+    if base.shard_axis is not None:
+        for flip in ("f64", "int8"):
+            if flip != base.comm:
+                add(dataclasses.replace(base, comm=flip))
 
     # concat_k flip: exact int32 regrouping; never for a stacked batch
     # (the concatenated operands would materialize once per batch row)
@@ -536,7 +547,8 @@ def autotune_plan(m: int, n: int, k: int, *, batch: int = 1,
                   num_splits: Optional[int] = None,
                   fuse_epilogue: bool = True,
                   streaming: bool = False,
-                  shard_axis: Optional[str] = None, interpret: bool = True,
+                  shard_axis: Optional[str] = None,
+                  comm: str = "f64", interpret: bool = True,
                   target_error: Optional[float] = None,
                   fast_mode: bool = False,
                   pair_policy: Optional[str] = None,
@@ -593,7 +605,7 @@ def autotune_plan(m: int, n: int, k: int, *, batch: int = 1,
             m, n, k, batch=batch, broadcast_weights=broadcast_weights,
             backend=backend, accum=accum, num_splits=num_splits,
             fuse_epilogue=fuse_epilogue, streaming=streaming,
-            shard_axis=shard_axis,
+            shard_axis=shard_axis, comm=comm,
             interpret=interpret, target_error=target_error,
             pair_policy=pair_policy, max_candidates=max_candidates,
             **analytic_kwargs)

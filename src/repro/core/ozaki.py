@@ -113,6 +113,11 @@ class OzakiConfig:
         is set). An explicit non-"full" ``pair_policy`` wins over it.
     shard_axis: mesh axis name to shard the reduction (k) dim over, or
         None. Consumed by ``parallel.ozaki_shard`` / the serving layer.
+    comm: "f64" (GSPMD moves f64 operand words around the sharded GEMM)
+        | "int8" (ship the packed int8-slice representation / exact
+        int32 partials instead — ``parallel.ozaki_shard`` explicit
+        collective schedules). Result-invariant; ignored unless a shard
+        axis and mesh are in play.
     ell_acc / ell_in: accumulator / input mantissa widths (Table 2).
     interpret: run Pallas kernels in interpret mode (CPU validation).
     tile: optional TilePlan with per-stage block shapes (core.tuning).
@@ -130,6 +135,7 @@ class OzakiConfig:
     target_error: Optional[float] = None
     fast_mode: bool = False
     shard_axis: Optional[str] = None
+    comm: str = "f64"
     ell_acc: int = 31
     ell_in: int = 7
     interpret: bool = True

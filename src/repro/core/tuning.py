@@ -76,6 +76,15 @@ CONCAT_K_MAX = 2048                 # below this, slice GEMMs are launch-bound
 BACKENDS = ("xla", "pallas", "pallas_fused")
 FUSION_MODES = ("none", "stages", "epilogue", "streaming")
 BATCH_LAYOUTS = ("none", "rows", "grid")
+# What crosses the interconnect when the GEMM is sharded: "f64" moves
+# f64 operand words (the GSPMD auto-sharding baseline gathers operands
+# around the opaque kernels), "int8" ships the quantized Ozaki
+# representation itself — packed int8 slice stacks + int32 exponent
+# vectors for gathers, exact int32 pair partials for reductions
+# (parallel.compression.SliceWire / parallel.ozaki_shard schedules).
+# Result-invariant: every transport is bitwise-identical to the
+# single-device reference (integer collectives are associative).
+COMM_MODES = ("f64", "int8")
 # Fast-mode pair truncation (see core.accuracy): "full" keeps the whole
 # schedule; "diagonal" drops the last (least-significant) anti-diagonal
 # group; "budget:N" keeps only the N highest-significance pairs. The
@@ -312,6 +321,12 @@ class PipelinePlan:
                   None. Consumed by ``parallel.ozaki_shard`` composition
                   and the model/serving layers; the executors themselves
                   stay single-device (GSPMD inserts the collectives).
+    comm:         "f64" — sharded calls move f64 operand words (GSPMD
+                  baseline); "int8" — ship the packed int8-slice
+                  representation / exact int32 partials instead
+                  (``parallel.ozaki_shard`` explicit schedules;
+                  ``comm_bytes_model`` prices both). Result-invariant:
+                  a no-op without a shard axis + registered mesh.
     pair_policy:  "full" | "diagonal" | "budget:N" — fast-mode pair
                   truncation (``core.accuracy`` bounds the error). The
                   policy shapes ``diagonals()``, so every executor and
@@ -326,6 +341,7 @@ class PipelinePlan:
     fusion: str = "none"
     batch_layout: str = "none"
     shard_axis: Optional[str] = None
+    comm: str = "f64"
     pair_policy: str = "full"
     fuse_diagonals: bool = True
     concat_k: bool = False
@@ -345,6 +361,9 @@ class PipelinePlan:
                              f"expected one of {BATCH_LAYOUTS}")
         if self.accum not in ("f64", "df32"):
             raise ValueError(f"unknown accum {self.accum!r}")
+        if self.comm not in COMM_MODES:
+            raise ValueError(f"unknown comm {self.comm!r}; "
+                             f"expected one of {COMM_MODES}")
         parse_pair_policy(self.pair_policy, self.num_splits,
                           self.full_pairs)       # raises on malformed
 
@@ -414,6 +433,7 @@ def plan_for(cfg, *, batch_layout: str = "none") -> PipelinePlan:
                            streaming=getattr(cfg, "streaming", False)),
         batch_layout=batch_layout,
         shard_axis=getattr(cfg, "shard_axis", None),
+        comm=getattr(cfg, "comm", "f64"),
         pair_policy=getattr(cfg, "pair_policy", "full"),
         fuse_diagonals=cfg.fuse_diagonals, concat_k=cfg.concat_k,
         full_pairs=cfg.full_pairs, accum=cfg.accum, interpret=cfg.interpret)
@@ -440,6 +460,7 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
                          fuse_epilogue: bool = True,
                          streaming: bool = False,
                          shard_axis: Optional[str] = None,
+                         comm: str = "f64",
                          interpret: bool = True,
                          target_error: Optional[float] = None,
                          fast_mode: bool = False,
@@ -522,7 +543,7 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
                 m, n, k, batch=batch, broadcast_weights=broadcast_weights,
                 backend=backend, accum=accum, num_splits=num_splits,
                 fuse_epilogue=fuse_epilogue, streaming=streaming,
-                shard_axis=shard_axis,
+                shard_axis=shard_axis, comm=comm,
                 interpret=interpret, target_error=target_error,
                 pair_policy=policy if accuracy_pinned else None,
                 dtype=dtype, device_kind=device_kind,
@@ -536,7 +557,8 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
         num_splits=tile.num_splits, tile=tile, backend=backend,
         fusion=_fusion_for(backend, fuse_epilogue, layout,
                            streaming=streaming),
-        batch_layout=layout, shard_axis=shard_axis, pair_policy=policy,
+        batch_layout=layout, shard_axis=shard_axis, comm=comm,
+        pair_policy=policy,
         fuse_diagonals=tile.fuse_diagonals, concat_k=tile.concat_k,
         accum=accum, interpret=interpret)
 
@@ -550,7 +572,8 @@ def apply_pipeline_plan(cfg, plan: PipelinePlan):
         fuse_epilogue=(plan.fusion == "epilogue"),
         streaming=(plan.fusion == "streaming"),
         pair_policy=plan.pair_policy,
-        shard_axis=plan.shard_axis, interpret=plan.interpret)
+        shard_axis=plan.shard_axis, comm=plan.comm,
+        interpret=plan.interpret)
 
 
 def hbm_pass_model(num_splits: int, *, fused: bool = False,
@@ -657,3 +680,93 @@ def hbm_pass_model(num_splits: int, *, fused: bool = False,
     return {"split": split_passes, "slices": slices_passes,
             "accum": accum_passes,
             "total": split_passes + slices_passes + accum_passes}
+
+
+def comm_bytes_model(m: int, n: int, k: int, *, num_splits: int,
+                     world: int, layout: str = "kshard",
+                     comm: str = "f64", schedule: str = "psum",
+                     batch: int = 1, fuse_diagonals: bool = True,
+                     full_pairs: bool = False,
+                     pair_policy: str = "full") -> dict:
+    """Modeled per-device interconnect bytes for one sharded GEMM — the
+    ``hbm_pass_model`` companion for the transport layer.
+
+    Counts the bytes ONE device sends over the links (ring-schedule
+    accounting: an all-gather/reduce-scatter of a V-byte global buffer
+    moves ``(P-1)/P * V`` bytes per device; an all-reduce moves twice
+    that — reduce-scatter + all-gather). ``batch`` scales the
+    activation-side items linearly (broadcast weights cross once).
+
+    Layouts and what each transport moves:
+
+    * ``layout="kshard"`` — the reduction dim is sharded.
+
+      - ``comm="f64"`` (the GSPMD auto-sharding baseline): the Pallas
+        kernel calls are opaque to the SPMD partitioner, so the jitted
+        pipeline all-gathers BOTH f64 operands before computing —
+        ``(P-1)/P * 8 * (m*k + k*n)`` bytes. This is exactly what
+        ``ozaki_matmul_kshard_auto`` pays today.
+      - ``comm="int8"``: slices stay device-local (each device splits
+        only its k-chunk); what crosses the mesh is the exact int32
+        anti-diagonal partials (4 bytes x ``groups`` x ``m*n``) plus
+        two int32 exponent pmaxes. ``schedule="psum"``/``"overlap"``
+        all-reduce the partials (2x factor); ``"reduce_scatter"``/
+        ``"rs_stream"`` halve that by leaving C column-sharded.
+
+    * ``layout="mnshard"`` — A row-sharded, B column-sharded; full k
+      local. B's representation is all-gathered so every device can
+      compute its row block against all columns:
+
+      - ``comm="f64"``: gather B operand words, ``(P-1)/P * 8 * k*n``.
+      - ``comm="int8"``: gather the packed ``SliceWire`` — int8 slice
+        stack + int32 exponents, ``(P-1)/P * (s * k*n + 4*n)``.
+
+      The model is honest about where int8 loses: the slice stack costs
+      ``s`` bytes per element vs f64's 8, so the m/n-shard gather only
+      wins for ``s < 8`` (e.g. ``target_error``-reduced split counts) —
+      the headline >= 6x win is the k-shard layout's, where the int8
+      path moves NO operand words at all and tall-k shapes amortize the
+      ``m*n`` partials against the ``(m + n) * k`` operand gather.
+
+    Returns per-item bytes: ``operands`` (f64 words), ``slices`` (int8
+    stacks), ``exponents`` (int32 vectors), ``partials`` (int32 group
+    products), and ``total``.
+    """
+    if layout not in ("kshard", "mnshard"):
+        raise ValueError(f"unknown layout {layout!r}; expected 'kshard' "
+                         f"or 'mnshard'")
+    if comm not in COMM_MODES:
+        raise ValueError(f"unknown comm {comm!r}; expected one of "
+                         f"{COMM_MODES}")
+    if schedule not in ("psum", "overlap", "reduce_scatter", "rs_stream",
+                        "allgather"):
+        raise ValueError(f"unknown schedule {schedule!r}")
+    if world < 1:
+        raise ValueError(f"world must be >= 1, got {world}")
+    ring = (world - 1) / world           # per-device ring fraction
+    s = num_splits
+    gl = diagonal_groups(s, full_pairs,
+                         pair_budget=parse_pair_policy(pair_policy, s,
+                                                       full_pairs))
+    groups = len(gl) if fuse_diagonals else sum(len(p) for _, p in gl)
+    operands = slices = exponents = partials = 0.0
+    if layout == "kshard":
+        if comm == "f64":
+            # GSPMD gathers both operands around the opaque kernels
+            operands = ring * 8 * (batch * m * k + k * n)
+        else:
+            # int32 exponent pmax (all-reduce) over both row vectors
+            exponents = 2 * ring * 4 * (batch * m + n)
+            # exact int32 anti-diagonal partials; all-reduce costs 2x a
+            # reduce-scatter (reduce-scatter + all-gather phases)
+            factor = 2 if schedule in ("psum", "overlap") else 1
+            partials = factor * ring * 4 * groups * batch * m * n
+    else:                                # mnshard: gather B's columns
+        if comm == "f64":
+            operands = ring * 8 * k * n
+        else:
+            slices = ring * s * k * n
+            exponents = ring * 4 * n
+    total = operands + slices + exponents + partials
+    return {"operands": operands, "slices": slices,
+            "exponents": exponents, "partials": partials, "total": total}

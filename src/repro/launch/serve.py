@@ -32,7 +32,9 @@ def main():
                     help="matmul policy spec for this engine (the one "
                          "front door; repro.api.MatmulPolicy), e.g. "
                          "'ozaki-fp64@1e-25:fast/pallas_fused+epilogue"
-                         "|cache=plans.json|autotune'. Subsumes (and "
+                         "|cache=plans.json|autotune'; add "
+                         "'|shard=model|comm=int8' for the int8-slice "
+                         "collective transport on a mesh. Subsumes (and "
                          "cannot be combined with) --precision/"
                          "--target-error/--fast-mode; --plan-cache/"
                          "--autotune stay combinable and override the "

@@ -1,14 +1,24 @@
-"""int8 gradient compression with error feedback (distributed-opt trick).
+"""int8 wire formats for the mesh: the Ozaki slice transport and the
+EF-SGD gradient compressor.
 
-The gradient all-reduce is replaced by: quantize local grad to int8
-against a global per-tensor scale (pmax), *exact* int32 psum of the
-quantized values (associative -> reproducible), dequantize. The
-quantization residual is fed back into the next step's gradient (error
-feedback), so the compression error stays O(1) over training instead of
-accumulating — the standard EF-SGD guarantee.
+Two distinct kinds of "int8 on the wire" live here:
 
-Off by default; enabled per-run (``--grad-compression int8``). The Ozaki
-exactness paths never enable it (DESIGN.md §4).
+* ``SliceWire`` — **lossless**. The Ozaki operands already *are* exact
+  int8 mantissa slices + per-row power-of-two exponents, so shipping
+  the packed representation across the mesh moves ``s`` bytes per
+  element instead of the 8 an f64 operand costs — with zero rounding
+  anywhere (pack/unpack are pure transposes). ``parallel.ozaki_shard``
+  all-gathers ``SliceWire`` stacks for m/n-sharded layouts; the
+  byte accounting feeds ``core.tuning.comm_bytes_model``.
+* ``compress_psum`` — **lossy** (EF-SGD). The gradient all-reduce is
+  replaced by: quantize local grad to int8 against a global per-tensor
+  scale (pmax), *exact* int32 psum of the quantized values (associative
+  -> reproducible), dequantize. The quantization residual is fed back
+  into the next step's gradient (error feedback), so the compression
+  error stays O(1) over training instead of accumulating — the standard
+  EF-SGD guarantee. Off by default; enabled per-run
+  (``--grad-compression int8``). The Ozaki exactness paths never enable
+  it (DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -16,6 +26,51 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.splitting import SplitResult
+
+
+class SliceWire(NamedTuple):
+    """The packed int8-slice transport format (lossless, gather-ready).
+
+    A ``SplitResult`` holds slices as ``(s, r, k)`` — slice index
+    leading, the natural layout for the GEMM stage. On the wire the
+    SHARDED dimension must lead so a ``ring_all_gather`` /
+    ``jax.lax.all_gather`` over dim 0 concatenates row blocks from
+    different devices into the global matrix:
+
+    slices: int8 ``(r, s, k)`` — row-major slice stack.
+    exp:    int32 ``(r,)``     — per-row shared power-of-two exponents.
+    w:      static slice width (split metadata; never crosses the wire
+            as an array — it is shape-derived and identical on every
+            device by construction).
+    """
+
+    slices: jax.Array
+    exp: jax.Array
+    w: int
+
+
+def pack_slices(sr: SplitResult) -> SliceWire:
+    """SplitResult -> wire layout. Exact: a transpose, no arithmetic."""
+    return SliceWire(jnp.swapaxes(sr.slices, 0, 1), sr.exp, sr.w)
+
+
+def unpack_slices(wire: SliceWire) -> SplitResult:
+    """Wire layout -> SplitResult. Exact inverse of ``pack_slices``."""
+    return SplitResult(jnp.swapaxes(wire.slices, 0, 1), wire.exp, wire.w)
+
+
+def slice_wire_bytes(rows: int, k: int, num_splits: int) -> int:
+    """Bytes one device contributes to a SliceWire gather: the int8
+    slice stack plus the int32 exponent vector (``w`` is static)."""
+    return rows * num_splits * k + 4 * rows
+
+
+def wire_nbytes(wire: SliceWire) -> int:
+    """Actual byte count of a wire's arrays (must match the model)."""
+    return int(wire.slices.size) * wire.slices.dtype.itemsize + \
+        int(wire.exp.size) * wire.exp.dtype.itemsize
 
 
 class EFState(NamedTuple):

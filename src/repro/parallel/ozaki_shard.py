@@ -1,6 +1,13 @@
 """Distributed Ozaki GEMM — the paper's DGEMM scaled onto the mesh (O4).
 
-The reduction (k) dimension is sharded across a mesh axis. Each device:
+Two sharded layouts, one invariant: every schedule below is **bitwise
+identical** to the single-device reference — integer collectives are
+associative, so the distributed sums reproduce the single-device rounding
+stream exactly, for any mesh shape (the elasticity invariant used by the
+checkpoint/restart tests).
+
+**k-sharded** (``distributed_ozaki_matmul``): the reduction dimension is
+sharded. Each device:
 
   1. contributes its local row/col maxima to a *global* ``pmax`` so all
      shards split against the same shared exponents (the Ozaki invariant:
@@ -8,9 +15,10 @@ The reduction (k) dimension is sharded across a mesh axis. Each device:
   2. extracts int8 slices of its local k-chunk and runs the local slice
      GEMMs (int8 x int8 -> int32, exact);
   3. reduces each anti-diagonal's int32 partial product with an integer
-     ``psum`` — integer addition is associative, so the distributed sum
-     is **bitwise reproducible** for any mesh shape or reduction order
-     (the elasticity invariant used by the checkpoint/restart tests);
+     collective (``parallel.collectives``) — NO f64 operand ever crosses
+     a link (the int8-slice transport, ``comm="int8"`` in the policy
+     spec; ``core.tuning.comm_bytes_model`` prices it against the GSPMD
+     f64-operand baseline);
   4. performs the high-precision scaled accumulation once, on the reduced
      products.
 
@@ -18,51 +26,168 @@ Exactness requires accumulator headroom for ``k_global`` terms (not just
 the local chunk) plus diagonal-fusion slack — ``alpha`` is computed from
 the GLOBAL k, mirroring Eq. (3) of the paper.
 
-Three collective schedules:
+k-shard collective schedules:
   * ``schedule="psum"``      — stacked psum of all anti-diagonals at the
     end; result replicated over the k-axis (paper-faithful layout).
-  * ``schedule="overlap"``   — psum of diagonal d is issued while diagonal
-    d+1's GEMMs run (compute/comm overlap; beyond-paper O4b).
+  * ``schedule="overlap"``   — diagonal d's psum is issued BEFORE diagonal
+    d+1's GEMMs are built, so the int32 all-reduce rides the links while
+    the next diagonal computes (compute/comm overlap; beyond-paper O4b).
   * ``schedule="reduce_scatter"`` — int32 reduce-scatter over the OUTPUT
     COLUMNS instead of an all-reduce: 2x less link traffic, and the
     high-precision accumulation runs on 1/P of the columns per chip.
     C comes out sharded (m@m_axis, n@axis) — the natural layout for a
     GEMM feeding the next sharded operator (beyond-paper O4c; §Perf).
+  * ``schedule="rs_stream"`` — per-diagonal reduce-scatter issued as each
+    diagonal's GEMMs finish (overlap + scatter combined).
 
-Batched composition: ``ozaki_matmul_kshard_auto`` accepts the batched
-API's operand ranks ((B, m, k) activations with stacked or broadcast
-weights) and records the axis on the config so the ``PipelinePlan``
-carries it; ``constrain_batched_kshard`` + the ``set_shard_mesh`` /
-``use_shard_mesh`` registry are the in-trace composition points the
-model/serving layers use for ``ArchConfig.ozaki_shard_axis``.
+**m/n-sharded** (``ozaki_matmul_mnshard``): A row-sharded, B
+column-sharded, full k local. Instead of all-gathering B's f64 words,
+each device splits its column block locally and all-gathers the packed
+``SliceWire`` (int8 slice stack + int32 exponents,
+``parallel.compression``) over a ``ring_all_gather`` — ``s`` bytes per
+element instead of 8. The gathered representation feeds the plan's OWN
+executor (``core.executors.get_executor``), so the result is
+bitwise-identical to the unsharded pipeline for every backend by
+construction. ``schedule="overlap"`` gathers B's slice planes one ring
+hop chain per plane, issued just before the first anti-diagonal needing
+the plane — plane q+1's hops overlap diagonal q's GEMMs.
+
+**2-D (k x batch)** (``distributed_ozaki_matmul_batched``): the serving
+layout from the SNIPPETS host-platform recipe — batch rows spread over
+one mesh axis, the reduction over another; the batch folds into rows
+locally (row-independent, exact) and the k-shard machinery above runs
+unchanged.
+
+Batched GSPMD composition: ``ozaki_matmul_kshard_auto`` accepts the
+batched API's operand ranks ((B, m, k) activations with stacked or
+broadcast weights) and records the axis on the config so the
+``PipelinePlan`` carries it; ``cfg.comm="int8"`` re-routes it onto the
+explicit int8-slice schedules above. ``constrain_batched_kshard`` + the
+``set_shard_mesh`` / ``use_shard_mesh`` registry are the in-trace
+composition points the model/serving layers use for
+``ArchConfig.ozaki_shard_axis``.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 import functools
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.executors import gemm_xla, int32_to_dw
-from repro.core.ozaki import OzakiConfig
-from repro.core.splitting import row_exponents, slice_width, split_int
+from repro.core.executors import gemm_xla, get_executor, int32_to_dw
+from repro.core.ozaki import OzakiConfig, resolve_accuracy_config
+from repro.core.splitting import SplitResult, row_exponents, split_int
 from repro.core.xmath import DW, dw_add
+from repro.parallel.collectives import (psum_exact_int32, reduce_scatter_sum,
+                                        ring_all_gather)
+from repro.parallel.compression import SliceWire, pack_slices
+
+KSHARD_SCHEDULES = ("psum", "overlap", "reduce_scatter", "rs_stream")
+MNSHARD_SCHEDULES = ("allgather", "overlap")
+
+
+def _diag_gemms(sa, sb, pairs) -> jax.Array:
+    """One anti-diagonal's exact int32 partial from local slices —
+    pair order matches ``core.executors.XlaExecutor.products`` exactly
+    (the bitwise-parity contract)."""
+    p_t = gemm_xla(sa.slices[pairs[0][0]], sb.slices[pairs[0][1]])
+    for pth, qth in pairs[1:]:
+        p_t = p_t + gemm_xla(sa.slices[pth], sb.slices[qth])
+    return p_t
 
 
 def _local_diag_products(sa, sb, cfg: OzakiConfig):
     """[(t, int32 product)] per anti-diagonal from local slices."""
-    out = []
-    for t, pairs in cfg.diagonals():
-        p_t = gemm_xla(sa.slices[pairs[0][0]], sb.slices[pairs[0][1]])
-        for pth, qth in pairs[1:]:
-            p_t = p_t + gemm_xla(sa.slices[pth], sb.slices[qth])
-        out.append((t, p_t))
-    return out
+    return [(t, _diag_gemms(sa, sb, pairs)) for t, pairs in cfg.diagonals()]
+
+
+def _accumulate(prods, ea, eb, cfg: OzakiConfig, w: int):
+    """High-precision scaled accumulation on the reduced products —
+    the identical op sequence to ``XlaExecutor.accumulate`` (ordered
+    smallest terms first, one deferred ldexp), so the sharded result is
+    bitwise equal to the single-device pipeline."""
+    shape = prods[0][1].shape
+    e_base = ea[:, None].astype(jnp.int32) + eb[None, :].astype(jnp.int32)
+    if cfg.accum == "df32":
+        # TPU path: compensated f32 pair, no f64 anywhere
+        acc = DW(jnp.zeros(shape, jnp.float32),
+                 jnp.zeros(shape, jnp.float32))
+        for t, p_t in sorted(prods, key=lambda tp: -tp[0]):
+            scale = jnp.float32(2.0 ** (-(t + 2) * w))
+            term = int32_to_dw(p_t)
+            acc = dw_add(acc, DW(term.hi * scale, term.lo * scale))
+        hi = jnp.ldexp(acc.hi, e_base)
+        lo = jnp.ldexp(acc.lo, e_base)
+        return hi, lo                     # df32 pair (48 mantissa bits)
+    c = jnp.zeros(shape, jnp.float64)
+    for t, p_t in sorted(prods, key=lambda tp: -tp[0]):
+        c = c + jnp.ldexp(p_t.astype(jnp.float64), e_base - (t + 2) * w)
+    return c
+
+
+def _kshard_local(a_blk, b_blk, cfg: OzakiConfig, axis: str, schedule: str,
+                  w: int):
+    """The per-device k-shard pipeline (runs inside shard_map).
+
+    a_blk: (r, k_local) f64/f32, b_blk: (k_local, n). Returns the full
+    (r, n) block (psum/overlap) or the (r, n/P) column block
+    (reduce_scatter/rs_stream); df32 returns an (hi, lo) pair.
+    """
+    # 1. global shared exponents (pmax over the k-shards)
+    ea = row_exponents(a_blk)
+    eb = row_exponents(b_blk.T)
+    ea = jax.lax.pmax(ea, axis)
+    eb = jax.lax.pmax(eb, axis)
+    # 2. local slices against the global exponents
+    sa = split_int(a_blk, cfg.num_splits, w, exp=ea)
+    sb = split_int(b_blk.T, cfg.num_splits, w, exp=eb)
+    # 3. exact integer reduction per anti-diagonal — only int32 partials
+    # (and the int32 exponent pmaxes above) ever cross a link: the f64
+    # operands and the int8 slice stacks stay device-local
+    if schedule == "overlap":
+        # diagonal t's all-reduce is issued BEFORE diagonal t+1's GEMMs
+        # are built — the independent int32 psum rides the links while
+        # the next diagonal's MXU work runs (compute/comm overlap)
+        prods = []
+        for t, pairs in cfg.diagonals():
+            prods.append((t, psum_exact_int32(
+                _diag_gemms(sa, sb, pairs), axis)))
+    elif schedule == "rs_stream":
+        # per-diagonal reduce-scatter, issued as each diagonal's GEMMs
+        # finish: no s-deep int32 stack is materialized and diagonal
+        # d's collective overlaps diagonal d+1's compute
+        prods = []
+        for t, pairs in cfg.diagonals():
+            prods.append((t, reduce_scatter_sum(
+                _diag_gemms(sa, sb, pairs), axis, scatter_dim=1)))
+        nloc = prods[0][1].shape[1]
+        idx = jax.lax.axis_index(axis)
+        eb = jax.lax.dynamic_slice_in_dim(eb, idx * nloc, nloc)
+    elif schedule == "reduce_scatter":
+        # int32 reduce-scatter over output columns: each chip keeps
+        # its n/P column block, exactly reduced (still associative
+        # -> bitwise reproducible). eb must be sliced to the block.
+        prods = _local_diag_products(sa, sb, cfg)
+        ts = [t for t, _ in prods]
+        stacked = reduce_scatter_sum(jnp.stack([p for _, p in prods]),
+                                     axis, scatter_dim=2)
+        prods = list(zip(ts, stacked))
+        nloc = stacked.shape[2]
+        idx = jax.lax.axis_index(axis)
+        eb = jax.lax.dynamic_slice_in_dim(eb, idx * nloc, nloc)
+    else:
+        prods = _local_diag_products(sa, sb, cfg)
+        ts = [t for t, _ in prods]
+        stacked = psum_exact_int32(jnp.stack([p for _, p in prods]), axis)
+        prods = list(zip(ts, stacked))
+    # 4. high-precision accumulation (shape follows the — possibly
+    # scattered — reduced products)
+    return _accumulate(prods, ea, eb, cfg, w)
 
 
 def distributed_ozaki_matmul(a: jax.Array, b: jax.Array, mesh: Mesh,
@@ -80,79 +205,21 @@ def distributed_ozaki_matmul(a: jax.Array, b: jax.Array, mesh: Mesh,
     layout; rows are independent in the Ozaki scheme (per-row exponents),
     so this composes with the k-shard reduction untouched.
     """
-    n_shards = mesh.shape[axis]
+    if schedule not in KSHARD_SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; expected one of "
+                         f"{KSHARD_SCHEDULES}")
     k_global = a.shape[1]
+    # fast-mode/target resolution BEFORE sizing the width, exactly like
+    # the single-device drivers — required for bitwise parity on the
+    # truncated-pair rows of the parity matrix
+    cfg = resolve_accuracy_config(cfg, k_global)
     # Headroom: k_global terms per diagonal-fused GEMM group. The int32
     # psum adds no extra constraint beyond k_global (the global count
     # already includes every shard's terms).
-    fuse = cfg.max_fuse_terms if (cfg.fuse_diagonals or cfg.concat_k) else 1
-    w = slice_width(k_global, ell_acc=cfg.ell_acc, ell_in=cfg.ell_in,
-                    fuse_terms=fuse)
+    w = cfg.width_for(k_global)
 
     def local(a_blk, b_blk):
-        # 1. global shared exponents (pmax over the k-shards)
-        ea = row_exponents(a_blk)
-        eb = row_exponents(b_blk.T)
-        ea = jax.lax.pmax(ea, axis)
-        eb = jax.lax.pmax(eb, axis)
-        # 2. local slices against the global exponents
-        sa = split_int(a_blk, cfg.num_splits, w, exp=ea)
-        sb = split_int(b_blk.T, cfg.num_splits, w, exp=eb)
-        prods = _local_diag_products(sa, sb, cfg)
-        # 3. exact integer reduction per anti-diagonal
-        if schedule == "overlap":
-            # issue psum(d) early so it overlaps the next diagonal's GEMMs
-            reduced = []
-            for t, p_t in prods:
-                reduced.append((t, jax.lax.psum(p_t, axis)))
-            prods = reduced
-        elif schedule == "reduce_scatter":
-            # int32 reduce-scatter over output columns: each chip keeps
-            # its n/P column block, exactly reduced (still associative
-            # -> bitwise reproducible). eb must be sliced to the block.
-            ts = [t for t, _ in prods]
-            stacked = jnp.stack([p for _, p in prods])
-            stacked = jax.lax.psum_scatter(stacked, axis,
-                                           scatter_dimension=2, tiled=True)
-            prods = list(zip(ts, stacked))
-            nloc = stacked.shape[2]
-            idx = jax.lax.axis_index(axis)
-            eb = jax.lax.dynamic_slice_in_dim(eb, idx * nloc, nloc)
-        elif schedule == "rs_stream":
-            # per-diagonal reduce-scatter, issued as each diagonal's
-            # GEMMs finish: no s-deep int32 stack is materialized and
-            # diagonal d's collective overlaps diagonal d+1's compute
-            prods = [(t, jax.lax.psum_scatter(p, axis,
-                                              scatter_dimension=1,
-                                              tiled=True))
-                     for t, p in prods]
-            nloc = prods[0][1].shape[1]
-            idx = jax.lax.axis_index(axis)
-            eb = jax.lax.dynamic_slice_in_dim(eb, idx * nloc, nloc)
-        else:
-            ts = [t for t, _ in prods]
-            stacked = jnp.stack([p for _, p in prods])
-            stacked = jax.lax.psum(stacked, axis)
-            prods = list(zip(ts, stacked))
-        # 4. high-precision accumulation (shape follows the — possibly
-        # scattered — reduced products)
-        shape = prods[0][1].shape
-        e_base = ea[:, None].astype(jnp.int32) + eb[None, :].astype(jnp.int32)
-        if cfg.accum == "df32":
-            # TPU path: compensated f32 pair, no f64 anywhere
-            acc = DW(jnp.zeros(shape, jnp.float32),
-                     jnp.zeros(shape, jnp.float32))
-            for t, p_t in sorted(prods, key=lambda tp: -tp[0]):
-                scale = jnp.float32(2.0 ** (-(t + 2) * w))
-                term = int32_to_dw(p_t)
-                acc = dw_add(acc, DW(term.hi * scale, term.lo * scale))
-            hi = jnp.ldexp(acc.hi, e_base)
-            lo = jnp.ldexp(acc.lo, e_base)
-            return hi, lo             # df32 pair (48 mantissa bits)
-        c = jnp.zeros(shape, jnp.float64)
-        for t, p_t in sorted(prods, key=lambda tp: -tp[0]):
-            c = c + jnp.ldexp(p_t.astype(jnp.float64), e_base - (t + 2) * w)
-        return c
+        return _kshard_local(a_blk, b_blk, cfg, axis, schedule, w)
 
     row = m_axis if m_axis else None
     col = axis if schedule in ("reduce_scatter", "rs_stream") else None
@@ -160,9 +227,137 @@ def distributed_ozaki_matmul(a: jax.Array, b: jax.Array, mesh: Mesh,
     out_specs = (c_spec, c_spec) if cfg.accum == "df32" else c_spec
     fn = shard_map(local, mesh=mesh,
                    in_specs=(P(row, axis), P(axis, None)),
-                   out_specs=out_specs)
+                   out_specs=out_specs, check_rep=False)
     out = fn(a, b)
     return DW(*out) if cfg.accum == "df32" else out
+
+
+def distributed_ozaki_matmul_batched(a: jax.Array, b: jax.Array, mesh: Mesh,
+                                     cfg: OzakiConfig = OzakiConfig(),
+                                     axis: str = "model",
+                                     batch_axis: str | None = "data",
+                                     schedule: str = "psum") -> jax.Array:
+    """2-D (k x batch) mesh composition: ``(B, m, k) @ (k, n)``.
+
+    The serving layout on the host-platform recipe: the batch dim is
+    sharded over ``batch_axis`` (or fully replicated with ``None``), the
+    reduction over ``axis`` — broadcast weights cross the k-axis only.
+    Locally the batch folds into rows (row-independent, exact — the same
+    fold the unbatched serving path uses), so the k-shard schedules above
+    run unchanged and the result is bitwise identical to the unsharded
+    ``ozaki_matmul_batched`` for every mesh shape and schedule.
+    """
+    if a.ndim != 3 or b.ndim != 2:
+        raise ValueError(f"expected (B, m, k) @ (k, n) broadcast weights, "
+                         f"got {a.shape} @ {b.shape}")
+    if schedule not in KSHARD_SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; expected one of "
+                         f"{KSHARD_SCHEDULES}")
+    _, m, k_global = a.shape
+    cfg = resolve_accuracy_config(cfg, k_global)
+    w = cfg.width_for(k_global)
+
+    def local(a_blk, b_blk):
+        bloc = a_blk.shape[0]
+        folded = a_blk.reshape(bloc * m, a_blk.shape[-1])
+        out = _kshard_local(folded, b_blk, cfg, axis, schedule, w)
+        if cfg.accum == "df32":
+            hi, lo = out
+            return (hi.reshape(bloc, m, -1), lo.reshape(bloc, m, -1))
+        return out.reshape(bloc, m, -1)
+
+    row = batch_axis if batch_axis else None
+    col = axis if schedule in ("reduce_scatter", "rs_stream") else None
+    c_spec = P(row, None, col)
+    out_specs = (c_spec, c_spec) if cfg.accum == "df32" else c_spec
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(row, None, axis), P(axis, None)),
+                   out_specs=out_specs, check_rep=False)
+    out = fn(a, b)
+    return DW(*out) if cfg.accum == "df32" else out
+
+
+def ozaki_matmul_mnshard(a: jax.Array, b: jax.Array, mesh: Mesh,
+                         cfg: OzakiConfig = OzakiConfig(),
+                         axis: str = "model",
+                         schedule: str = "allgather") -> jax.Array:
+    """C = A @ B with A row-sharded and B column-sharded over ``axis``.
+
+    Full k is local, so each device splits its operand blocks against
+    purely LOCAL per-row exponents (no pmax needed) and what crosses the
+    mesh is the packed int8 ``SliceWire`` of B's column block — ``s``
+    bytes per element + an int32 exponent vector instead of 8-byte f64
+    words (``comm_bytes_model(layout="mnshard")`` prices both).
+
+    ``schedule="allgather"``: one ring all-gather of the packed wire,
+    then the plan's own executor contracts locally — bitwise-identical
+    to the unsharded pipeline for EVERY backend by construction (the
+    gathered representation is the exact split the reference computes,
+    and rows of A are independent).
+
+    ``schedule="overlap"``: B's slice planes are gathered one ring-hop
+    chain per plane, each issued just before the first anti-diagonal
+    that needs it — plane q+1's hops overlap diagonal q's GEMMs. The
+    products/accumulation replicate ``XlaExecutor``'s op sequence, which
+    every backend is bitwise-equal to.
+
+    f64 operands/accumulation only (the CPU-oracle layout; the k-shard
+    path owns the df32 story).
+    """
+    if schedule not in MNSHARD_SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; expected one of "
+                         f"{MNSHARD_SCHEDULES}")
+    if cfg.accum != "f64":
+        raise ValueError("ozaki_matmul_mnshard is the f64 layout; use the "
+                         "k-shard schedules for df32")
+    world = mesh.shape[axis]
+    m, k = a.shape
+    n = b.shape[1]
+    cfg = resolve_accuracy_config(cfg, k)
+    w = cfg.width_for(k)
+    plan = cfg.plan()
+    if plan.fusion == "streaming":
+        raise ValueError(
+            "streaming fusion keeps slices in VMEM scratch — there is no "
+            "materialized slice stack to put on the wire; use "
+            "fuse_epilogue (or a non-streaming plan) with mnshard")
+
+    def local(a_blk, b_blk):
+        ex = get_executor(plan)
+        sa = ex.split(a_blk, w)                    # local rows of A
+        sb_loc = ex.split(b_blk.T, w)              # local cols of B (rows of B^T)
+        wire = pack_slices(sb_loc)                 # (n_loc, s, k) int8 + (n_loc,)
+        exp = ring_all_gather(wire.exp, axis, world)            # (n,)
+        if schedule == "overlap":
+            # gather plane q right before its first use; diagonals
+            # ascending need planes q <= t, so plane t+1's ring hops are
+            # independent of (and overlap) diagonal t's GEMMs
+            planes = {}
+
+            def plane(q):
+                if q not in planes:
+                    planes[q] = ring_all_gather(wire.slices[:, q, :],
+                                                axis, world)    # (n, k)
+                return planes[q]
+
+            prods = []
+            for t, pairs in cfg.diagonals():
+                p_t = gemm_xla(sa.slices[pairs[0][0]], plane(pairs[0][1]))
+                for pth, qth in pairs[1:]:
+                    p_t = p_t + gemm_xla(sa.slices[pth], plane(qth))
+                prods.append((t, p_t))
+            return _accumulate(prods, sa.exp, exp, cfg, w)
+        gathered = ring_all_gather(wire.slices, axis, world)    # (n, s, k)
+        sb = SplitResult(jnp.swapaxes(gathered, 0, 1), exp, w)
+        e_base = (sa.exp[:, None].astype(jnp.int32) +
+                  exp[None, :].astype(jnp.int32))
+        return ex.contract(sa, sb, w, e_base, (a_blk.shape[0], n))
+
+    # check_rep=False: Pallas kernels have no shard_map replication rule
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(axis, None), P(None, axis)),
+                   out_specs=P(axis, None), check_rep=False)
+    return fn(a, b)
 
 
 def kshard_specs(a_ndim: int, b_ndim: int, axis: str) -> tuple[P, P]:
@@ -180,8 +375,17 @@ def ozaki_matmul_kshard_auto(a: jax.Array, b: jax.Array, mesh: Mesh,
                              cfg: OzakiConfig = OzakiConfig(),
                              axis: Optional[str] = None) -> jax.Array:
     """Paper-faithful distributed baseline: the (batched) Ozaki pipeline
-    under jit with k-sharded inputs — GSPMD inserts the collectives.
-    Reproducible only per mesh shape.
+    under jit with k-sharded inputs — GSPMD inserts the collectives
+    (f64 operand words move around the opaque kernels; reproducible only
+    per mesh shape).
+
+    ``cfg.comm="int8"`` re-routes onto the explicit int8-slice collective
+    schedules (``distributed_ozaki_matmul``/``_batched``): NO f64 operand
+    crosses a link, only exact int32 pair partials + exponent pmaxes —
+    and the result upgrades from per-mesh-shape reproducible to bitwise
+    identical to the single-device reference for ANY mesh shape.
+    Covered routes: f64 2-D, and f64 3-D with broadcast (2-D) weights —
+    stacked 3-D weights and df32 stay on the GSPMD path.
 
     3-D ``a`` routes through ``ozaki_matmul_batched`` (stacked or
     broadcast ``b``), composing the batched API with k-sharding: the
@@ -192,6 +396,13 @@ def ozaki_matmul_kshard_auto(a: jax.Array, b: jax.Array, mesh: Mesh,
     from repro.core.ozaki import ozaki_matmul, ozaki_matmul_batched
     axis = axis or cfg.shard_axis or "model"
     cfg = dataclasses.replace(cfg, shard_axis=axis)
+    if getattr(cfg, "comm", "f64") == "int8" and cfg.accum == "f64" and \
+            a.dtype == jnp.float64:
+        if a.ndim == 2:
+            return distributed_ozaki_matmul(a, b, mesh, cfg, axis=axis)
+        if a.ndim == 3 and b.ndim == 2:
+            return distributed_ozaki_matmul_batched(
+                a, b, mesh, cfg, axis=axis, batch_axis=None)
     impl = ozaki_matmul_batched if a.ndim == 3 else ozaki_matmul
     a_spec, b_spec = kshard_specs(a.ndim, b.ndim, axis)
     out_spec = P(*([None] * a.ndim))

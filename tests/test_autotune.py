@@ -584,3 +584,19 @@ def test_engine_plan_scope_registers_ambient_cache(tmp_path):
     with eng._plan_scope():
         assert at.active_plan_cache() is eng.plan_cache
     assert at.active_plan_cache() is None
+
+
+def test_candidate_plans_flip_comm_under_shard_axis():
+    """With a shard axis in play the tuner explores both transports; an
+    unsharded plan never wastes measurements on comm flips."""
+    sharded = candidate_plans(64, 64, 512, accum="f64",
+                              shard_axis="model", comm="f64")
+    comms = {c.comm for c in sharded}
+    assert comms == {"f64", "int8"}
+    assert sharded[0].comm == "f64"          # base plan leads
+    back = candidate_plans(64, 64, 512, accum="f64",
+                           shard_axis="model", comm="int8")
+    assert back[0].comm == "int8"
+    assert {c.comm for c in back} == {"f64", "int8"}
+    unsharded = candidate_plans(64, 64, 512, accum="f64")
+    assert {c.comm for c in unsharded} == {"f64"}

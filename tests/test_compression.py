@@ -1,0 +1,119 @@
+"""parallel.compression: the SliceWire transport (lossless) and the
+EF-SGD int8 gradient compressor (lossy, error-bounded).
+
+Single-device properties; the mesh behaviour lives in test_distributed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+
+# ----------------------------------------------------------------------------
+# SliceWire: pack/unpack are exact transposes; byte model matches reality
+# ----------------------------------------------------------------------------
+
+def _split(rows=12, k=40, s=7):
+    from repro.core.splitting import slice_width, split_int
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((rows, k))
+                    * np.exp(rng.integers(-10, 10, (rows, 1))))
+    return split_int(x, s, slice_width(k)), x
+
+
+def test_slice_wire_round_trip_exact():
+    from repro.parallel.compression import pack_slices, unpack_slices
+    sr, _ = _split()
+    wire = pack_slices(sr)
+    assert wire.slices.dtype == jnp.int8
+    assert wire.slices.shape == (12, 7, 40)       # sharded dim leads
+    back = unpack_slices(wire)
+    assert np.array_equal(np.asarray(back.slices), np.asarray(sr.slices))
+    assert np.array_equal(np.asarray(back.exp), np.asarray(sr.exp))
+    assert back.w == sr.w
+
+
+def test_slice_wire_byte_model_matches_arrays():
+    from repro.parallel.compression import (pack_slices, slice_wire_bytes,
+                                            wire_nbytes)
+    sr, _ = _split(rows=12, k=40, s=7)
+    wire = pack_slices(sr)
+    assert wire_nbytes(wire) == slice_wire_bytes(12, 40, 7)
+    # the headline economics: s bytes/element (+exp) vs 8 for f64
+    assert slice_wire_bytes(12, 40, 7) < 8 * 12 * 40
+
+
+def test_slice_wire_reconstructs_operand():
+    """Lossless transport: the unpacked SplitResult reconstructs to the
+    bitwise-identical value the un-wired split reconstructs to (the wire
+    round-trip is pure transposes — zero arithmetic)."""
+    from repro.core.splitting import reconstruct
+    from repro.parallel.compression import pack_slices, unpack_slices
+    sr, x = _split()
+    back = unpack_slices(pack_slices(sr))
+    assert np.array_equal(np.asarray(reconstruct(back)),
+                          np.asarray(reconstruct(sr)))
+    # and the kept part carries the top s*w mantissa bits of x
+    rel = np.abs(np.asarray(reconstruct(sr)) - np.asarray(x))
+    exp = np.asarray(sr.exp)
+    assert (rel <= np.ldexp(1.0, exp - sr.w * 7 + 1)[:, None]).all()
+
+
+# ----------------------------------------------------------------------------
+# int8 quantizer: deterministic round-trip error bound
+# ----------------------------------------------------------------------------
+
+def test_quantize_dequantize_error_bound():
+    from repro.parallel.compression import dequantize_int8, quantize_int8
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((64, 33)), jnp.float32)
+    q, scale = quantize_int8(x)
+    assert q.dtype == jnp.int8
+    err = np.abs(np.asarray(dequantize_int8(q, scale)) - np.asarray(x))
+    # round-to-nearest against a per-tensor scale: |err| <= scale/2
+    assert err.max() <= float(scale) / 2 + 1e-12
+    # zeros stay exactly zero (scale has the +eps guard, q = 0)
+    qz, sz = quantize_int8(jnp.zeros((4, 4), jnp.float32))
+    assert np.array_equal(np.asarray(qz), np.zeros((4, 4)))
+    assert np.array_equal(np.asarray(dequantize_int8(qz, sz)),
+                          np.zeros((4, 4)))
+
+
+# ----------------------------------------------------------------------------
+# EF-SGD: the residual stays bounded (error feedback does not accumulate)
+# ----------------------------------------------------------------------------
+
+def test_ef_residual_stays_bounded():
+    """Per-round quantization error is <= scale/2 elementwise and the
+    residual is exactly (input - quantized), so over T rounds with fresh
+    gradients the residual never grows beyond one quantization step of
+    the current round — the EF-SGD boundedness that makes the compressed
+    sum converge (mesh-level convergence is covered in
+    test_distributed)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_mesh_compat
+    from repro.parallel.compression import (EFState, compress_psum,
+                                            init_ef_state)
+    mesh = make_mesh_compat((1,), ("data",))      # axis of size 1: exact psum
+    rng = np.random.default_rng(4)
+
+    def one_round(g, r):
+        def local(g, r):
+            avg, ef = compress_psum({"g": g}, EFState({"g": r}), "data")
+            return avg["g"], ef.residual["g"]
+        return shard_map(local, mesh=mesh, in_specs=(P(), P()),
+                         out_specs=(P(), P()), check_rep=False)(g, r)
+
+    g0 = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    res = jnp.asarray(init_ef_state({"g": g0}).residual["g"])
+    for t in range(30):
+        g = jnp.asarray(rng.standard_normal(256), jnp.float32) * (1 + t % 3)
+        prev = res
+        avg, res = one_round(g, res)
+        # the quantizer's scale is max|g + prev_res| / 127; round-to-
+        # nearest leaves at most half a step behind as the new residual
+        bound = float(jnp.max(jnp.abs(g + prev))) / 127.0 / 2
+        assert float(jnp.max(jnp.abs(res))) <= bound + 1e-6, t

@@ -1,4 +1,5 @@
 """Multi-device behaviour (8 virtual CPU devices via subprocess)."""
+import jax
 import pytest
 
 from util import run_multidevice
@@ -213,4 +214,176 @@ err = np.abs(acc / 20 - exact).max() / (np.abs(exact).max() + 1e-9)
 assert err < 2e-3, err
 print('OK')
 """)
+    assert "OK" in out
+
+
+def test_int8_transport_parity_matrix():
+    """The tentpole acceptance matrix: every int8-slice collective
+    schedule x layout x backend is BITWISE identical to the single-device
+    reference, fast-mode and df32 rows included (int32 collectives are
+    associative; the mnshard gather ships the exact split the reference
+    computes)."""
+    out = run_multidevice("""
+import jax
+jax.config.update('jax_enable_x64', True)
+import numpy as np, jax.numpy as jnp
+from repro.core.ozaki import OzakiConfig, ozaki_matmul, ozaki_matmul_batched
+from repro.core.xmath import df32_to_f64
+from repro.launch.mesh import make_mesh_compat
+from repro.parallel.ozaki_shard import (distributed_ozaki_matmul,
+                                        distributed_ozaki_matmul_batched,
+                                        ozaki_matmul_mnshard)
+rng = np.random.default_rng(7)
+m, k, n = 32, 256, 48
+a = jnp.asarray(rng.uniform(-0.5, 0.5, (m, k))
+                * np.exp(rng.standard_normal((m, k))))
+b = jnp.asarray(rng.uniform(-0.5, 0.5, (k, n)))
+mesh = make_mesh_compat((1, 8), ('data', 'model'))
+cfg = OzakiConfig(num_splits=6)
+ref = np.asarray(ozaki_matmul(a, b, cfg))
+# k-shard: all four collective schedules
+for sched in ('psum', 'overlap', 'reduce_scatter', 'rs_stream'):
+    got = np.asarray(distributed_ozaki_matmul(a, b, mesh, cfg,
+                                              schedule=sched))
+    assert np.array_equal(got, ref), f'kshard/{sched}'
+# fast-mode row: resolve_accuracy_config must match the reference driver
+cfg_f = OzakiConfig(num_splits=6, fast_mode=True)
+ref_f = np.asarray(ozaki_matmul(a, b, cfg_f))
+got_f = np.asarray(distributed_ozaki_matmul(a, b, mesh, cfg_f,
+                                            schedule='overlap'))
+assert np.array_equal(got_f, ref_f), 'kshard fast-mode'
+# m/n-shard: SliceWire gather, both schedules, xla + pallas backends
+for backend in ('xla', 'pallas'):
+    cfg_b = OzakiConfig(num_splits=6, backend=backend)
+    ref_b = np.asarray(ozaki_matmul(a, b, cfg_b))
+    for sched in ('allgather', 'overlap'):
+        got = np.asarray(ozaki_matmul_mnshard(a, b, mesh, cfg_b,
+                                              schedule=sched))
+        assert np.array_equal(got, ref_b), f'mnshard/{sched}/{backend}'
+# 2-D (k x batch) mesh composition, broadcast weights
+mesh2 = make_mesh_compat((2, 4), ('data', 'model'))
+ab = jnp.asarray(rng.uniform(-0.5, 0.5, (4, m, k)))
+refb = np.asarray(ozaki_matmul_batched(ab, b, cfg))
+for sched in ('psum', 'reduce_scatter'):
+    got = np.asarray(distributed_ozaki_matmul_batched(
+        ab, b, mesh2, cfg, axis='model', batch_axis='data',
+        schedule=sched))
+    assert np.array_equal(got, refb), f'batched2d/{sched}'
+# df32 row (TPU-deployable accumulator)
+cfg_d = OzakiConfig(num_splits=4, accum='df32')
+a32 = a.astype(jnp.float32).astype(jnp.float64)
+b32 = b.astype(jnp.float32).astype(jnp.float64)
+ref_d = np.asarray(ozaki_matmul(a32, b32, cfg_d))
+got_d = np.asarray(df32_to_f64(distributed_ozaki_matmul(
+    a32, b32, mesh, cfg_d, schedule='psum')))
+assert np.array_equal(got_d, ref_d), 'kshard df32'
+print('OK')
+""", timeout=900)
+    assert "OK" in out
+
+
+def test_int8_transport_facade_and_auto_routing():
+    """``comm=int8`` end to end: the policy spec routes ``repro.matmul``
+    and ``ozaki_matmul_kshard_auto`` onto the explicit int8-slice
+    schedules, bitwise-equal to the unsharded facade; schedules that the
+    transport cannot serve (df32 auto, streaming mnshard) fall back /
+    refuse loudly."""
+    out = run_multidevice("""
+import dataclasses
+import jax
+jax.config.update('jax_enable_x64', True)
+import numpy as np, jax.numpy as jnp
+import repro
+from repro.api import MatmulPolicy
+from repro.core.ozaki import OzakiConfig, ozaki_matmul, ozaki_matmul_batched
+from repro.launch.mesh import make_mesh_compat
+from repro.parallel.ozaki_shard import (ozaki_matmul_kshard_auto,
+                                        ozaki_matmul_mnshard, use_shard_mesh)
+rng = np.random.default_rng(11)
+a = jnp.asarray(rng.standard_normal((32, 256)))
+b = jnp.asarray(rng.standard_normal((256, 48)))
+mesh = make_mesh_compat((1, 8), ('data', 'model'))
+pol = MatmulPolicy.parse('ozaki-fp64x6|shard=model|comm=int8')
+ref = np.asarray(repro.matmul(a, b, MatmulPolicy.parse('ozaki-fp64x6')))
+with use_shard_mesh(mesh):
+    got = np.asarray(repro.matmul(a, b, pol))
+assert np.array_equal(got, ref), 'facade comm=int8'
+# kshard_auto: comm=int8 re-routes 2-D and 3-D-broadcast onto the
+# explicit schedules, still bitwise vs the unsharded reference
+cfg = OzakiConfig(num_splits=6, comm='int8')
+assert np.array_equal(
+    np.asarray(ozaki_matmul_kshard_auto(a, b, mesh, cfg, axis='model')),
+    np.asarray(ozaki_matmul(a, b, OzakiConfig(num_splits=6))))
+ab = jnp.asarray(rng.standard_normal((3, 32, 256)))
+assert np.array_equal(
+    np.asarray(ozaki_matmul_kshard_auto(ab, b, mesh, cfg, axis='model')),
+    np.asarray(ozaki_matmul_batched(ab, b, OzakiConfig(num_splits=6))))
+# stacked 3-D weights stay on the GSPMD fallback (still runs, correct)
+bb = jnp.asarray(rng.standard_normal((3, 256, 48)))
+got3 = np.asarray(ozaki_matmul_kshard_auto(ab, bb, mesh, cfg,
+                                           axis='model'))
+ref3 = np.asarray(ozaki_matmul_batched(ab, bb, OzakiConfig(num_splits=6)))
+assert np.array_equal(got3, ref3), 'stacked GSPMD fallback'
+# mnshard refuses schedules it cannot serve losslessly
+cfg_s = OzakiConfig(num_splits=6, backend='pallas_fused', streaming=True)
+try:
+    ozaki_matmul_mnshard(a, b, mesh, cfg_s)
+    raise SystemExit('streaming mnshard must refuse')
+except ValueError as e:
+    assert 'streaming' in str(e)
+try:
+    ozaki_matmul_mnshard(a, b, mesh, OzakiConfig(num_splits=6,
+                                                 accum='df32'))
+    raise SystemExit('df32 mnshard must refuse')
+except ValueError as e:
+    assert 'f64' in str(e)
+print('OK')
+""", timeout=900)
+    assert "OK" in out
+
+
+@pytest.mark.xfail(jax.__version__ == "0.4.37", strict=True,
+                   reason="with_sharding_constraint on Ozaki operands "
+                          "inside _scan_decoder produces wrong logits on "
+                          "the pinned jax CPU SPMD stack (ROADMAP 'Known "
+                          "limitation (PR 2)'); layers.py therefore only "
+                          "constrains 2-D projections. Strict: an XPASS "
+                          "after a jax upgrade flags that the 3-D model "
+                          "paths can be re-enabled.")
+def test_scan_decoder_sharding_constraint_pinned_failure():
+    """Pinned repro of the in-scan sharding-constraint miscompilation:
+    constrain the 3-D in-scan projections (exactly what layers.py
+    refuses to do) and compare logits to the unsharded reference —
+    observed max diff ~3.2 on reduced-llama, pure-XLA backend."""
+    out = run_multidevice("""
+import dataclasses
+import jax, numpy as np, jax.numpy as jnp
+from repro.configs import get_config
+from repro.models import init_model, forward_train
+from repro.launch.mesh import make_mesh_compat
+from repro.parallel.ozaki_shard import (constrain_batched_kshard,
+                                        use_shard_mesh)
+import repro.models.layers as L
+
+cfg = dataclasses.replace(get_config('llama3.2-3b').reduced(),
+                          matmul_precision='ozaki_fp64', ozaki_splits=7)
+params, _ = init_model(cfg, jax.random.key(0))
+rng = np.random.default_rng(0)
+batch = {'tokens': jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 16)))}
+ref, _ = forward_train(cfg, params, batch)
+
+orig = L._matmul_ozaki
+def patched(x, w, policy):
+    if x.ndim == 3:
+        x, w = constrain_batched_kshard(x, w, 'model')
+    return orig(x, w, policy)
+L._matmul_ozaki = patched
+mesh = make_mesh_compat((1, 8), ('data', 'model'))
+with use_shard_mesh(mesh):
+    sh, _ = jax.jit(lambda p, b: forward_train(cfg, p, b))(params, batch)
+diff = float(jnp.max(jnp.abs(sh - ref)))
+print('max diff:', diff)
+assert diff < 1e-3, f'logits diverge under in-scan constraints: {diff}'
+print('OK')
+""", timeout=900)
     assert "OK" in out

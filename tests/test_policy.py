@@ -50,6 +50,8 @@ ROUND_TRIP_SPECS = [
     "ozaki-fp64x7:budget:12/pallas|shard=data|cache=plans.json|autotune",
     "ozaki-fp64:diagonal",
     "ozaki-fp64x5@2.5e-09:fast,budget:7/pallas_fused",
+    "ozaki-fp64x9|shard=model|comm=int8",
+    "ozaki-fp64/pallas_fused+epilogue|shard=model|comm=int8",
 ]
 
 
@@ -109,6 +111,8 @@ def test_spec_field_mapping():
     "ozaki-fp64:budget:3,full",      # conflicting, order-independent
     "ozaki-fp64/cuda",               # unknown backend
     "ozaki-fp64|wat=1",              # unknown option
+    "ozaki-fp64|comm=fp8",           # unknown comm mode
+    "bf16|comm=int8",                # comm on a non-ozaki scheme
 ])
 def test_malformed_specs_rejected(bad):
     with pytest.raises(ValueError):

@@ -16,7 +16,7 @@ from repro.core.ozaki import OzakiConfig, dgemm_f64, ozaki_matmul
 from repro.core.splitting import split_int
 from repro.launch.mesh import PEAK_BF16_FLOPS, PEAK_INT8_OPS
 
-from .common import emit, phi_matrix, time_fn
+from .common import emit, phi_matrix, time_fn, write_bench_json
 
 
 def run(n: int | None = None, quick: bool = False):
@@ -26,6 +26,7 @@ def run(n: int | None = None, quick: bool = False):
     a = jnp.asarray(phi_matrix(rng, n, n, 1.0))
     b = jnp.asarray(phi_matrix(rng, n, n, 1.0))
     flop = 2.0 * n ** 3
+    bench_rows = []
 
     # --- Fig. 5 analogue: unit throughput ratio on the target hardware
     emit("fig5/tpu_v5e_unit_ratio", 0.0,
@@ -36,8 +37,13 @@ def run(n: int | None = None, quick: bool = False):
         cfg = OzakiConfig(num_splits=s)
         us = time_fn(lambda c=cfg: ozaki_matmul(a, b, c))
         emit(f"fig8/INT8x{s}/n={n}", us, f"gflops={flop / us / 1e3:.2f}")
+        bench_rows.append({"name": f"INT8x{s}", "n": n, "num_splits": s,
+                           "us_per_call": us,
+                           "gflops": flop / us / 1e3})
     us = time_fn(dgemm_f64, a, b)
     emit(f"fig8/DGEMM/n={n}", us, f"gflops={flop / us / 1e3:.2f}")
+    bench_rows.append({"name": "DGEMM", "n": n, "us_per_call": us,
+                       "gflops": flop / us / 1e3})
 
     # --- Fig. 8 analytic: modeled TPU step time of INT8x9 vs bf16 GEMM
     s = 9
@@ -66,6 +72,18 @@ def run(n: int | None = None, quick: bool = False):
          f"frac={2 * t_split / t_total:.2f}")
     emit("fig9/int8_gemm(6)", t_gemms, f"frac={t_gemms / t_total:.2f}")
     emit("fig9/accumulate(7)", t_accum, f"frac={t_accum / t_total:.2f}")
+    bench_rows.append({"name": "fig9_breakdown", "n": n,
+                       "us_split": 2 * t_split, "us_gemms": t_gemms,
+                       "us_accum": t_accum, "us_total": t_total})
+
+    # persist the measured throughput table as a versioned CI artifact
+    # (same family as BENCH_streaming.json / BENCH_scheme2.json)
+    import jax
+
+    from repro.kernels.ops import INTERPRET
+    write_bench_json("BENCH_throughput.json", bench_rows,
+                     device_kind=jax.devices()[0].device_kind,
+                     interpret=INTERPRET)
 
 
 if __name__ == "__main__":

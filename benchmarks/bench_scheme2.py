@@ -1,0 +1,181 @@
+"""Ozaki Scheme I vs Scheme II: the residue-system crossover.
+
+Scheme II (arXiv:2504.08009, ``core.modular``) replaces the
+``s(s+1)/2`` slice-pair int8 GEMMs with ``ell`` residue GEMMs, ``ell``
+growing *linearly* in the mantissa budget. This benchmark pins the
+claim three ways:
+
+  * **modeled** — at the s=7-matched accuracy target and tall k, the
+    planner's Scheme II plan issues strictly fewer int8 GEMMs than
+    Scheme I's full-pair schedule (15 vs 28 at k=4096; asserted), and
+    ``core.accuracy.resolve_accuracy`` arbitrates the same way (the
+    cross-scheme cost model picks ``ozaki2_fp64`` there and
+    ``ozaki_fp64`` at a loose-target small-k point; both asserted);
+  * **measured** — wall-clock of both schemes at matched
+    ``target_error`` (CPU interpret-mode rankings are indicative only;
+    the deployable number is the GEMM count), each row carrying the
+    executed ``PipelinePlan``;
+  * **proved** — each scheme's measured ``scaled_error`` against a
+    double-double reference stays under its own guaranteed bound, and
+    the two results agree within the sum of the bounds (the matched-
+    accuracy contract the cost model trades on).
+
+The measured comparison is persisted as versioned
+``BENCH_scheme2.json`` (same artifact family as PR 6/7's
+``BENCH_streaming.json`` / ``BENCH_collective.json``).
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.accuracy import (error_bound, resolve_accuracy,
+                                 scaled_error, truncation_eta)
+from repro.core.modular import (ModularConfig, modular_error_bound,
+                                ozaki2_matmul, resolve_modular)
+from repro.core.ozaki import OzakiConfig, ozaki_matmul
+from repro.core.splitting import slice_width
+from repro.core.xmath import dd_matmul_np
+
+from .common import emit, phi_matrix, plan_gemm, time_fn, write_bench_json
+
+
+def _matched_target(k: int, s: int) -> float:
+    """Scheme I's own guaranteed truncation bound at (k, s): the
+    accuracy contract both schemes are sized for."""
+    return k * truncation_eta(s, slice_width(k, fuse_terms=s))
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(11)
+    rows = []
+
+    # --- modeled GEMM-count win at tall k (the ISSUE acceptance pin):
+    # at the s=7-matched target and k=4096 the planner's Scheme II plan
+    # must issue strictly fewer int8 GEMMs than Scheme I full-pair.
+    k_tall, s_match = 4096, 7
+    tgt_tall = _matched_target(k_tall, s_match)
+    plan1 = plan_gemm(512, 512, k_tall, scheme="ozaki_fp64",
+                      target_error=tgt_tall)
+    plan2 = plan_gemm(512, 512, k_tall, scheme="ozaki2_fp64",
+                      target_error=tgt_tall)
+    assert plan2.num_gemms < plan1.num_gemms, (plan2, plan1)
+    choice = resolve_accuracy(k_tall, 10, target_error=tgt_tall,
+                              schemes=("ozaki_fp64", "ozaki2_fp64"),
+                              m=512, n=512)
+    assert choice.scheme == "ozaki2_fp64", choice
+    emit(f"scheme2/model/tallk/k={k_tall}", 0.0,
+         f"target={tgt_tall:.3g};gemms_scheme1={plan1.num_gemms};"
+         f"gemms_scheme2={plan2.num_gemms};winner={choice.scheme}",
+         plan=plan2)
+    rows.append({"name": "model_tallk", "k": k_tall,
+                 "target_error": tgt_tall,
+                 "gemms_scheme1": plan1.num_gemms,
+                 "gemms_scheme2": plan2.num_gemms,
+                 "arbitration": choice.scheme,
+                 "costs": [list(c) for c in choice.costs]})
+
+    # --- and the arbitration flips back at a loose-target small-k
+    # point: few kept pairs beat the CRT's fixed modulus floor.
+    choice_1 = resolve_accuracy(256, 9, target_error=1e-2,
+                                schemes=("ozaki_fp64", "ozaki2_fp64"),
+                                m=256, n=256)
+    assert choice_1.scheme == "ozaki_fp64", choice_1
+    emit("scheme2/model/smallk/k=256", 0.0,
+         f"target=1e-2;winner={choice_1.scheme};"
+         f"costs={dict(choice_1.costs)}")
+    rows.append({"name": "model_smallk", "k": 256, "target_error": 1e-2,
+                 "arbitration": choice_1.scheme,
+                 "costs": [list(c) for c in choice_1.costs]})
+
+    # --- measured matched-target comparison (CPU indicative): both
+    # schemes sized for the same contract, errors proved under bound.
+    shapes = ([(16, 16, 1024)] if quick
+              else [(48, 48, 256), (32, 32, 2048)])
+    for m, n, k in shapes:
+        tgt = _matched_target(k, s_match)
+        a = jnp.asarray(phi_matrix(rng, m, k, 1.0))
+        b = jnp.asarray(phi_matrix(rng, k, n, 1.0))
+        a_np, b_np = np.asarray(a), np.asarray(b)
+        hi, lo = dd_matmul_np(a_np, b_np)
+
+        s1, _ = resolve_accuracy(k, 26, target_error=tgt)
+        cfg1 = OzakiConfig(num_splits=s1, backend="xla")
+        us1 = time_fn(lambda: ozaki_matmul(a, b, cfg1))
+        c1 = np.asarray(ozaki_matmul(a, b, cfg1))
+        err1 = scaled_error(c1, hi, a_np, b_np, ref_lo=lo)
+        bound1 = error_bound(s1, cfg1.width_for(k), k)
+        assert err1 <= bound1, (err1, bound1)
+
+        cfg2 = ModularConfig(target_error=tgt, backend="xla")
+        point = cfg2.point(k)
+        us2 = time_fn(lambda: ozaki2_matmul(a, b, cfg2))
+        c2 = np.asarray(ozaki2_matmul(a, b, cfg2))
+        err2 = scaled_error(c2, hi, a_np, b_np, ref_lo=lo)
+        bound2 = modular_error_bound(point.beta, k, point.moduli)
+        assert err2 <= bound2, (err2, bound2)
+
+        # matched-accuracy contract: the schemes agree within the sum
+        # of their guaranteed bounds on the same normalization
+        cross = scaled_error(c1, c2, a_np, b_np)
+        assert cross <= bound1 + bound2, (cross, bound1, bound2)
+
+        g1 = cfg1.num_gemms
+        g2 = len(point.moduli)
+        emit(f"scheme2/measured/m={m}/n={n}/k={k}", us2,
+             f"target={tgt:.3g};scheme1_us={us1:.1f};"
+             f"gemms_scheme1={g1};gemms_scheme2={g2};"
+             f"err_scheme1={err1:.3g};err_scheme2={err2:.3g}",
+             plan=cfg2.plan(k))
+        rows.append({"name": "measured", "m": m, "n": n, "k": k,
+                     "target_error": tgt, "us_scheme1": us1,
+                     "us_scheme2": us2, "gemms_scheme1": g1,
+                     "gemms_scheme2": g2, "beta": point.beta,
+                     "scaled_error_scheme1": err1,
+                     "scaled_error_scheme2": err2,
+                     "bound_scheme1": bound1, "bound_scheme2": bound2})
+
+    # --- accuracy dial: the ozaki2-fp64xL modulus count vs error, the
+    # Scheme II analogue of Fig. 6's splits-vs-error sweep.
+    m, n, k = (16, 16, 96) if quick else (32, 32, 96)
+    a = jnp.asarray(phi_matrix(rng, m, k, 1.0))
+    b = jnp.asarray(phi_matrix(rng, k, n, 1.0))
+    a_np, b_np = np.asarray(a), np.asarray(b)
+    hi, lo = dd_matmul_np(a_np, b_np)
+    for ell in (8, 14, 20):
+        point = resolve_modular(k, num_moduli=ell)
+        cfg = ModularConfig(num_moduli=ell)
+        c = np.asarray(ozaki2_matmul(a, b, cfg))
+        err = scaled_error(c, hi, a_np, b_np, ref_lo=lo)
+        bound = modular_error_bound(point.beta, k, point.moduli)
+        assert err <= bound, (ell, err, bound)
+        emit(f"scheme2/dial/L={ell}/k={k}", 0.0,
+             f"beta={point.beta};scaled_error={err:.3g};"
+             f"bound={bound:.3g}")
+        rows.append({"name": "dial", "num_moduli": ell, "k": k,
+                     "beta": point.beta, "scaled_error": err,
+                     "bound": bound})
+
+    import jax
+
+    from repro.kernels.ops import INTERPRET
+    write_bench_json("BENCH_scheme2.json", rows,
+                     device_kind=jax.devices()[0].device_kind,
+                     interpret=INTERPRET)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    import jax
+
+    from .common import CSV_HEADER, add_plan_args, configure_from_args
+
+    jax.config.update("jax_enable_x64", True)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes (CI smoke run)")
+    add_plan_args(ap)
+    args = ap.parse_args()
+    configure_from_args(args)
+    print(CSV_HEADER)
+    run(quick=args.quick)

@@ -107,7 +107,15 @@ def plan_gemm(m: int, n: int, k: int, **kwargs):
     """
     from repro.core.tuning import select_pipeline_plan
     pol = CONTEXT.policy
-    if pol is not None and pol.scheme == "ozaki_fp64":
+    if pol is not None and pol.scheme == "ozaki2_fp64":
+        kwargs.setdefault("scheme", "ozaki2_fp64")
+        kwargs.setdefault("backend", pol.backend)
+        kwargs.setdefault("accum", "f64")
+        if pol.num_splits is not None:        # the xL modulus-count dial
+            kwargs.setdefault("num_moduli", pol.num_splits)
+        if pol.target_error is not None:
+            kwargs.setdefault("target_error", pol.target_error)
+    elif pol is not None and pol.scheme == "ozaki_fp64":
         kwargs.setdefault("backend", pol.backend)
         kwargs.setdefault("fuse_epilogue", pol.fuse_epilogue)
         kwargs.setdefault("streaming", pol.streaming)

@@ -34,13 +34,14 @@ def main(argv=None) -> None:
     from . import (bench_distributed, bench_fig4_analytic,
                    bench_fig6_accuracy, bench_fig7_zerocancel,
                    bench_fig8_throughput, bench_fused_pipeline,
-                   bench_quantum_sim, bench_serve_latency)
+                   bench_quantum_sim, bench_scheme2, bench_serve_latency)
     bench_fig4_analytic.run()
     bench_fig6_accuracy.run()
     bench_fig7_zerocancel.run()
     bench_fig8_throughput.run()
     bench_fused_pipeline.run()
     bench_quantum_sim.run()
+    bench_scheme2.run()
     bench_serve_latency.run()
     bench_distributed.run()
     if common.CONTEXT.plan_cache is not None:

@@ -43,6 +43,26 @@ def main():
             marker = "   <- FP64-equivalent"
         print(f"{spec:>14s} {cfg.num_gemms:12d} {e:12.2e}{marker}")
 
+    # Scheme II: the same dial, but #GEMMs grows LINEARLY in the
+    # mantissa budget (one int8 GEMM per residue modulus, xL pins L)
+    print()
+    for ell in (10, 15, 20):
+        spec = f"ozaki2-fp64x{ell}"
+        point = repro.MatmulPolicy.parse(spec).modular_config().point(k)
+        e = err(repro.matmul(a, b, precision=spec))
+        marker = "   <- FP64-equivalent" if e < 1e-15 else ""
+        print(f"{spec:>14s} {len(point.moduli):12d} {e:12.2e}{marker}")
+
+    # and the cross-scheme cost model arbitrating at matched accuracy
+    from repro.core.accuracy import resolve_accuracy
+    for kk, tgt in ((k, 1e-2), (4096, 1e-20)):
+        choice = resolve_accuracy(kk, 10, target_error=tgt,
+                                  schemes=("ozaki_fp64", "ozaki2_fp64"),
+                                  m=n, n=n)
+        costs = "  ".join(f"{s}:{c:.1f}" for s, c in choice.costs)
+        print(f"resolve_accuracy(k={kk}, @{tgt:g}) -> {choice.scheme}"
+              f"   (modeled GEMMs  {costs})")
+
 
 if __name__ == "__main__":
     main()

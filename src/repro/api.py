@@ -60,7 +60,7 @@ import re
 import threading
 from typing import Optional
 
-SCHEMES = ("bf16", "int8_quant", "ozaki_fp64")
+SCHEMES = ("bf16", "int8_quant", "ozaki_fp64", "ozaki2_fp64")
 
 _SCHEME_RE = re.compile(r"^(?P<scheme>[a-z0-9_\-]+?)(?:x(?P<splits>\d+))?$")
 
@@ -146,7 +146,19 @@ class MatmulPolicy:
                 "streaming subsumes the epilogue fusion (pick one of "
                 "'+streaming' / '+epilogue')")
         _validate_pair_policy(self.pair_policy)
-        if self.scheme != "ozaki_fp64":
+        if self.scheme == "ozaki2_fp64":
+            # Scheme II shares the backend/accuracy/cache knobs; what it
+            # rejects is the Scheme I pair machinery (no pair schedule to
+            # truncate — accuracy scales via the mantissa budget), the
+            # Scheme I kernel fusions, and sharding (no residue transport
+            # yet). ``num_splits`` IS meaningful: it pins the residue
+            # modulus count (the ``ozaki2-fp64xL`` accuracy dial).
+            for field, why in _OZAKI2_REJECTED.items():
+                if getattr(self, field) != _ozaki_only_fields()[field]:
+                    raise ValueError(
+                        f"{field}={getattr(self, field)!r} does not apply "
+                        f"to scheme 'ozaki2-fp64': {why}")
+        elif self.scheme != "ozaki_fp64":
             for field, default in _ozaki_only_fields().items():
                 if getattr(self, field) != default:
                     raise ValueError(
@@ -236,6 +248,36 @@ class MatmulPolicy:
             pair_policy=self.pair_policy, target_error=self.target_error,
             fast_mode=self.fast_mode, shard_axis=self.shard_axis,
             comm=self.comm, fuse_diagonals=True, interpret=interpret)
+
+    def modular_config(self, *, interpret: Optional[bool] = None):
+        """The ``core.modular.ModularConfig`` this policy resolves to
+        (Scheme II). ``num_splits`` maps onto the residue modulus count
+        (the ``ozaki2-fp64xL`` spec dial); ``target_error`` sizes the
+        mantissa budget via the guaranteed bound."""
+        if self.scheme != "ozaki2_fp64":
+            raise ValueError(f"scheme {self.scheme!r} has no ModularConfig")
+        from repro.core.modular import ModularConfig
+        if interpret is None:
+            from repro.kernels.ops import INTERPRET
+            interpret = INTERPRET
+        return ModularConfig(num_moduli=self.num_splits,
+                             target_error=self.target_error,
+                             backend=self.backend, interpret=interpret)
+
+
+# MatmulPolicy fields Scheme II rejects, with the reason (the rest —
+# backend, num_splits, target_error, plan_cache, autotune — carry over).
+_OZAKI2_REJECTED = {
+    "fuse_epilogue": "no residue epilogue kernel (the residue GEMM stage "
+                     "is already one batched launch)",
+    "streaming": "no residue streaming kernel",
+    "fast_mode": "no pair schedule to truncate (use target_error or a "
+                 "pinned modulus count xL instead)",
+    "pair_policy": "no pair schedule to truncate (use target_error or a "
+                   "pinned modulus count xL instead)",
+    "shard_axis": "no residue collective transport yet",
+    "comm": "no residue collective transport yet",
+}
 
 
 @functools.lru_cache(maxsize=1)
@@ -476,6 +518,8 @@ def matmul(a, b, precision=None):
         return _matmul_bf16(a, b)
     if pol.scheme == "int8_quant":
         return _matmul_int8_quant(a, b)
+    if pol.scheme == "ozaki2_fp64":
+        return _matmul_ozaki2(a, b, pol)
     return _matmul_ozaki_dispatch(a, b, pol)
 
 
@@ -500,6 +544,63 @@ def _matmul_int8_quant(a, b):
     from repro.models.layers import _matmul_int8_quant as impl
     import jax.numpy as jnp
     return impl(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def _apply_tuned_modular_plan(cfg, cache, *, m: int, n: int, k: int,
+                              batch: int):
+    """Fold a cached Scheme II tuned plan into a ModularConfig — tile
+    shapes only (result-invariant: the residue GEMMs are exact integer
+    arithmetic under any tiling)."""
+    if cache is None:
+        return cfg
+    from repro.core.autotune import plan_cache_key
+    plan = cache.get(plan_cache_key(m, n, k, batch=batch, dtype="float64",
+                                    accum="f64", backend=cfg.backend,
+                                    scheme="ozaki2_fp64"))
+    if plan is None or getattr(plan, "scheme", "ozaki_fp64") != \
+            "ozaki2_fp64":
+        return cfg
+    return dataclasses.replace(cfg, tile=plan.tile)
+
+
+def _matmul_ozaki2(a, b, pol: MatmulPolicy):
+    """Scheme II dispatch: residue-system int8 GEMMs + CRT (f64 only).
+
+    The residue path reconstructs through an FP64 CRT sum, so there is
+    no df32/DW/complex route — those raise instead of silently running a
+    different algorithm than the policy named.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.modular import ozaki2_matmul, ozaki2_matmul_batched
+    from repro.core.xmath import DW
+
+    if isinstance(a, DW) or isinstance(b, DW):
+        raise TypeError("ozaki2-fp64 has no DW path (the CRT "
+                        "reconstruction is FP64); use scheme 'ozaki-fp64'")
+    if jnp.issubdtype(a.dtype, jnp.complexfloating) or \
+            jnp.issubdtype(b.dtype, jnp.complexfloating):
+        raise TypeError("ozaki2-fp64 has no complex path yet; use scheme "
+                        "'ozaki-fp64'")
+    if a.dtype != b.dtype:
+        raise TypeError(f"dtype mismatch: {a.dtype} @ {b.dtype}")
+    if a.dtype != jnp.float64:
+        raise TypeError(f"ozaki2-fp64 runs on float64 operands only "
+                        f"(FP64 CRT reconstruction), got {a.dtype}")
+    cfg = pol.modular_config()
+    cache = _active_plan_cache(pol)
+    if a.ndim == 3:
+        bsz, m, k = a.shape
+        cfg = _apply_tuned_modular_plan(cfg, cache, m=m, n=b.shape[-1],
+                                        k=k, batch=bsz)
+        return ozaki2_matmul_batched(a, b, cfg)
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"matmul expects 2-D or 3-D operands, got "
+                         f"{a.shape} @ {b.shape}")
+    m, k = a.shape
+    cfg = _apply_tuned_modular_plan(cfg, cache, m=m, n=b.shape[1], k=k,
+                                    batch=1)
+    return ozaki2_matmul(a, b, cfg)
 
 
 def _matmul_ozaki_dispatch(a, b, pol: MatmulPolicy):

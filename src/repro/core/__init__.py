@@ -1,8 +1,9 @@
 """ozJAX core — the Ozaki scheme on integer matrix multiplication units."""
-from .accuracy import (MAX_SPLITS, accum_floor, error_bound,
+from .accuracy import (MAX_SPLITS, SchemeChoice, accum_floor, error_bound,
                        exponent_spread, input_truncation_eta, kept_pairs,
                        min_splits_for, pair_budget_for, required_splits,
-                       resolve_accuracy, scaled_error, truncation_eta)
+                       resolve_accuracy, scaled_error, scheme_costs,
+                       truncation_eta)
 from .analytic import (ALL_MMUS, DGEMM_MANTISSA_SPACE, FP16_FP32, INT4_INT32,
                        INT8_INT32, INT12_INT32, MMUSpec, ozaki_flops,
                        ozaki_hp_accum_ops)
@@ -10,15 +11,22 @@ from .auto_split import auto_num_splits, auto_num_splits_complex
 from .autotune import (AutotuneReport, PlanCache, PlanKey, autotune_plan,
                        candidate_plans, measure_plan, plan_cache_key,
                        use_plan_cache)
-from .executors import (EpilogueExecutor, FusedExecutor, PallasExecutor,
-                        XlaExecutor, get_executor)
+from .executors import (EpilogueExecutor, FusedExecutor,
+                        ModularFusedExecutor, ModularPallasExecutor,
+                        ModularXlaExecutor, PallasExecutor, XlaExecutor,
+                        get_executor)
+from .modular import (MAX_BETA, ModularConfig, ModularPoint, min_beta_for,
+                      modular_error_bound, modular_eta, modular_plan,
+                      ozaki2_matmul, ozaki2_matmul_batched, resolve_modular,
+                      select_moduli, usable_moduli)
 from .ozaki import (BACKENDS, OzakiConfig, dgemm_f64, gemm_fp32_pass,
                     int32_to_dw, ozaki_matmul, ozaki_matmul_batched,
                     ozaki_matmul_complex, ozaki_matmul_dw,
                     resolve_accuracy_config)
 from .splitting import (SplitResult, compute_alpha, reconstruct, row_exponents,
                         slice_width, split_int, split_int_dw, split_tail)
-from .tuning import (BATCH_LAYOUTS, FUSION_MODES, PAIR_POLICIES, PipelinePlan,
+from .tuning import (BATCH_LAYOUTS, FUSION_MODES, PAIR_POLICIES,
+                     PLAN_SCHEMES, PipelinePlan,
                      TilePlan, apply_pipeline_plan, apply_plan,
                      diagonal_groups, hbm_pass_model, parse_pair_policy,
                      plan_for, plan_schedule_ok, reset_downgrade_warnings,
@@ -30,7 +38,12 @@ from .xmath import (DW, dd_matmul_f64, dd_matmul_np, df32_from_f64,
 
 __all__ = [
     "ALL_MMUS", "AutotuneReport", "BACKENDS", "BATCH_LAYOUTS",
-    "DGEMM_MANTISSA_SPACE", "DW", "MAX_SPLITS", "PAIR_POLICIES",
+    "DGEMM_MANTISSA_SPACE", "DW", "MAX_BETA", "MAX_SPLITS",
+    "ModularConfig", "ModularFusedExecutor", "ModularPallasExecutor",
+    "ModularPoint", "ModularXlaExecutor", "PLAN_SCHEMES", "PAIR_POLICIES",
+    "SchemeChoice", "min_beta_for", "modular_error_bound", "modular_eta",
+    "modular_plan", "ozaki2_matmul", "ozaki2_matmul_batched",
+    "resolve_modular", "scheme_costs", "select_moduli", "usable_moduli",
     "accum_floor", "error_bound", "exponent_spread", "input_truncation_eta",
     "kept_pairs", "min_splits_for", "pair_budget_for", "parse_pair_policy",
     "plan_schedule_ok", "required_splits", "reset_downgrade_warnings",

@@ -51,20 +51,24 @@ the device.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
+# core.modular imports tuning/splitting only (never this module), so the
+# top-level import is cycle-free; it powers the cross-scheme cost model.
+from .modular import modular_eta, resolve_modular
 from .splitting import row_exponents, slice_width
 from .tuning import diagonal_groups, parse_pair_policy
 
-__all__ = ["MAX_SPLITS", "kept_pairs", "truncation_eta",
+__all__ = ["MAX_SPLITS", "SchemeChoice", "kept_pairs", "truncation_eta",
            "input_truncation_eta", "accum_floor", "error_bound",
            "min_splits_for", "pair_budget_for", "plan_meets_target",
-           "resolve_accuracy", "exponent_spread", "required_splits",
-           "scaled_error"]
+           "resolve_accuracy", "scheme_costs", "exponent_spread",
+           "required_splits", "scaled_error"]
 
 MAX_SPLITS = 26     # ceil(2 * 53 / 4): past this even INT4 covers dd64
 
@@ -200,8 +204,12 @@ def plan_meets_target(plan, k: int, target_error: float, *,
     the target is the contract, not one specific ``(s, policy)`` string —
     a measured winner with MORE pairs or splits than the minimal resolved
     point still satisfies it (and must be accepted, or every cache hit
-    would re-tune forever).
+    would re-tune forever). Scheme II plans are judged on THEIR
+    guaranteed bound (``k * modular_eta(beta)``) — under a target the
+    two families are interchangeable contracts.
     """
+    if getattr(plan, "scheme", "ozaki_fp64") == "ozaki2_fp64":
+        return k * modular_eta(plan.beta) <= target_error
     fuse = plan.fuse_diagonals or plan.concat_k
     w = slice_width(k, ell_acc=ell_acc, ell_in=ell_in,
                     fuse_terms=plan.num_splits if fuse else 1)
@@ -210,11 +218,79 @@ def plan_meets_target(plan, k: int, target_error: float, *,
     return k * eta <= target_error
 
 
+@dataclasses.dataclass(frozen=True)
+class SchemeChoice:
+    """One arbitrated cross-scheme operating point (hashable).
+
+    ``scheme`` names the winning family; the family's knobs follow
+    (Scheme I: ``num_splits``/``pair_policy``; Scheme II: ``beta``/
+    ``num_moduli``, with ``num_splits`` the integerization slice count).
+    ``gemms`` is the winner's modeled int8-GEMM-equivalent cost and
+    ``costs`` records every candidate's, so callers (and tests) can see
+    WHY the arbitration went the way it did.
+    """
+
+    scheme: str
+    num_splits: int
+    pair_policy: str = "full"
+    beta: int = 0
+    num_moduli: int = 0
+    gemms: float = 0.0
+    costs: tuple = ()        # ((scheme, modeled cost), ...)
+
+
+def _scheme2_cost(num_moduli: int, num_splits: int, k: int,
+                  m: Optional[int], n: Optional[int]) -> float:
+    """Scheme II's modeled cost in int8-GEMM equivalents (2mnk ops each).
+
+    The residue GEMMs are the linear term (``ell`` launches); the CRT
+    reconstruction is an O(ell^2) elementwise pass over the (m, n)
+    output (``ell^2 / 2k`` GEMM-equivalents) and, when the output shape
+    is known, the residue extraction tensordots add
+    ``ell * s * (m + n) / 2mn`` — both vanish for tall-k shapes, which
+    is exactly where Scheme II's linear GEMM count wins.
+    """
+    cost = float(num_moduli) + num_moduli ** 2 / (2.0 * k)
+    if m is not None and n is not None:
+        cost += num_moduli * num_splits * (m + n) / (2.0 * m * n)
+    return cost
+
+
+def scheme_costs(k: int, num_splits: int, *, target_error: Optional[float],
+                 pair_policy: str = "full", full_pairs: bool = False,
+                 m: Optional[int] = None,
+                 n: Optional[int] = None) -> tuple:
+    """Both families' modeled costs at MATCHED accuracy.
+
+    Scheme I at the resolved ``(s, policy)`` costs its kept-pair count.
+    Scheme II is sized for the same contract — the explicit
+    ``target_error`` when one is set, else Scheme I's own guaranteed
+    truncation bound (so a no-target comparison is still
+    accuracy-matched, not apples-to-oranges). An infeasible Scheme II
+    point (moduli pool exhausted) costs ``inf``.
+    """
+    cost_1 = float(len(kept_pairs(num_splits, pair_policy=pair_policy,
+                                  full_pairs=full_pairs)))
+    if target_error is None:
+        w = slice_width(k, fuse_terms=num_splits)
+        target_error = k * truncation_eta(num_splits, w,
+                                          pair_policy=pair_policy,
+                                          full_pairs=full_pairs)
+    try:
+        point = resolve_modular(k, target_error=target_error)
+    except ValueError:
+        return (("ozaki_fp64", cost_1), ("ozaki2_fp64", math.inf))
+    cost_2 = _scheme2_cost(len(point.moduli), point.num_splits, k, m, n)
+    return (("ozaki_fp64", cost_1), ("ozaki2_fp64", cost_2))
+
+
 def resolve_accuracy(k: int, num_splits: int, *,
                      target_error: Optional[float] = None,
                      fast_mode: bool = False, pair_policy: str = "full",
                      ell_acc: int = 31, ell_in: int = 7, fuse: bool = True,
-                     full_pairs: bool = False) -> tuple[int, str]:
+                     full_pairs: bool = False,
+                     schemes: Optional[Sequence[str]] = None,
+                     m: Optional[int] = None, n: Optional[int] = None):
     """Resolve the accuracy knobs into a concrete ``(s, pair_policy)``.
 
     * ``target_error`` REDUCES s below the configured operating point
@@ -227,6 +303,15 @@ def resolve_accuracy(k: int, num_splits: int, *,
     * An explicit non-"full" ``pair_policy`` always wins over fast_mode.
 
     Idempotent: resolving an already-resolved point returns it unchanged.
+
+    ``schemes`` turns the resolver into the CROSS-SCHEME cost model:
+    pass the candidate families (e.g. ``("ozaki_fp64", "ozaki2_fp64")``)
+    and the return type becomes a ``SchemeChoice`` — both families are
+    sized for the same accuracy contract and the one with the fewer
+    modeled int8-GEMM equivalents wins (``m``/``n`` refine Scheme II's
+    elementwise overhead terms when the output shape is known). Scheme I
+    wins ties: it is the bitwise-validated incumbent. Without
+    ``schemes`` the legacy ``(s, policy)`` tuple contract is unchanged.
     """
     s = num_splits
     if target_error is not None:
@@ -242,7 +327,35 @@ def resolve_accuracy(k: int, num_splits: int, *,
                                      full_pairs=full_pairs)
         else:
             policy = "diagonal"
-    return s, policy
+    if schemes is None:
+        return s, policy
+    for name in schemes:
+        if name not in ("ozaki_fp64", "ozaki2_fp64"):
+            raise ValueError(f"unknown scheme {name!r} in schemes")
+    costs = dict(scheme_costs(k, s, target_error=target_error,
+                              pair_policy=policy, full_pairs=full_pairs,
+                              m=m, n=n))
+    ranked = sorted((name for name in schemes),
+                    key=lambda name: (costs[name],
+                                      name != "ozaki_fp64"))
+    winner = ranked[0]
+    all_costs = tuple((name, costs[name]) for name in schemes)
+    if winner == "ozaki2_fp64" and math.isfinite(costs[winner]):
+        if target_error is not None:
+            point = resolve_modular(k, target_error=target_error)
+        else:
+            w = slice_width(k, ell_acc=ell_acc, ell_in=ell_in,
+                            fuse_terms=s if fuse else 1)
+            point = resolve_modular(
+                k, target_error=k * truncation_eta(
+                    s, w, pair_policy=policy, full_pairs=full_pairs))
+        return SchemeChoice(scheme="ozaki2_fp64",
+                            num_splits=point.num_splits, beta=point.beta,
+                            num_moduli=len(point.moduli),
+                            gemms=costs[winner], costs=all_costs)
+    return SchemeChoice(scheme="ozaki_fp64", num_splits=s,
+                        pair_policy=policy, gemms=costs["ozaki_fp64"],
+                        costs=all_costs)
 
 
 # ----------------------------------------------------------------------------

@@ -64,11 +64,16 @@ __all__ = ["PLAN_CACHE_VERSION", "PlanKey", "PlanCache", "plan_cache_key",
            "AutotuneReport", "use_plan_cache", "active_plan_cache",
            "set_plan_cache", "warn_if_interpret_ranked"]
 
+# v3: keys carry the emulation ``scheme`` (Scheme I slice pairs vs
+# Scheme II residue GEMMs — ``tuning.PLAN_SCHEMES``), so tuned winners
+# from the two families never collide under one key. v2 entries predate
+# the scheme field and load as empty (the standard fallback-to-empty
+# path — analytic plans until re-tuned).
 # v2: entries carry a ``meta`` dict recording the measurement mode
-# (``{"interpret": bool | None}``). v1 files load as empty (the standard
-# fallback-to-empty path) — the old entries were indistinguishable from
-# hardware-measured plans, which is exactly the bug the bump fixes.
-PLAN_CACHE_VERSION = 2
+# (``{"interpret": bool | None}``). v1 files load as empty — the old
+# entries were indistinguishable from hardware-measured plans, which is
+# exactly the bug that bump fixed.
+PLAN_CACHE_VERSION = 3
 
 # Warns (once per cache key) when a compiled run is served a plan whose
 # measurement ranking ran in Pallas interpret mode: interpret timings
@@ -123,6 +128,7 @@ class PlanKey:
     dtype: str = "float64"
     backend: str = "pallas_fused"
     device_kind: str = "cpu"
+    scheme: str = "ozaki_fp64"
 
     def __post_init__(self):
         if not isinstance(self.dtype, str) or self.dtype != \
@@ -132,7 +138,7 @@ class PlanKey:
     def encode(self) -> str:
         return (f"m={self.m};n={self.n};k={self.k};batch={self.batch};"
                 f"dtype={self.dtype};backend={self.backend};"
-                f"device={self.device_kind}")
+                f"device={self.device_kind};scheme={self.scheme}")
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -145,11 +151,13 @@ class PlanKey:
 def plan_cache_key(m: int, n: int, k: int, *, batch: int = 1,
                    dtype=None, accum: str = "df32",
                    backend: str = "pallas_fused",
-                   device_kind: Optional[str] = None) -> PlanKey:
+                   device_kind: Optional[str] = None,
+                   scheme: str = "ozaki_fp64") -> PlanKey:
     """The key ``select_pipeline_plan`` and the engine pre-warm agree on."""
     return PlanKey(m=m, n=n, k=k, batch=batch,
                    dtype=_canon_dtype(dtype, accum), backend=backend,
-                   device_kind=device_kind or default_device_kind())
+                   device_kind=device_kind or default_device_kind(),
+                   scheme=scheme)
 
 
 class PlanCache:
@@ -359,6 +367,9 @@ def candidate_plans(m: int, n: int, k: int, *, batch: int = 1,
                     fast_mode: bool = False,
                     pair_policy: Optional[str] = None,
                     max_candidates: Optional[int] = None,
+                    scheme: str = "ozaki_fp64",
+                    num_moduli: Optional[int] = None,
+                    cross_scheme: bool = True,
                     **analytic_kwargs) -> list[PipelinePlan]:
     """Enumerate candidate plans around the analytic seed.
 
@@ -380,6 +391,15 @@ def candidate_plans(m: int, n: int, k: int, *, batch: int = 1,
     dedup, keeping the analytic seed. ``analytic_kwargs``
     (``mantissa_space``/``mmu``/``vmem_budget``) reach the analytic seed
     planner unchanged.
+
+    Cross-scheme search: when ``target_error`` pins an accuracy contract
+    and ``cross_scheme`` is on, the OTHER scheme family's analytic seed
+    joins the candidate list — a Scheme I search (f64 accumulation only;
+    the residue path reconstructs through FP64 CRT) enumerates the
+    matching Scheme II operating point and vice versa, so the
+    measurement arbitrates between the families for real instead of
+    trusting the GEMM-count model. Both seeds guarantee the same target,
+    so any winner honors the contract.
     """
     base = select_pipeline_plan(
         m, n, k, batch=batch, broadcast_weights=broadcast_weights,
@@ -387,12 +407,42 @@ def candidate_plans(m: int, n: int, k: int, *, batch: int = 1,
         fuse_epilogue=fuse_epilogue, streaming=streaming,
         shard_axis=shard_axis, comm=comm,
         interpret=interpret, target_error=target_error,
-        fast_mode=fast_mode, pair_policy=pair_policy, **analytic_kwargs)
+        fast_mode=fast_mode, pair_policy=pair_policy, scheme=scheme,
+        num_moduli=num_moduli, **analytic_kwargs)
     cands = [base]
 
     def add(plan: PipelinePlan):
         if plan not in cands and plan_schedule_ok(plan, k):
             cands.append(plan)
+
+    if scheme == "ozaki2_fp64":
+        # the residue path has no pair schedule / fusion crossover to
+        # search: the launch-level space is the GEMM tile shapes, plus
+        # (under a target) the Scheme I seed for cross-family arbitration
+        for tile in _tile_variants(base.tile):
+            add(dataclasses.replace(base, tile=tile))
+        if target_error is not None and cross_scheme and \
+                shard_axis is None:
+            add(select_pipeline_plan(
+                m, n, k, batch=batch, broadcast_weights=broadcast_weights,
+                backend=backend, accum="f64",
+                fuse_epilogue=fuse_epilogue, streaming=streaming,
+                interpret=interpret, target_error=target_error,
+                **analytic_kwargs))
+        if max_candidates is not None and len(cands) > max_candidates:
+            cands = cands[:max_candidates]
+        return cands
+
+    if target_error is not None and cross_scheme and accum == "f64" and \
+            shard_axis is None:
+        try:
+            add(select_pipeline_plan(
+                m, n, k, batch=batch, broadcast_weights=broadcast_weights,
+                backend=backend, interpret=interpret,
+                target_error=target_error, scheme="ozaki2_fp64",
+                **analytic_kwargs))
+        except ValueError:
+            pass            # moduli pool exhausted: no Scheme II point
 
     # fusion-mode flips (pallas_fused only; all modes bitwise-equal —
     # streaming included, so the measurement decides whether eliminating
@@ -490,9 +540,18 @@ def _plan_runner(plan: PipelinePlan, a, b) -> Callable[[], object]:
     from .ozaki import OzakiConfig, ozaki_matmul, ozaki_matmul_batched
     from .tuning import apply_pipeline_plan
 
-    cfg = apply_pipeline_plan(OzakiConfig(), plan)
     a = jnp.asarray(a)
     b = jnp.asarray(b)
+    if getattr(plan, "scheme", "ozaki_fp64") == "ozaki2_fp64":
+        from .modular import (ModularConfig, ozaki2_matmul,
+                              ozaki2_matmul_batched)
+        mcfg = ModularConfig(beta=plan.beta, num_moduli=plan.num_moduli,
+                             backend=plan.backend,
+                             interpret=plan.interpret, tile=plan.tile)
+        if a.ndim == 3:
+            return lambda: ozaki2_matmul_batched(a, b, mcfg)
+        return lambda: ozaki2_matmul(a, b, mcfg)
+    cfg = apply_pipeline_plan(OzakiConfig(), plan)
     if a.ndim == 3:
         return lambda: ozaki_matmul_batched(a, b, cfg)
     if str(a.dtype) == "float64":
@@ -558,6 +617,8 @@ def autotune_plan(m: int, n: int, k: int, *, batch: int = 1,
                   candidates: Optional[Sequence[PipelinePlan]] = None,
                   max_candidates: Optional[int] = 8, warmup: int = 1,
                   iters: int = 3, save: bool = True,
+                  scheme: str = "ozaki_fp64",
+                  num_moduli: Optional[int] = None,
                   **analytic_kwargs) -> AutotuneReport:
     """Measure candidate plans and return the best (stored in ``cache``).
 
@@ -572,7 +633,15 @@ def autotune_plan(m: int, n: int, k: int, *, batch: int = 1,
     """
     accuracy_pinned = (target_error is not None or fast_mode or
                        pair_policy is not None)
-    if accuracy_pinned:
+    if scheme == "ozaki2_fp64":
+        accum = "f64"
+        if num_moduli is None:
+            from .modular import resolve_modular    # lazy: no cycle
+            num_moduli = len(resolve_modular(
+                k, target_error=target_error,
+                mantissa_space=analytic_kwargs.get(
+                    "mantissa_space", DGEMM_MANTISSA_SPACE)).moduli)
+    elif accuracy_pinned:
         from .accuracy import resolve_accuracy      # lazy: no cycle
         base_s = (num_splits if num_splits is not None else
                   select_num_splits(
@@ -585,7 +654,8 @@ def autotune_plan(m: int, n: int, k: int, *, batch: int = 1,
             pair_policy=pair_policy if pair_policy is not None else "full")
     dtype = _canon_dtype(dtype, accum)
     key = plan_cache_key(m, n, k, batch=batch, dtype=dtype, accum=accum,
-                         backend=backend, device_kind=device_kind)
+                         backend=backend, device_kind=device_kind,
+                         scheme=scheme)
     if cache is not None:
         hit = cache.get(key)
         # same acceptance rule as select_pipeline_plan: under a pinned
@@ -595,7 +665,8 @@ def autotune_plan(m: int, n: int, k: int, *, batch: int = 1,
         if hit is not None and _cached_hit_acceptable(
                 hit, k, num_splits=num_splits, target_error=target_error,
                 accuracy_pinned=accuracy_pinned,
-                policy=pair_policy if pair_policy is not None else "full"):
+                policy=pair_policy if pair_policy is not None else "full",
+                scheme=scheme, num_moduli=num_moduli):
             warn_if_interpret_ranked(cache, key, interpret)
             return AutotuneReport(key=key, best=hit,
                                   best_us=cache.measured_us(key) or 0.0,
@@ -608,7 +679,7 @@ def autotune_plan(m: int, n: int, k: int, *, batch: int = 1,
             shard_axis=shard_axis, comm=comm,
             interpret=interpret, target_error=target_error,
             pair_policy=pair_policy, max_candidates=max_candidates,
-            **analytic_kwargs)
+            scheme=scheme, num_moduli=num_moduli, **analytic_kwargs)
     operands = _make_operands(m, n, k, batch=batch,
                               broadcast_weights=broadcast_weights,
                               dtype=dtype)

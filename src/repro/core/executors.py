@@ -39,13 +39,19 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+# core.modular imports core.tuning only; its drivers import us lazily,
+# so this top-level import is cycle-free.
+from .modular import (center_mod, crt_digits, crt_value,
+                      residues_from_slices, usable_moduli)
 from .splitting import SplitResult, row_exponents, split_int, split_int_dw
 from .tuning import BACKENDS, PipelinePlan
 from .xmath import DW, dw_add, dw_normalize
 
 __all__ = ["BACKENDS", "XlaExecutor", "PallasExecutor", "FusedExecutor",
            "EpilogueExecutor", "StreamingExecutor", "StreamingSplit",
-           "get_executor", "gemm_xla", "int32_to_dw"]
+           "ModularXlaExecutor", "ModularPallasExecutor",
+           "ModularFusedExecutor", "get_executor", "gemm_xla",
+           "int32_to_dw"]
 
 
 def gemm_xla(a8: jax.Array, bt8: jax.Array) -> jax.Array:
@@ -319,7 +325,88 @@ class StreamingExecutor(EpilogueExecutor):
         return DW(jnp.ldexp(c_hi, e_base), jnp.ldexp(c_lo, e_base))
 
 
+class ModularXlaExecutor:
+    """Ozaki Scheme II reference executor (``plan.scheme="ozaki2_fp64"``).
+
+    Stage 1 reuses ``split_int`` — the ``num_splits`` slices ARE the
+    integerization (``A_int = sum_p slices[p] * 2^{(s-1-p)w}``, beta =
+    s*w bits kept). Stage 2 maps the slices to centered int8 residues
+    per modulus and runs ONE int8 NT GEMM per modulus, with the modulus
+    axis as the leading batch dimension (a batched operand folds the
+    (modulus, batch) product onto that same axis — still one launch).
+    Stage 3 is the exact CRT reconstruction (``core.modular``): Garner
+    digits in int32, FP64 sum smallest radix first, deferred ``e_base``
+    applied once at the end — the same rounding-sequence discipline the
+    Scheme I executors keep, so the guaranteed bound
+    (``modular.modular_error_bound``) is the whole error story.
+
+    The moduli re-derive from the plan deterministically:
+    ``usable_moduli(k)[:plan.num_moduli]`` — selection always takes a
+    prefix of the usable pool, so the plan's count is the full identity.
+    """
+
+    def __init__(self, plan: PipelinePlan):
+        self.plan = plan
+
+    # ---- stage 1: integerize (slice-built) -----------------------------
+    def split(self, x: jax.Array, w: int) -> SplitResult:
+        return split_int(x, self.plan.num_splits, w)
+
+    # ---- stage 2: residue GEMMs ----------------------------------------
+    def gemm(self, a8: jax.Array, bt8: jax.Array) -> jax.Array:
+        return gemm_xla(a8, bt8)
+
+    # ---- stages 2+3 -----------------------------------------------------
+    def contract(self, sa: SplitResult, sb: SplitResult, w: int,
+                 e_base: jax.Array, shape):
+        k = sa.slices.shape[-1]
+        moduli = usable_moduli(k)[:self.plan.num_moduli]
+        ra = residues_from_slices(sa.slices, w, moduli)
+        rb = residues_from_slices(sb.slices, w, moduli)
+        if ra.ndim == 4:                 # batched: (ell, B, rows, k)
+            ell, bsz = ra.shape[0], ra.shape[1]
+            p = self.gemm(ra.reshape(ell * bsz, ra.shape[2], k),
+                          rb.reshape(ell * bsz, rb.shape[2], k))
+            p = p.reshape((ell,) + shape)
+        else:                            # 2-D: modulus axis is the batch
+            p = self.gemm(ra, rb)
+        digits = crt_digits(center_mod(p, moduli), moduli)
+        return crt_value(digits, moduli, self.plan.beta, e_base)
+
+
+class ModularPallasExecutor(ModularXlaExecutor):
+    """Residue GEMMs on the batch-grid Pallas MXU kernel: the modulus
+    (or modulus x batch) axis is the outermost grid dimension of ONE
+    ``int8_matmul_nt_batched`` launch — the operands are always 3-D
+    here, so the batched kernel is the only entry needed."""
+
+    def gemm(self, a8: jax.Array, bt8: jax.Array) -> jax.Array:
+        from repro.kernels import int8_matmul_nt_batched
+        tile = self.plan.tile
+        return int8_matmul_nt_batched(a8, bt8, bm=tile.bm, bn=tile.bn,
+                                      bk=tile.bk,
+                                      interpret=self.plan.interpret)
+
+
+class ModularFusedExecutor(ModularPallasExecutor):
+    """``pallas_fused`` Scheme II: integerize with the one-pass SplitInt
+    kernel (stage-1 fusion — the residue GEMM stage is already a single
+    batched launch, and CRT is elementwise XLA)."""
+
+    def split(self, x: jax.Array, w: int) -> SplitResult:
+        return FusedExecutor.split(self, x, w)
+
+
 def get_executor(plan: PipelinePlan) -> XlaExecutor:
+    if getattr(plan, "scheme", "ozaki_fp64") == "ozaki2_fp64":
+        if plan.backend == "xla":
+            return ModularXlaExecutor(plan)
+        if plan.backend == "pallas":
+            return ModularPallasExecutor(plan)
+        if plan.backend == "pallas_fused":
+            return ModularFusedExecutor(plan)
+        raise ValueError(f"unknown backend {plan.backend!r}; "
+                         f"expected one of {BACKENDS}")
     if plan.backend == "xla":
         return XlaExecutor(plan)
     if plan.backend == "pallas":

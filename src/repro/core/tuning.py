@@ -76,6 +76,13 @@ CONCAT_K_MAX = 2048                 # below this, slice GEMMs are launch-bound
 BACKENDS = ("xla", "pallas", "pallas_fused")
 FUSION_MODES = ("none", "stages", "epilogue", "streaming")
 BATCH_LAYOUTS = ("none", "rows", "grid")
+# Which emulation algorithm a plan executes: Scheme I ("ozaki_fp64",
+# slice-pair GEMMs — everything above) or Scheme II ("ozaki2_fp64",
+# residue-system GEMMs + CRT — ``core.modular``). The scheme is part of
+# the plan because the executor family, the GEMM count, and the accuracy
+# bound all pivot on it; ``core.accuracy.resolve_accuracy`` arbitrates
+# between the two per (shape, target).
+PLAN_SCHEMES = ("ozaki_fp64", "ozaki2_fp64")
 # What crosses the interconnect when the GEMM is sharded: "f64" moves
 # f64 operand words (the GSPMD auto-sharding baseline gathers operands
 # around the opaque kernels), "int8" ships the quantized Ozaki
@@ -333,6 +340,17 @@ class PipelinePlan:
                   the Pallas pair-grid dimensions shrink with it.
     fuse_diagonals / concat_k / full_pairs / accum / interpret: the
     schedule and numeric knobs, verbatim from the config.
+
+    scheme / beta / num_moduli: the emulation algorithm. Scheme I
+    (``"ozaki_fp64"``) ignores beta/num_moduli (0 sentinels); Scheme II
+    (``"ozaki2_fp64"``) records its operating point — ``beta`` mantissa
+    bits (= ``num_splits * 7``, the integerization slice count) and the
+    residue-GEMM count ``num_moduli`` (the moduli themselves re-derive
+    deterministically as ``modular.usable_moduli(k)[:num_moduli]``).
+    Scheme II constraints: f64 accumulation only (the CRT reconstruction
+    is an FP64 sum), "full" pair policy (there is no pair schedule to
+    truncate — accuracy scales via beta), and fusion "none"/"stages"
+    (no residue epilogue/streaming kernels yet).
     """
 
     num_splits: int = 9
@@ -348,6 +366,9 @@ class PipelinePlan:
     full_pairs: bool = False
     accum: str = "f64"
     interpret: bool = True
+    scheme: str = "ozaki_fp64"
+    beta: int = 0
+    num_moduli: int = 0
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -364,6 +385,27 @@ class PipelinePlan:
         if self.comm not in COMM_MODES:
             raise ValueError(f"unknown comm {self.comm!r}; "
                              f"expected one of {COMM_MODES}")
+        if self.scheme not in PLAN_SCHEMES:
+            raise ValueError(f"unknown scheme {self.scheme!r}; "
+                             f"expected one of {PLAN_SCHEMES}")
+        if self.scheme == "ozaki2_fp64":
+            if self.beta < 1 or self.num_moduli < 1:
+                raise ValueError(
+                    f"ozaki2_fp64 plans need beta >= 1 and num_moduli >= 1, "
+                    f"got beta={self.beta}, num_moduli={self.num_moduli}")
+            if self.accum != "f64":
+                raise ValueError("ozaki2_fp64 accumulates in f64 only "
+                                 f"(CRT reconstruction), got {self.accum!r}")
+            if self.fusion not in ("none", "stages"):
+                raise ValueError(
+                    f"ozaki2_fp64 supports fusion 'none'/'stages' only "
+                    f"(no residue epilogue/streaming kernels), "
+                    f"got {self.fusion!r}")
+            if self.pair_policy != "full":
+                raise ValueError(
+                    "ozaki2_fp64 has no pair schedule to truncate "
+                    f"(accuracy scales via beta), got pair_policy="
+                    f"{self.pair_policy!r}")
         parse_pair_policy(self.pair_policy, self.num_splits,
                           self.full_pairs)       # raises on malformed
 
@@ -375,6 +417,8 @@ class PipelinePlan:
 
     @property
     def num_gemms(self) -> int:
+        if self.scheme == "ozaki2_fp64":
+            return self.num_moduli          # one residue GEMM per modulus
         return sum(len(p) for _, p in self.diagonals())
 
     # --- serialization (deployment caches / cross-process handoff) -----
@@ -441,12 +485,27 @@ def plan_for(cfg, *, batch_layout: str = "none") -> PipelinePlan:
 
 def _cached_hit_acceptable(hit: PipelinePlan, k: int, *, num_splits,
                            target_error, accuracy_pinned: bool,
-                           policy: str) -> bool:
+                           policy: str, scheme: str = "ozaki_fp64",
+                           num_moduli=None) -> bool:
     """Shared cache-hit validation for ``select_pipeline_plan`` and
-    ``autotune_plan`` (see the comment at the call site)."""
+    ``autotune_plan`` (see the comment at the call site).
+
+    Under a pinned ``target_error`` the TARGET is the contract, so a hit
+    from EITHER scheme family is accepted when its guaranteed bound
+    meets it — a measured cross-scheme winner must not force eternal
+    re-tuning. Without a target the requested scheme must match exactly
+    (and Scheme II hits must match the resolved modulus count, the
+    result-affecting knob of that family).
+    """
+    hit_scheme = getattr(hit, "scheme", "ozaki_fp64")
     if target_error is not None:
         from .accuracy import plan_meets_target      # lazy: no cycle
         return plan_meets_target(hit, k, target_error)
+    if scheme == "ozaki2_fp64":
+        return hit_scheme == "ozaki2_fp64" and \
+            (num_moduli is None or hit.num_moduli == num_moduli)
+    if hit_scheme != "ozaki_fp64":
+        return False
     if accuracy_pinned:
         return hit.num_splits == num_splits and hit.pair_policy == policy
     return (num_splits is None or hit.num_splits == num_splits) and \
@@ -470,7 +529,9 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
                          vmem_budget: int = VMEM_BUDGET,
                          cache=None, autotune: bool = False,
                          dtype: Optional[str] = None,
-                         device_kind: Optional[str] = None) -> PipelinePlan:
+                         device_kind: Optional[str] = None,
+                         scheme: str = "ozaki_fp64",
+                         num_moduli: Optional[int] = None) -> PipelinePlan:
     """Build the full execution strategy from shapes alone.
 
     ``batch``/``broadcast_weights`` describe the batched API's operands:
@@ -496,6 +557,12 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
     plans on the live backend, stores the winner in the cache, and
     returns it. ``dtype`` defaults from ``accum`` ("f64" -> float64,
     else float32 — the operand dtype the pipeline runs on).
+
+    ``scheme="ozaki2_fp64"`` plans the residue-system path instead:
+    ``target_error`` / ``num_moduli`` resolve the Scheme II operating
+    point (``core.modular.resolve_modular``), the plan cache is keyed
+    with the scheme, and fast-mode/pair-policy knobs are rejected (the
+    residue path has no pair schedule).
     """
     if batch <= 1 and not broadcast_weights:
         layout = "none"
@@ -503,6 +570,54 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
         layout = "rows"
     else:
         layout = "grid"
+    if scheme not in PLAN_SCHEMES:
+        raise ValueError(f"unknown scheme {scheme!r}; "
+                         f"expected one of {PLAN_SCHEMES}")
+    if scheme == "ozaki2_fp64":
+        if fast_mode or pair_policy is not None:
+            raise ValueError(
+                "ozaki2_fp64 has no pair schedule: fast_mode/pair_policy "
+                "do not apply (set target_error or num_moduli instead)")
+        # lazy: core.modular imports this module at top
+        from .modular import modular_plan, resolve_modular
+        point = resolve_modular(k, target_error=target_error,
+                                num_moduli=num_moduli,
+                                mantissa_space=mantissa_space)
+        if cache is not None or autotune:
+            from .autotune import (autotune_plan, plan_cache_key,
+                                   warn_if_interpret_ranked)
+            key = plan_cache_key(m, n, k, batch=batch, dtype=dtype,
+                                 accum="f64", backend=backend,
+                                 device_kind=device_kind,
+                                 scheme="ozaki2_fp64")
+            if cache is not None:
+                hit = cache.get(key)
+                if hit is not None and _cached_hit_acceptable(
+                        hit, k, num_splits=None, target_error=target_error,
+                        accuracy_pinned=target_error is not None,
+                        policy="full", scheme="ozaki2_fp64",
+                        num_moduli=len(point.moduli)):
+                    warn_if_interpret_ranked(cache, key, interpret)
+                    return hit
+            if autotune:
+                return autotune_plan(
+                    m, n, k, batch=batch,
+                    broadcast_weights=broadcast_weights, backend=backend,
+                    accum="f64", interpret=interpret,
+                    target_error=target_error, dtype=dtype,
+                    device_kind=device_kind, mantissa_space=mantissa_space,
+                    mmu=mmu, vmem_budget=vmem_budget, cache=cache,
+                    scheme="ozaki2_fp64",
+                    num_moduli=len(point.moduli)).best
+        m_eff = m * batch if layout == "rows" else m
+        tile = select_plan(m_eff, n, k,
+                           batch=batch if layout == "grid" else 1,
+                           num_splits=point.num_splits,
+                           mantissa_space=mantissa_space, mmu=mmu,
+                           vmem_budget=vmem_budget)
+        return modular_plan(k, point=point, backend=backend,
+                            interpret=interpret, tile=tile,
+                            batch_layout=layout)
     accuracy_pinned = (target_error is not None or fast_mode or
                       pair_policy is not None)
     policy = pair_policy if pair_policy is not None else "full"

@@ -1,0 +1,516 @@
+"""Ozaki Scheme II (``core.modular``): residue-system GEMM emulation.
+
+Deterministic coverage (hypothesis-randomized counterparts live in
+``test_modular_props.py``):
+
+* residue extraction and balanced-CRT reconstruction are EXACT against
+  a python-int reference (including negatives, zero rows, all-zero
+  columns — the ``test_splitting`` edge-case mirror);
+* ``resolve_modular`` knob priority (beta > target_error > pinned
+  num_moduli dial > 70-bit DGEMM default) and its refusal to accept a
+  modulus count the CRT range cannot live in;
+* end-to-end ``scaled_error <= modular_error_bound`` and Scheme I/II
+  parity at matched targets across the backend/batch matrix (the
+  Pallas backends bitwise-equal to XLA);
+* the cross-scheme cost model: the pinned GEMM-count win at tall k
+  (15 residue GEMMs vs 28 slice pairs at the s=7-matched target),
+  arbitration resolving to DIFFERENT families at pinned points, the
+  autotuner enumerating candidates from both families, and the plan
+  cache keeping the schemes' entries distinct.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.accuracy import (plan_meets_target, resolve_accuracy,
+                                 scaled_error, scheme_costs,
+                                 truncation_eta)
+from repro.core.autotune import (PLAN_CACHE_VERSION, PlanCache, PlanKey,
+                                 candidate_plans, plan_cache_key)
+from repro.core.modular import (MAX_BETA, ModularConfig, center_mod,
+                                crt_digits, crt_value, min_beta_for,
+                                modular_error_bound, modular_eta,
+                                modular_plan, ozaki2_matmul,
+                                ozaki2_matmul_batched, residues_from_slices,
+                                resolve_modular, select_moduli,
+                                usable_moduli)
+from repro.core.ozaki import OzakiConfig, ozaki_matmul
+from repro.core.splitting import slice_width, split_int
+from repro.core.tuning import PipelinePlan, select_pipeline_plan
+from repro.core.xmath import dd_matmul_np
+
+
+def _phi(rng, m, k, phi=1.0):
+    return jnp.asarray(rng.uniform(-0.5, 0.5, (m, k))
+                       * np.exp(phi * rng.standard_normal((m, k))))
+
+
+def _matched_target(k, s):
+    return k * truncation_eta(s, slice_width(k, fuse_terms=s))
+
+
+# ----------------------------------------------------------------------------
+# Moduli selection
+# ----------------------------------------------------------------------------
+
+def test_usable_moduli_overflow_guard():
+    for k in (1, 96, 4096, 10 ** 6):
+        pool = usable_moduli(k)
+        assert pool, k
+        for m in pool:
+            assert m % 2 == 1 and m <= 251
+            assert k * ((m - 1) // 2) ** 2 <= 2 ** 31 - 1
+        assert list(pool) == sorted(pool, reverse=True)
+    # tighter k admits fewer primes
+    assert len(usable_moduli(10 ** 6)) < len(usable_moduli(96))
+
+
+def test_select_moduli_minimal_covering_prefix():
+    k, beta = 96, 70
+    moduli = select_moduli(k, beta)
+    prod = 1
+    for m in moduli:
+        prod *= m
+    assert prod > 2 * k * 4 ** beta              # range covered
+    shorter = 1
+    for m in moduli[:-1]:
+        shorter *= m
+    assert shorter <= 2 * k * 4 ** beta          # and minimal
+    assert moduli == usable_moduli(k)[:len(moduli)]   # always a prefix
+
+
+def test_select_moduli_pool_exhausted_raises():
+    with pytest.raises(ValueError, match="pool exhausted"):
+        select_moduli(10 ** 6, MAX_BETA)
+
+
+# ----------------------------------------------------------------------------
+# Residues + CRT: exactness against python ints
+# ----------------------------------------------------------------------------
+
+def _int_matrix_cases():
+    rng = np.random.default_rng(3)
+    dense = rng.integers(-2 ** 40, 2 ** 40, (4, 6))
+    zero_row = dense.copy()
+    zero_row[1] = 0                               # all-zero row
+    zero_col = dense.copy()
+    zero_col[:, 2] = 0                            # all-zero column
+    negative = -np.abs(dense)                     # all-negative values
+    return [dense, zero_row, zero_col, negative,
+            np.zeros((3, 5), np.int64)]
+
+
+@pytest.mark.parametrize("x_int", _int_matrix_cases(),
+                         ids=["dense", "zero_row", "zero_col",
+                              "negative", "all_zero"])
+def test_residues_from_slices_match_python_ints(x_int):
+    # slice-build the integers the way the pipeline does (w=7 digits,
+    # most significant first), then check every centered residue
+    w, s = 7, 8
+    moduli = usable_moduli(64)[:12]
+    digits = []
+    rem = np.asarray(x_int, object)
+    for p in range(s - 1, -1, -1):                # least significant first
+        centered = ((rem + 2 ** (w - 1)) % 2 ** w) - 2 ** (w - 1)
+        digits.append(centered.astype(np.int8))
+        rem = (rem - centered) >> w
+    assert np.all(rem == 0)                       # s*w bits suffice
+    slices = jnp.asarray(np.stack(digits[::-1]))
+    res = residues_from_slices(slices, w, moduli)
+    assert res.dtype == jnp.int8
+    for j, m in enumerate(moduli):
+        want = np.asarray(x_int, object) % m
+        want = np.where(want > (m - 1) // 2, want - m, want)
+        np.testing.assert_array_equal(np.asarray(res[j], object), want)
+
+
+def test_center_mod_range_and_congruence():
+    moduli = (251, 13, 3)
+    x = jnp.asarray(np.random.default_rng(0).integers(
+        -2 ** 20, 2 ** 20, (3, 5, 7)), jnp.int32)
+    c = center_mod(x, moduli)
+    for j, m in enumerate(moduli):
+        cj = np.asarray(c[j], np.int64)
+        assert np.all(np.abs(cj) <= (m - 1) // 2)
+        np.testing.assert_array_equal(cj % m, np.asarray(x[j], np.int64) % m)
+
+
+def test_crt_roundtrip_exact_python_ints():
+    # random X with |X| < M/2: residues -> balanced digits -> X, exactly
+    k, beta = 64, 49
+    moduli = select_moduli(k, beta)
+    big = 1
+    for m in moduli:
+        big *= m
+    rng = np.random.default_rng(5)
+    xs = np.concatenate([
+        rng.integers(-10 ** 9, 10 ** 9, 64),
+        np.asarray([0, 1, -1, big // 2 - 1, -(big // 2 - 1)], object)])
+    res = np.stack([[int(x) % m for x in xs] for m in moduli])
+    res = jnp.asarray(np.where(
+        res > (np.asarray(moduli)[:, None] - 1) // 2,
+        res - np.asarray(moduli)[:, None], res).astype(np.int32))
+    digits = crt_digits(res, moduli)
+    # reconstruct as python ints from the balanced digits
+    prefix = [1]
+    for m in moduli[:-1]:
+        prefix.append(prefix[-1] * m)
+    got = [sum(int(np.asarray(d)[i]) * q
+               for d, q in zip(digits, prefix)) for i in range(len(xs))]
+    assert got == [int(x) for x in xs]
+    for d, m in zip(digits, moduli):
+        assert np.all(np.abs(np.asarray(d)) <= (m - 1) // 2)
+
+
+def test_crt_value_scaling():
+    # one modulus, digit v: the FP64 value is ldexp(v * 4^-beta, e_base)
+    moduli = select_moduli(4, 3)
+    digits = crt_digits(jnp.asarray(np.full((len(moduli), 2, 2), 5,
+                                            np.int32)), moduli)
+    out = crt_value(digits, moduli, 3, jnp.full((2, 2), 8, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), 5.0 * 4.0 ** -3 * 2 ** 8)
+
+
+# ----------------------------------------------------------------------------
+# resolve_modular: knob priority
+# ----------------------------------------------------------------------------
+
+def test_resolve_modular_default_is_dgemm_space():
+    p = resolve_modular(96)
+    assert (p.beta, p.num_splits) == (70, 10)    # ceil(70/7)*7
+    assert p.moduli == select_moduli(96, 70)
+
+
+def test_resolve_modular_beta_rounds_up_to_slice_multiple():
+    p = resolve_modular(96, beta=50)
+    assert (p.beta, p.num_splits) == (56, 8)
+    with pytest.raises(ValueError, match="MAX_BETA"):
+        resolve_modular(96, beta=MAX_BETA + 1)
+
+
+def test_resolve_modular_target_sizes_beta():
+    k = 1024
+    p = resolve_modular(k, target_error=1e-10)
+    assert k * modular_eta(p.beta) <= 1e-10
+    assert p.beta == -(-min_beta_for(1e-10, k) // 7) * 7
+    with pytest.raises(ValueError):
+        resolve_modular(k, target_error=-1.0)
+
+
+def test_resolve_modular_pinned_moduli_is_accuracy_dial():
+    k = 96
+    p8 = resolve_modular(k, num_moduli=8)
+    p14 = resolve_modular(k, num_moduli=14)
+    assert len(p8.moduli) == 8 and len(p14.moduli) == 14
+    assert p8.beta < p14.beta                    # more moduli, more bits
+    prod = 1
+    for m in p14.moduli:
+        prod *= m
+    assert prod > 2 * k * 4 ** p14.beta          # still reconstructs
+
+
+def test_resolve_modular_insufficient_moduli_raises():
+    # fewer moduli than the CRT needs is wraparound, never accepted
+    k = 96
+    need = len(select_moduli(k, 70))
+    with pytest.raises(ValueError, match="cannot reconstruct"):
+        resolve_modular(k, beta=70, num_moduli=need - 1)
+    with pytest.raises(ValueError, match="exceeds"):
+        resolve_modular(k, num_moduli=10 ** 4)
+    # extra moduli beyond the minimum are fine (headroom, not error)
+    p = resolve_modular(k, beta=70, num_moduli=need + 2)
+    assert len(p.moduli) == need + 2
+
+
+# ----------------------------------------------------------------------------
+# End-to-end accuracy: bound proved, Scheme I parity at matched targets
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(16, 16, 96), (8, 24, 64),
+                                   (17, 13, 51), (1, 5, 3)])
+def test_bound_holds_2d(rng, shape):
+    m, n, k = shape
+    a, b = _phi(rng, m, k), _phi(rng, k, n)
+    cfg = ModularConfig()
+    point = cfg.point(k)
+    c = np.asarray(ozaki2_matmul(a, b, cfg))
+    hi, lo = dd_matmul_np(np.asarray(a), np.asarray(b))
+    err = scaled_error(c, hi, np.asarray(a), np.asarray(b), ref_lo=lo)
+    assert err <= modular_error_bound(point.beta, k, point.moduli)
+
+
+def test_parity_with_scheme1_at_matched_target(rng):
+    # the cost model's premise: at one target the families agree within
+    # the sum of their guaranteed bounds, across targets
+    m, n, k = 24, 16, 96
+    a, b = _phi(rng, m, k), _phi(rng, k, n)
+    a_np, b_np = np.asarray(a), np.asarray(b)
+    for s in (3, 5, 7):
+        tgt = _matched_target(k, s)
+        c1 = np.asarray(ozaki_matmul(a, b, OzakiConfig(num_splits=s)))
+        cfg2 = ModularConfig(target_error=tgt)
+        point = cfg2.point(k)
+        c2 = np.asarray(ozaki2_matmul(a, b, cfg2))
+        from repro.core.accuracy import error_bound
+        bound1 = error_bound(s, OzakiConfig(num_splits=s).width_for(k), k)
+        bound2 = modular_error_bound(point.beta, k, point.moduli)
+        cross = scaled_error(c1, c2, a_np, b_np)
+        assert cross <= bound1 + bound2, (s, cross)
+
+
+def test_backends_bitwise_equal_xla(rng):
+    m, n, k = 16, 24, 96
+    a, b = _phi(rng, m, k), _phi(rng, k, n)
+    ref = np.asarray(ozaki2_matmul(a, b, ModularConfig(backend="xla")))
+    for backend in ("pallas", "pallas_fused"):
+        got = np.asarray(ozaki2_matmul(a, b, ModularConfig(
+            backend=backend, interpret=True)))
+        np.testing.assert_array_equal(got, ref, err_msg=backend)
+
+
+@pytest.mark.parametrize("case", ["zero_row", "zero_col", "negative",
+                                  "all_zero"])
+def test_degenerate_inputs_stay_finite_and_bounded(rng, case):
+    m, n, k = 8, 8, 48
+    a = np.array(_phi(rng, m, k))
+    b = np.array(_phi(rng, k, n))
+    if case == "zero_row":
+        a[2] = 0.0
+    elif case == "zero_col":
+        b[:, 3] = 0.0
+    elif case == "negative":
+        a, b = -np.abs(a), -np.abs(b)
+    else:
+        a = np.zeros_like(a)
+    cfg = ModularConfig()
+    point = cfg.point(k)
+    c = np.asarray(ozaki2_matmul(jnp.asarray(a), jnp.asarray(b), cfg))
+    assert np.all(np.isfinite(c))
+    hi, lo = dd_matmul_np(a, b)
+    err = scaled_error(c, hi, a, b, ref_lo=lo)
+    assert err <= modular_error_bound(point.beta, k, point.moduli)
+    if case == "zero_row":
+        np.testing.assert_array_equal(c[2], 0.0)
+    if case == "all_zero":
+        np.testing.assert_array_equal(c, 0.0)
+
+
+def test_batched_stacked_and_broadcast(rng):
+    bsz, m, k, n = 3, 8, 64, 12
+    a3 = jnp.asarray(np.stack([np.asarray(_phi(rng, m, k))
+                               for _ in range(bsz)]))
+    b3 = jnp.asarray(np.stack([np.asarray(_phi(rng, k, n))
+                               for _ in range(bsz)]))
+    cfg = ModularConfig()
+    got = np.asarray(ozaki2_matmul_batched(a3, b3, cfg))
+    for i in range(bsz):
+        ref = np.asarray(ozaki2_matmul(a3[i], b3[i], cfg))
+        np.testing.assert_allclose(got[i], ref, rtol=0, atol=np.max(
+            np.abs(ref)) * 1e-12)
+    # broadcast weights: bitwise equal to the per-item loop (fold-rows)
+    got_b = np.asarray(ozaki2_matmul_batched(a3, b3[0], cfg))
+    for i in range(bsz):
+        np.testing.assert_array_equal(
+            got_b[i], np.asarray(ozaki2_matmul(a3[i], b3[0], cfg)))
+
+
+def test_batched_grad_exact_product_rule(rng):
+    a3 = jnp.asarray(np.stack([np.asarray(_phi(rng, 4, 16))
+                               for _ in range(2)]))
+    b3 = jnp.asarray(np.stack([np.asarray(_phi(rng, 16, 5))
+                               for _ in range(2)]))
+    cfg = ModularConfig()
+    g = jax.grad(lambda a, b: jnp.sum(ozaki2_matmul_batched(a, b, cfg)),
+                 argnums=(0, 1))(a3, b3)
+    ones = jnp.ones((2, 4, 5), jnp.float64)
+    np.testing.assert_allclose(np.asarray(g[0]),
+                               np.asarray(jnp.matmul(ones,
+                                                     b3.swapaxes(1, 2))))
+    np.testing.assert_allclose(np.asarray(g[1]),
+                               np.asarray(jnp.matmul(a3.swapaxes(1, 2),
+                                                     ones)))
+
+
+def test_type_and_shape_validation(rng):
+    a, b = _phi(rng, 4, 8), _phi(rng, 8, 4)
+    with pytest.raises(TypeError, match="float64"):
+        ozaki2_matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+    with pytest.raises(ValueError, match="2-D"):
+        ozaki2_matmul(a[None], b)
+    with pytest.raises(ValueError, match="mismatch"):
+        ozaki2_matmul(a, _phi(rng, 9, 4))
+    with pytest.raises(ValueError, match="batch, m, k"):
+        ozaki2_matmul_batched(a, b)
+
+
+# ----------------------------------------------------------------------------
+# Cross-scheme cost model (the ISSUE acceptance pins)
+# ----------------------------------------------------------------------------
+
+def test_gemm_count_win_at_tall_k_pinned():
+    # s=7-matched target at k=4096: 15 residue GEMMs vs 28 slice pairs
+    k = 4096
+    tgt = _matched_target(k, 7)
+    plan1 = select_pipeline_plan(512, 512, k, accum="f64",
+                                 target_error=tgt)
+    plan2 = select_pipeline_plan(512, 512, k, accum="f64",
+                                 scheme="ozaki2_fp64", target_error=tgt)
+    assert plan1.num_gemms == 28
+    assert plan2.num_gemms == 15
+    assert plan2.scheme == "ozaki2_fp64" and plan2.beta == 49
+
+
+def test_resolve_accuracy_arbitrates_both_ways():
+    both = ("ozaki_fp64", "ozaki2_fp64")
+    # tall k, tight matched target: the linear modulus count wins
+    tall = resolve_accuracy(4096, 10,
+                            target_error=_matched_target(4096, 7),
+                            schemes=both, m=512, n=512)
+    assert tall.scheme == "ozaki2_fp64"
+    assert tall.num_moduli == 15 and tall.beta == 49
+    # small k, loose target: few kept pairs beat the CRT modulus floor
+    small = resolve_accuracy(256, 9, target_error=1e-2, schemes=both,
+                             m=256, n=256)
+    assert small.scheme == "ozaki_fp64"
+    assert small.gemms == dict(small.costs)["ozaki_fp64"]
+    # both candidates' costs are recorded either way
+    assert {name for name, _ in tall.costs} == set(both)
+    # the legacy tuple contract is untouched without `schemes`
+    assert resolve_accuracy(256, 9, target_error=1e-6) == (5, "full")
+
+
+def test_scheme_costs_matched_without_target():
+    # no target: Scheme II is sized for Scheme I's OWN guaranteed bound
+    costs = dict(scheme_costs(4096, 7, target_error=None))
+    assert costs["ozaki_fp64"] == 28.0
+    assert costs["ozaki2_fp64"] < 28.0
+    # infeasible Scheme II point costs inf, never raises
+    costs_inf = dict(scheme_costs(10 ** 6, 16, target_error=1e-30))
+    assert costs_inf["ozaki2_fp64"] == np.inf
+
+
+def test_candidate_plans_enumerate_both_families():
+    tgt = _matched_target(4096, 7)
+    # scheme-I base: a Scheme II candidate appears under a target
+    cands = candidate_plans(64, 64, 4096, accum="f64", target_error=tgt,
+                            max_candidates=None)
+    schemes = {c.scheme for c in cands}
+    assert schemes == {"ozaki_fp64", "ozaki2_fp64"}
+    for c in cands:
+        assert plan_meets_target(c, 4096, tgt), c
+    # scheme-II base: the Scheme I seed rides along
+    cands2 = candidate_plans(64, 64, 4096, accum="f64",
+                             scheme="ozaki2_fp64", target_error=tgt,
+                             max_candidates=None)
+    assert {c.scheme for c in cands2} == {"ozaki_fp64", "ozaki2_fp64"}
+    assert cands2[0].scheme == "ozaki2_fp64"     # base plan leads
+
+
+def test_select_pipeline_plan_rejects_scheme1_knobs_for_scheme2():
+    with pytest.raises(ValueError, match="pair schedule"):
+        select_pipeline_plan(8, 8, 64, scheme="ozaki2_fp64",
+                             fast_mode=True)
+    with pytest.raises(ValueError, match="pair schedule"):
+        select_pipeline_plan(8, 8, 64, scheme="ozaki2_fp64",
+                             pair_policy="diagonal")
+
+
+def test_modular_plan_reflection():
+    plan = modular_plan(96, num_moduli=20)
+    assert plan.scheme == "ozaki2_fp64"
+    assert plan.num_gemms == 20 and plan.num_moduli == 20
+    assert plan.accum == "f64" and plan.pair_policy == "full"
+    back = PipelinePlan.from_dict(json.loads(json.dumps(plan.to_dict())))
+    assert back == plan                          # wire-format roundtrip
+
+
+# ----------------------------------------------------------------------------
+# Plan cache: scheme-keyed entries, v2 -> v3 version fallback
+# ----------------------------------------------------------------------------
+
+def test_plan_cache_keys_scheme_distinct(tmp_path):
+    k1 = plan_cache_key(8, 16, 96, accum="f64", device_kind="cpu")
+    k2 = plan_cache_key(8, 16, 96, accum="f64", device_kind="cpu",
+                        scheme="ozaki2_fp64")
+    assert k1 != k2 and "scheme=ozaki2_fp64" in k2.encode()
+    cache = PlanCache(tmp_path / "p.json")
+    p1 = select_pipeline_plan(8, 16, 96, accum="f64")
+    p2 = modular_plan(96)
+    cache.put(k1, p1)
+    cache.put(k2, p2)
+    cache.save()
+    back = PlanCache.load(tmp_path / "p.json")
+    assert back.get(k1) == p1 and back.get(k2) == p2   # coexist
+
+
+def test_plan_cache_v2_file_loads_empty(tmp_path):
+    # the scheme field bumped PLAN_CACHE_VERSION to 3: a v2 file (no
+    # scheme in its keys) degrades to an empty cache, never errors
+    assert PLAN_CACHE_VERSION == 3
+    path = tmp_path / "p.json"
+    cache = PlanCache(path)
+    cache.put(PlanKey(m=8, n=16, k=32, dtype="float64",
+                      device_kind="cpu"), modular_plan(32))
+    cache.save()
+    data = json.loads(path.read_text())
+    data["version"] = 2
+    path.write_text(json.dumps(data))
+    with pytest.warns(UserWarning, match="version"):
+        back = PlanCache.load(path)
+    assert len(back) == 0
+    plan = select_pipeline_plan(8, 16, 32, accum="f64", cache=back)
+    assert plan == select_pipeline_plan(8, 16, 32, accum="f64")
+
+
+def test_cached_scheme2_hit_requires_scheme_match():
+    cache = PlanCache()
+    key2 = plan_cache_key(8, 16, 96, accum="f64", device_kind="cpu",
+                          scheme="ozaki2_fp64")
+    cache.put(key2, modular_plan(96))
+    # scheme-II request hits its own entry
+    got = select_pipeline_plan(8, 16, 96, accum="f64",
+                               scheme="ozaki2_fp64", cache=cache,
+                               device_kind="cpu")
+    assert got.scheme == "ozaki2_fp64" and cache.hits == 1
+    # a scheme-I request never sees it (distinct key)
+    got1 = select_pipeline_plan(8, 16, 96, accum="f64", cache=cache,
+                                device_kind="cpu")
+    assert got1.scheme == "ozaki_fp64"
+
+
+def test_target_pinned_hit_accepts_other_family():
+    # under a target EITHER family meeting the bound is an acceptable
+    # hit (the target is the contract, not the family)
+    cache = PlanCache()
+    k = 4096
+    tgt = _matched_target(k, 7)
+    key1 = plan_cache_key(64, 64, k, accum="f64", device_kind="cpu")
+    p2 = modular_plan(k, target_error=tgt)
+    assert plan_meets_target(p2, k, tgt)
+    cache.put(key1, p2)                          # II cached under I's key
+    got = select_pipeline_plan(64, 64, k, accum="f64", target_error=tgt,
+                               cache=cache, device_kind="cpu")
+    assert got == p2 and cache.hits == 1
+
+
+# ----------------------------------------------------------------------------
+# PipelinePlan validation for the new scheme
+# ----------------------------------------------------------------------------
+
+def test_pipeline_plan_scheme2_validation():
+    good = modular_plan(96)
+    assert good.fusion in ("none", "stages")
+    with pytest.raises(ValueError):
+        dataclasses.replace(good, accum="df32")
+    with pytest.raises(ValueError):
+        dataclasses.replace(good, fusion="epilogue")
+    with pytest.raises(ValueError):
+        dataclasses.replace(good, pair_policy="diagonal")
+    with pytest.raises(ValueError):
+        dataclasses.replace(good, beta=0)
+    with pytest.raises(ValueError):
+        PipelinePlan(scheme="nope")

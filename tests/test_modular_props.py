@@ -1,0 +1,100 @@
+"""Property-based tests for Scheme II (hypothesis).
+
+Randomized exponent ranges, shapes, and value signs for the modulus
+split -> residue GEMM -> CRT reconstruction pipeline; skipped cleanly
+when hypothesis is unavailable (deterministic counterparts of the same
+claims run in ``test_modular.py``).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-test.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.accuracy import scaled_error  # noqa: E402
+from repro.core.modular import (ModularConfig, crt_digits,  # noqa: E402
+                                modular_error_bound, ozaki2_matmul,
+                                residues_from_slices, select_moduli,
+                                usable_moduli)
+from repro.core.splitting import split_int  # noqa: E402
+from repro.core.xmath import dd_matmul_np  # noqa: E402
+
+dims = st.integers(1, 16)
+phis = st.floats(0.0, 4.0)      # exponent spread: up to e^{4 sigma}
+
+
+def _mat(seed, m, k, phi):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-0.5, 0.5, (m, k))
+                       * np.exp(phi * rng.standard_normal((m, k))))
+
+
+@given(seed=st.integers(0, 2 ** 31), rows=dims, k=dims,
+       shift=st.integers(-60, 60))
+@settings(max_examples=25, deadline=None)
+def test_residues_match_integerization_any_exponent_range(seed, rows, k,
+                                                          shift):
+    # split_int's integerization at ANY exponent scale: the residues of
+    # the slice-built integer match python-int arithmetic exactly
+    w, s = 7, 6
+    x = _mat(seed, rows, k, 1.0) * 2.0 ** shift
+    res = split_int(x, s, w)
+    moduli = usable_moduli(max(k, 1))[:10]
+    slices = np.asarray(res.slices, np.int64)
+    x_int = sum(slices[p].astype(object) * 2 ** ((s - 1 - p) * w)
+                for p in range(s))
+    got = residues_from_slices(res.slices, w, moduli)
+    for j, m in enumerate(moduli):
+        want = x_int % m
+        want = np.where(want > (m - 1) // 2, want - m, want)
+        np.testing.assert_array_equal(np.asarray(got[j], object), want)
+
+
+@given(seed=st.integers(0, 2 ** 31), n=st.integers(1, 64),
+       beta=st.integers(7, 70))
+@settings(max_examples=25, deadline=None)
+def test_crt_digits_reconstruct_exactly(seed, n, beta):
+    k = 32
+    moduli = select_moduli(k, min(beta, 56))
+    big = 1
+    for m in moduli:
+        big *= m
+    rng = np.random.default_rng(seed)
+    lo, hi = -(big // 2), big // 2
+    xs = [int(rng.integers(-2 ** 62, 2 ** 62)) % (hi - lo) + lo
+          for _ in range(n)]
+    res = np.stack([[x % m for x in xs] for m in moduli])
+    res = np.where(res > (np.asarray(moduli)[:, None] - 1) // 2,
+                   res - np.asarray(moduli)[:, None], res)
+    digits = crt_digits(jnp.asarray(res.astype(np.int32)), moduli)
+    prefix = [1]
+    for m in moduli[:-1]:
+        prefix.append(prefix[-1] * m)
+    got = [sum(int(np.asarray(d)[i]) * q
+               for d, q in zip(digits, prefix)) for i in range(n)]
+    assert got == xs
+
+
+@given(seed=st.integers(0, 2 ** 31), m=dims, k=dims, n=dims, phi=phis,
+       negate=st.booleans(), zero_row=st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_end_to_end_bound_random_exponent_ranges(seed, m, k, n, phi,
+                                                 negate, zero_row):
+    a = np.array(_mat(seed, m, k, phi))
+    b = np.array(_mat(seed + 1, k, n, phi))
+    if negate:
+        a = -np.abs(a)
+    if zero_row:
+        a[0] = 0.0
+    cfg = ModularConfig()
+    point = cfg.point(k)
+    c = np.asarray(ozaki2_matmul(jnp.asarray(a), jnp.asarray(b), cfg))
+    assert np.all(np.isfinite(c))
+    hi, lo = dd_matmul_np(a, b)
+    err = scaled_error(c, hi, a, b, ref_lo=lo)
+    assert err <= modular_error_bound(point.beta, k, point.moduli)
+    if zero_row:
+        np.testing.assert_array_equal(c[0], 0.0)

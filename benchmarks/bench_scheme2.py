@@ -34,6 +34,7 @@ from repro.core.modular import (ModularConfig, modular_error_bound,
                                 ozaki2_matmul, resolve_modular)
 from repro.core.ozaki import OzakiConfig, ozaki_matmul
 from repro.core.splitting import slice_width
+from repro.core.tuning import hbm_pass_model
 from repro.core.xmath import dd_matmul_np
 
 from .common import emit, phi_matrix, plan_gemm, time_fn, write_bench_json
@@ -154,6 +155,44 @@ def run(quick: bool = False):
         rows.append({"name": "dial", "num_moduli": ell, "k": k,
                      "beta": point.beta, "scaled_error": err,
                      "bound": bound})
+
+    # --- fused-CRT epilogue (ISSUE 9): bitwise parity + wall-clock vs
+    # the stage-fused route, and the modeled HBM-pass table — the
+    # epilogue fusion must claim strictly fewer passes (it removes the
+    # 2*ell int32 residue-product round-trips), which is its whole
+    # reason to exist.
+    m, n, k = (16, 16, 96) if quick else (32, 32, 256)
+    a = jnp.asarray(phi_matrix(rng, m, k, 1.0))
+    b = jnp.asarray(phi_matrix(rng, k, n, 1.0))
+    cfg_st = ModularConfig(backend="pallas_fused")
+    cfg_epi = ModularConfig(backend="pallas_fused", fuse_epilogue=True)
+    point = cfg_epi.point(k)
+    s2, ell = point.num_splits, len(point.moduli)
+    us_st = time_fn(lambda: ozaki2_matmul(a, b, cfg_st))
+    us_epi = time_fn(lambda: ozaki2_matmul(a, b, cfg_epi))
+    c_st = np.asarray(ozaki2_matmul(a, b, cfg_st))
+    c_epi = np.asarray(ozaki2_matmul(a, b, cfg_epi))
+    assert np.array_equal(c_st, c_epi), "fused-CRT parity must be bitwise"
+    passes = {fusion: hbm_pass_model(s2, fusion=fusion,
+                                     scheme="ozaki2_fp64", num_moduli=ell)
+              for fusion in ("none", "stages", "epilogue")}
+    assert (passes["epilogue"]["total"] < passes["stages"]["total"]
+            < passes["none"]["total"]), passes
+    assert (passes["stages"]["total"] - passes["epilogue"]["total"]
+            == 2 * ell), passes
+    emit(f"scheme2/fused_crt/m={m}/n={n}/k={k}", us_epi,
+         f"stages_us={us_st:.1f};ell={ell};"
+         f"passes_none={passes['none']['total']};"
+         f"passes_stages={passes['stages']['total']};"
+         f"passes_epilogue={passes['epilogue']['total']}",
+         plan=cfg_epi.plan(k))
+    rows.append({"name": "fused_crt", "m": m, "n": n, "k": k,
+                 "num_moduli": ell, "num_splits": s2,
+                 "us_stages": us_st, "us_epilogue": us_epi,
+                 "bitwise_equal": True,
+                 "hbm_passes": {f: p["total"]
+                                for f, p in passes.items()},
+                 "hbm_pass_table": passes})
 
     import jax
 

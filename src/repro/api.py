@@ -147,12 +147,13 @@ class MatmulPolicy:
                 "'+streaming' / '+epilogue')")
         _validate_pair_policy(self.pair_policy)
         if self.scheme == "ozaki2_fp64":
-            # Scheme II shares the backend/accuracy/cache knobs; what it
-            # rejects is the Scheme I pair machinery (no pair schedule to
-            # truncate — accuracy scales via the mantissa budget), the
-            # Scheme I kernel fusions, and sharding (no residue transport
-            # yet). ``num_splits`` IS meaningful: it pins the residue
-            # modulus count (the ``ozaki2-fp64xL`` accuracy dial).
+            # Scheme II shares the backend/fusion/transport/accuracy/
+            # cache knobs ('+epilogue' is the fused-CRT kernel, |shard=/
+            # |comm=int8 the residue-wire transport); what it rejects is
+            # the Scheme I pair machinery (no pair schedule to truncate —
+            # accuracy scales via the mantissa budget) and streaming.
+            # ``num_splits`` IS meaningful: it pins the residue modulus
+            # count (the ``ozaki2-fp64xL`` accuracy dial).
             for field, why in _OZAKI2_REJECTED.items():
                 if getattr(self, field) != _ozaki_only_fields()[field]:
                     raise ValueError(
@@ -262,21 +263,22 @@ class MatmulPolicy:
             interpret = INTERPRET
         return ModularConfig(num_moduli=self.num_splits,
                              target_error=self.target_error,
-                             backend=self.backend, interpret=interpret)
+                             backend=self.backend,
+                             fuse_epilogue=self.fuse_epilogue,
+                             interpret=interpret)
 
 
 # MatmulPolicy fields Scheme II rejects, with the reason (the rest —
-# backend, num_splits, target_error, plan_cache, autotune — carry over).
+# backend, fuse_epilogue (the fused-CRT kernel), shard_axis/comm (the
+# residue-wire transport), num_splits, target_error, plan_cache,
+# autotune — carry over).
 _OZAKI2_REJECTED = {
-    "fuse_epilogue": "no residue epilogue kernel (the residue GEMM stage "
-                     "is already one batched launch)",
-    "streaming": "no residue streaming kernel",
+    "streaming": "no residue streaming kernel (the fused-CRT '+epilogue' "
+                 "route is the Scheme II fusion)",
     "fast_mode": "no pair schedule to truncate (use target_error or a "
                  "pinned modulus count xL instead)",
     "pair_policy": "no pair schedule to truncate (use target_error or a "
                    "pinned modulus count xL instead)",
-    "shard_axis": "no residue collective transport yet",
-    "comm": "no residue collective transport yet",
 }
 
 
@@ -549,8 +551,9 @@ def _matmul_int8_quant(a, b):
 def _apply_tuned_modular_plan(cfg, cache, *, m: int, n: int, k: int,
                               batch: int):
     """Fold a cached Scheme II tuned plan into a ModularConfig — tile
-    shapes only (result-invariant: the residue GEMMs are exact integer
-    arithmetic under any tiling)."""
+    shapes and the stages<->epilogue fusion flip only (result-invariant:
+    the residue GEMMs are exact integer arithmetic under any tiling and
+    the fused-CRT epilogue replays the reference rounding sequence)."""
     if cache is None:
         return cfg
     from repro.core.autotune import plan_cache_key
@@ -560,19 +563,24 @@ def _apply_tuned_modular_plan(cfg, cache, *, m: int, n: int, k: int,
     if plan is None or getattr(plan, "scheme", "ozaki_fp64") != \
             "ozaki2_fp64":
         return cfg
-    return dataclasses.replace(cfg, tile=plan.tile)
+    return dataclasses.replace(cfg, tile=plan.tile,
+                               fuse_epilogue=(plan.fusion == "epilogue"))
 
 
 def _matmul_ozaki2(a, b, pol: MatmulPolicy):
-    """Scheme II dispatch: residue-system int8 GEMMs + CRT (f64 only).
+    """Scheme II dispatch: residue-system int8 GEMMs + CRT.
 
-    The residue path reconstructs through an FP64 CRT sum, so there is
-    no df32/DW/complex route — those raise instead of silently running a
-    different algorithm than the policy named.
+    float64 is the native route; complex128 decomposes into three or
+    four real residue GEMMs (``ozaki2_matmul_complex``) and float32
+    reconstructs through the double-float32 CRT target
+    (``ozaki2_matmul_df32``). DW operands raise — the Scheme I DW
+    pipeline is a different algorithm than the policy named.
     """
     import jax.numpy as jnp
 
-    from repro.core.modular import ozaki2_matmul, ozaki2_matmul_batched
+    from repro.core.modular import (ozaki2_matmul, ozaki2_matmul_batched,
+                                    ozaki2_matmul_complex,
+                                    ozaki2_matmul_df32)
     from repro.core.xmath import DW
 
     if isinstance(a, DW) or isinstance(b, DW):
@@ -580,13 +588,20 @@ def _matmul_ozaki2(a, b, pol: MatmulPolicy):
                         "reconstruction is FP64); use scheme 'ozaki-fp64'")
     if jnp.issubdtype(a.dtype, jnp.complexfloating) or \
             jnp.issubdtype(b.dtype, jnp.complexfloating):
-        raise TypeError("ozaki2-fp64 has no complex path yet; use scheme "
-                        "'ozaki-fp64'")
+        if a.ndim != 2 or b.ndim != 2:
+            raise ValueError(f"complex operands must be 2-D, got "
+                             f"{a.shape} @ {b.shape}")
+        return ozaki2_matmul_complex(a, b, pol.modular_config())
     if a.dtype != b.dtype:
         raise TypeError(f"dtype mismatch: {a.dtype} @ {b.dtype}")
+    if a.dtype == jnp.float32:
+        if a.ndim != 2 or b.ndim != 2:
+            raise ValueError(f"float32 Scheme II operands must be 2-D, "
+                             f"got {a.shape} @ {b.shape}")
+        return ozaki2_matmul_df32(a, b, pol.modular_config())
     if a.dtype != jnp.float64:
-        raise TypeError(f"ozaki2-fp64 runs on float64 operands only "
-                        f"(FP64 CRT reconstruction), got {a.dtype}")
+        raise TypeError(f"ozaki2-fp64 runs on float64/float32/complex128 "
+                        f"operands, got {a.dtype}")
     cfg = pol.modular_config()
     cache = _active_plan_cache(pol)
     if a.ndim == 3:
@@ -598,6 +613,23 @@ def _matmul_ozaki2(a, b, pol: MatmulPolicy):
         raise ValueError(f"matmul expects 2-D or 3-D operands, got "
                          f"{a.shape} @ {b.shape}")
     m, k = a.shape
+    if pol.shard_axis:
+        from repro.parallel.ozaki_shard import (active_shard_mesh,
+                                                constrain_batched_kshard,
+                                                distributed_ozaki2_matmul)
+        mesh = active_shard_mesh()
+        if pol.comm == "int8" and mesh is not None and \
+                pol.shard_axis in mesh.axis_names and \
+                k % mesh.shape[pol.shard_axis] == 0:
+            # |comm=int8: the residue-wire collective schedule — exact
+            # int32 psum/reduce-scatter of the per-modulus residue
+            # partials, bitwise-identical to the unsharded reference
+            # for any mesh shape.
+            return distributed_ozaki2_matmul(a, b, mesh, cfg,
+                                             axis=pol.shard_axis)
+        # mirror Scheme I's composition point: pin the reduction dim to
+        # the registered shard mesh; silently a no-op without a mesh.
+        a, b = constrain_batched_kshard(a, b, pol.shard_axis)
     cfg = _apply_tuned_modular_plan(cfg, cache, m=m, n=b.shape[1], k=k,
                                     batch=1)
     return ozaki2_matmul(a, b, cfg)

@@ -62,7 +62,7 @@ import numpy as np
 # top-level import is cycle-free; it powers the cross-scheme cost model.
 from .modular import modular_eta, resolve_modular
 from .splitting import row_exponents, slice_width
-from .tuning import diagonal_groups, parse_pair_policy
+from .tuning import diagonal_groups, hbm_pass_model, parse_pair_policy
 
 __all__ = ["MAX_SPLITS", "SchemeChoice", "kept_pairs", "truncation_eta",
            "input_truncation_eta", "accum_floor", "error_bound",
@@ -227,7 +227,10 @@ class SchemeChoice:
     ``num_moduli``, with ``num_splits`` the integerization slice count).
     ``gemms`` is the winner's modeled int8-GEMM-equivalent cost and
     ``costs`` records every candidate's, so callers (and tests) can see
-    WHY the arbitration went the way it did.
+    WHY the arbitration went the way it did. ``traffic`` records each
+    candidate's modeled HBM passes (``tuning.hbm_pass_model`` at the
+    family's best fused route) — the secondary axis: GEMM-equivalents
+    rank first, traffic breaks cost ties before the incumbent rule does.
     """
 
     scheme: str
@@ -237,6 +240,7 @@ class SchemeChoice:
     num_moduli: int = 0
     gemms: float = 0.0
     costs: tuple = ()        # ((scheme, modeled cost), ...)
+    traffic: tuple = ()      # ((scheme, modeled HBM passes), ...)
 
 
 def _scheme2_cost(num_moduli: int, num_splits: int, k: int,
@@ -309,9 +313,12 @@ def resolve_accuracy(k: int, num_splits: int, *,
     and the return type becomes a ``SchemeChoice`` — both families are
     sized for the same accuracy contract and the one with the fewer
     modeled int8-GEMM equivalents wins (``m``/``n`` refine Scheme II's
-    elementwise overhead terms when the output shape is known). Scheme I
-    wins ties: it is the bitwise-validated incumbent. Without
-    ``schemes`` the legacy ``(s, policy)`` tuple contract is unchanged.
+    elementwise overhead terms when the output shape is known). A cost
+    tie falls through to modeled HBM traffic (``hbm_pass_model`` at each
+    family's best fused route: Scheme I streaming vs the Scheme II
+    fused-CRT epilogue); only a tie on BOTH axes goes to Scheme I, the
+    bitwise-validated incumbent. Without ``schemes`` the legacy
+    ``(s, policy)`` tuple contract is unchanged.
     """
     s = num_splits
     if target_error is not None:
@@ -335,27 +342,41 @@ def resolve_accuracy(k: int, num_splits: int, *,
     costs = dict(scheme_costs(k, s, target_error=target_error,
                               pair_policy=policy, full_pairs=full_pairs,
                               m=m, n=n))
-    ranked = sorted((name for name in schemes),
-                    key=lambda name: (costs[name],
-                                      name != "ozaki_fp64"))
-    winner = ranked[0]
-    all_costs = tuple((name, costs[name]) for name in schemes)
-    if winner == "ozaki2_fp64" and math.isfinite(costs[winner]):
+    # Secondary axis: modeled HBM passes at each family's best fused
+    # route (Scheme I streaming vs the Scheme II fused-CRT epilogue) —
+    # breaks GEMM-cost ties before the incumbent rule.
+    traffic = {"ozaki_fp64": float(hbm_pass_model(
+        s, fusion="streaming", pair_policy=policy)["total"])}
+    point2 = None
+    if math.isfinite(costs["ozaki2_fp64"]):
         if target_error is not None:
-            point = resolve_modular(k, target_error=target_error)
+            point2 = resolve_modular(k, target_error=target_error)
         else:
             w = slice_width(k, ell_acc=ell_acc, ell_in=ell_in,
                             fuse_terms=s if fuse else 1)
-            point = resolve_modular(
+            point2 = resolve_modular(
                 k, target_error=k * truncation_eta(
                     s, w, pair_policy=policy, full_pairs=full_pairs))
+        traffic["ozaki2_fp64"] = float(hbm_pass_model(
+            point2.num_splits, fusion="epilogue", scheme="ozaki2_fp64",
+            num_moduli=len(point2.moduli))["total"])
+    else:
+        traffic["ozaki2_fp64"] = math.inf
+    ranked = sorted((name for name in schemes),
+                    key=lambda name: (costs[name], traffic[name],
+                                      name != "ozaki_fp64"))
+    winner = ranked[0]
+    all_costs = tuple((name, costs[name]) for name in schemes)
+    all_traffic = tuple((name, traffic[name]) for name in schemes)
+    if winner == "ozaki2_fp64" and math.isfinite(costs[winner]):
         return SchemeChoice(scheme="ozaki2_fp64",
-                            num_splits=point.num_splits, beta=point.beta,
-                            num_moduli=len(point.moduli),
-                            gemms=costs[winner], costs=all_costs)
+                            num_splits=point2.num_splits, beta=point2.beta,
+                            num_moduli=len(point2.moduli),
+                            gemms=costs[winner], costs=all_costs,
+                            traffic=all_traffic)
     return SchemeChoice(scheme="ozaki_fp64", num_splits=s,
                         pair_policy=policy, gemms=costs["ozaki_fp64"],
-                        costs=all_costs)
+                        costs=all_costs, traffic=all_traffic)
 
 
 # ----------------------------------------------------------------------------

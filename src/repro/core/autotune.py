@@ -416,11 +416,18 @@ def candidate_plans(m: int, n: int, k: int, *, batch: int = 1,
             cands.append(plan)
 
     if scheme == "ozaki2_fp64":
-        # the residue path has no pair schedule / fusion crossover to
-        # search: the launch-level space is the GEMM tile shapes, plus
-        # (under a target) the Scheme I seed for cross-family arbitration
-        for tile in _tile_variants(base.tile):
-            add(dataclasses.replace(base, tile=tile))
+        # the residue path has no pair schedule; the launch-level space
+        # is the stages <-> epilogue fusion flip (both bitwise-equal:
+        # the fused-CRT kernel replays the reference Garner digits and
+        # ascending-radix f64 sum) and the GEMM tile shapes, plus (under
+        # a target) the Scheme I seed for cross-family arbitration
+        if base.fusion in ("stages", "epilogue"):
+            add(dataclasses.replace(
+                base, fusion=("epilogue" if base.fusion == "stages"
+                              else "stages")))
+        for seed in list(cands):
+            for tile in _tile_variants(seed.tile):
+                add(dataclasses.replace(seed, tile=tile))
         if target_error is not None and cross_scheme and \
                 shard_axis is None:
             add(select_pipeline_plan(
@@ -547,6 +554,7 @@ def _plan_runner(plan: PipelinePlan, a, b) -> Callable[[], object]:
                               ozaki2_matmul_batched)
         mcfg = ModularConfig(beta=plan.beta, num_moduli=plan.num_moduli,
                              backend=plan.backend,
+                             fuse_epilogue=(plan.fusion == "epilogue"),
                              interpret=plan.interpret, tile=plan.tile)
         if a.ndim == 3:
             return lambda: ozaki2_matmul_batched(a, b, mcfg)

@@ -41,7 +41,7 @@ import jax.numpy as jnp
 
 # core.modular imports core.tuning only; its drivers import us lazily,
 # so this top-level import is cycle-free.
-from .modular import (center_mod, crt_digits, crt_value,
+from .modular import (center_mod, crt_digits, crt_value, garner_constants,
                       residues_from_slices, usable_moduli)
 from .splitting import SplitResult, row_exponents, split_int, split_int_dw
 from .tuning import BACKENDS, PipelinePlan
@@ -50,8 +50,8 @@ from .xmath import DW, dw_add, dw_normalize
 __all__ = ["BACKENDS", "XlaExecutor", "PallasExecutor", "FusedExecutor",
            "EpilogueExecutor", "StreamingExecutor", "StreamingSplit",
            "ModularXlaExecutor", "ModularPallasExecutor",
-           "ModularFusedExecutor", "get_executor", "gemm_xla",
-           "int32_to_dw"]
+           "ModularFusedExecutor", "ModularEpilogueExecutor",
+           "get_executor", "gemm_xla", "int32_to_dw"]
 
 
 def gemm_xla(a8: jax.Array, bt8: jax.Array) -> jax.Array:
@@ -397,6 +397,36 @@ class ModularFusedExecutor(ModularPallasExecutor):
         return FusedExecutor.split(self, x, w)
 
 
+class ModularEpilogueExecutor(ModularFusedExecutor):
+    """``fusion="epilogue"`` Scheme II: residue GEMMs + balanced-Garner
+    CRT reconstruction in ONE kernel launch.
+
+    The per-modulus int32 product planes accumulate in a (ell, bm, bn)
+    VMEM scratch stack over the (modulus, k) grid walk and the CRT
+    epilogue reconstructs the f64 value at the last grid step — they
+    never round-trip through HBM (``tuning.hbm_pass_model`` drops the
+    2*ell accumulation passes). The kernel replays
+    ``crt_digits``/``crt_value``'s exact integer recurrence and f64
+    rounding sequence with host-baked Garner constants
+    (``modular.garner_constants``), so the fused route stays bitwise
+    identical to the unfused XLA reference.
+    """
+
+    def contract(self, sa: SplitResult, sb: SplitResult, w: int,
+                 e_base: jax.Array, shape):
+        from repro.kernels import int8_matmul_nt_crt
+        k = sa.slices.shape[-1]
+        moduli = usable_moduli(k)[:self.plan.num_moduli]
+        ra = residues_from_slices(sa.slices, w, moduli)
+        rb = residues_from_slices(sb.slices, w, moduli)
+        mods, qmod, inv, scales = garner_constants(moduli, self.plan.beta)
+        tile = self.plan.tile
+        out = int8_matmul_nt_crt(ra, rb, moduli=mods, qmod=qmod, inv=inv,
+                                 scales=scales, bm=tile.bm, bn=tile.bn,
+                                 bk=tile.bk, interpret=self.plan.interpret)
+        return jnp.ldexp(out, e_base)
+
+
 def get_executor(plan: PipelinePlan) -> XlaExecutor:
     if getattr(plan, "scheme", "ozaki_fp64") == "ozaki2_fp64":
         if plan.backend == "xla":
@@ -404,6 +434,8 @@ def get_executor(plan: PipelinePlan) -> XlaExecutor:
         if plan.backend == "pallas":
             return ModularPallasExecutor(plan)
         if plan.backend == "pallas_fused":
+            if plan.fusion == "epilogue":
+                return ModularEpilogueExecutor(plan)
             return ModularFusedExecutor(plan)
         raise ValueError(f"unknown backend {plan.backend!r}; "
                          f"expected one of {BACKENDS}")

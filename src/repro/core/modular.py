@@ -69,9 +69,12 @@ from .splitting import SplitResult, split_int
 from .tuning import PipelinePlan, TilePlan
 
 __all__ = ["MAX_BETA", "ModularConfig", "ModularPoint", "center_mod",
-           "crt_digits", "crt_value", "min_beta_for", "modular_accum_floor",
+           "crt_digits", "crt_value", "crt_value_dw", "garner_constants",
+           "min_beta_for", "modular_accum_floor",
            "modular_error_bound", "modular_eta", "modular_plan",
-           "ozaki2_matmul", "ozaki2_matmul_batched", "residues_from_slices",
+           "ozaki2_matmul", "ozaki2_matmul_batched",
+           "ozaki2_matmul_complex", "ozaki2_matmul_df32",
+           "residues_from_slices",
            "resolve_modular", "select_moduli", "usable_moduli"]
 
 # Past 2 * 53 bits even a double-double reference is matched; the cap
@@ -337,19 +340,79 @@ def crt_digits(cres: jax.Array, moduli: Sequence[int]) -> list[jax.Array]:
     return digits
 
 
+def _split26(x: float) -> tuple[float, float]:
+    """Veltkamp split of a host f64 into an exact (hi, lo) pair with
+    <= 26 / 27 significant bits each (``x == hi + lo`` exactly)."""
+    c = x * (2.0 ** 27 + 1.0)
+    hi = c - (c - x)
+    return hi, x - hi
+
+
 def crt_value(digits: Sequence[jax.Array], moduli: Sequence[int], beta: int,
               e_base: jax.Array) -> jax.Array:
     """FP64 reconstruction: ``ldexp(sum_j v_j * float(Q_j) * 4^{-beta},
     ea + eb)``, summed smallest radix first (ascending j) so rounding
     stays within ``modular_accum_floor``. ``float(Q_j)`` rounds at
-    2^-53 relative — covered by the floor, like every term op."""
+    2^-53 relative — covered by the floor, like every term op.
+
+    Each scale is Veltkamp-split host-side into an exact (hi, lo) pair
+    of <= 27-bit halves, so both ``v * lo`` and ``v * hi`` products are
+    EXACT in f64 (|v| <= 125 adds 7 bits: 34 < 53) and only the running
+    adds round. That makes the sum FMA-contraction-proof — fusing an
+    exact mul into the following add cannot move a bit — so jit, eager,
+    and the fused-CRT kernel epilogue produce the identical bit pattern
+    (the same trick the Scheme I epilogue gets for free from its
+    power-of-two scale)."""
+    prefix, _, _ = _garner_tables(moduli)
+    c = None
+    for j, v in enumerate(digits):
+        hi, lo = _split26(math.ldexp(float(prefix[j]), -2 * beta))
+        vf = v.astype(jnp.float64)
+        t_lo = vf * lo                       # exact: 7 + 27 bits
+        c = t_lo if c is None else c + t_lo  # smallest piece first
+        c = c + vf * hi                      # exact: 7 + 26 bits
+    return jnp.ldexp(c, e_base)
+
+
+def garner_constants(moduli: Sequence[int], beta: int):
+    """Static Garner constants for the fused-CRT epilogue kernel: the
+    moduli, ``Q_i mod m_j`` rows, ``Q_j^{-1} mod m_j``, and the per-digit
+    FP64 scales ``float(Q_j) * 4^{-beta}`` as Veltkamp (hi, lo) pairs
+    (``crt_value``'s exact-product form) — every value a hashable python
+    scalar, so the kernel wrapper can take them as jit statics and
+    replay ``crt_digits``/``crt_value``'s exact arithmetic in VMEM."""
+    prefix, inv, qmod = _garner_tables(moduli)
+    scales = tuple(_split26(math.ldexp(float(prefix[j]), -2 * beta))
+                   for j in range(len(moduli)))
+    return (tuple(moduli), tuple(tuple(row) for row in qmod),
+            tuple(inv), scales)
+
+
+def crt_value_dw(digits: Sequence[jax.Array], moduli: Sequence[int],
+                 beta: int, e_base: jax.Array):
+    """df32 reconstruction target: the CRT sum accumulated in double-
+    float32 (DW) arithmetic — no FP64 hardware needed past the exact
+    integer stages.
+
+    Each scale ``Q_j * 4^{-beta}`` is decomposed host-side into an exact
+    (f32 hi, f32 lo) pair; the digit (|v| <= 125, exact in f32)
+    multiplies it via the Dekker-based ``dw_mul_single`` and the terms
+    accumulate ascending-radix through ``dw_add``. Low-radix scales
+    below f32's subnormal floor round to zero — they sit ~2^-90 under
+    the df32 accumulation floor, so the guaranteed df32-level bound is
+    unaffected. Returns a ``DW`` pair scaled by ``2^{e_base}``.
+    """
+    from .xmath import DW, dw_add, dw_mul_single
     prefix, _, _ = _garner_tables(moduli)
     c = None
     for j, v in enumerate(digits):
         scale = math.ldexp(float(prefix[j]), -2 * beta)
-        term = v.astype(jnp.float64) * scale
-        c = term if c is None else c + term
-    return jnp.ldexp(c, e_base)
+        hi = np.float32(scale)
+        lo = np.float32(scale - float(hi))
+        scale_dw = DW(jnp.float32(hi), jnp.float32(lo))
+        term = dw_mul_single(scale_dw, v.astype(jnp.float32))
+        c = term if c is None else dw_add(c, term)
+    return DW(jnp.ldexp(c.hi, e_base), jnp.ldexp(c.lo, e_base))
 
 
 # ----------------------------------------------------------------------------
@@ -373,6 +436,10 @@ class ModularConfig:
                   batched dot_general or the batch-grid Pallas kernel
                   (pallas_fused additionally splits with the one-pass
                   kernel).
+    fuse_epilogue: with ``pallas_fused``: run the balanced-Garner CRT
+                  reconstruction inside the residue GEMM grid's epilogue
+                  (VMEM scratch over the modulus axis) — int32 residue
+                  products never round-trip through HBM.
     interpret:    Pallas interpret mode (CPU validation hosts).
     tile:         optional TilePlan for the kernel launches.
     """
@@ -382,6 +449,7 @@ class ModularConfig:
     num_moduli: Optional[int] = None
     w: int = 7
     backend: str = "xla"
+    fuse_epilogue: bool = False
     interpret: bool = True
     tile: Optional[TilePlan] = None
 
@@ -392,12 +460,14 @@ class ModularConfig:
 
     def plan(self, k: int, *, batch_layout: str = "none") -> PipelinePlan:
         return modular_plan(k, point=self.point(k), backend=self.backend,
+                            fuse_epilogue=self.fuse_epilogue,
                             interpret=self.interpret, tile=self.tile,
                             batch_layout=batch_layout)
 
 
 def modular_plan(k: int, *, point: Optional[ModularPoint] = None,
-                 backend: str = "xla", interpret: bool = True,
+                 backend: str = "xla", fuse_epilogue: bool = False,
+                 interpret: bool = True,
                  tile: Optional[TilePlan] = None,
                  batch_layout: str = "none",
                  target_error: Optional[float] = None,
@@ -415,11 +485,18 @@ def modular_plan(k: int, *, point: Optional[ModularPoint] = None,
                                 num_moduli=num_moduli)
     if tile is None:
         tile = TilePlan(num_splits=point.num_splits, concat_k=False)
+    if fuse_epilogue and backend != "pallas_fused":
+        raise ValueError(
+            f"fuse_epilogue (fused-CRT reconstruction) needs the "
+            f"pallas_fused backend, got backend={backend!r}")
+    if backend == "pallas_fused":
+        fusion = "epilogue" if fuse_epilogue else "stages"
+    else:
+        fusion = "none"
     return PipelinePlan(
         scheme="ozaki2_fp64", num_splits=point.num_splits,
         beta=point.beta, num_moduli=len(point.moduli), tile=tile,
-        backend=backend,
-        fusion="stages" if backend == "pallas_fused" else "none",
+        backend=backend, fusion=fusion,
         batch_layout=batch_layout, pair_policy="full", fuse_diagonals=True,
         concat_k=False, full_pairs=False, accum="f64", interpret=interpret)
 
@@ -437,9 +514,9 @@ def _e_base(ea: jax.Array, eb: jax.Array) -> jax.Array:
 def _check_f64(a, b, name: str) -> None:
     if a.dtype != jnp.float64 or b.dtype != jnp.float64:
         raise TypeError(
-            f"{name} takes float64 operands (Scheme II reconstructs "
-            f"through FP64 CRT; no df32/complex path yet), got "
-            f"{a.dtype} @ {b.dtype}")
+            f"{name} takes float64 operands (complex128 routes through "
+            f"ozaki2_matmul_complex, float32 through ozaki2_matmul_df32), "
+            f"got {a.dtype} @ {b.dtype}")
 
 
 def ozaki2_matmul(a: jax.Array, b: jax.Array,
@@ -527,3 +604,99 @@ def ozaki2_matmul_batched(a: jax.Array, b: jax.Array,
         raise ValueError(f"contraction mismatch: {a.shape} vs {b.shape}")
     _check_f64(a, b, "ozaki2_matmul_batched")
     return _batched_core2(a, b, cfg)
+
+
+# ----------------------------------------------------------------------------
+# Complex + df32 routes (the Scheme I parity surfaces, PR 9)
+# ----------------------------------------------------------------------------
+
+def ozaki2_matmul_complex(a: jax.Array, b: jax.Array,
+                          cfg: ModularConfig = ModularConfig(),
+                          algo: str = "4mul") -> jax.Array:
+    """complex128 ``C = A @ B`` through real Scheme II GEMMs.
+
+    The same decomposition ``ozaki_matmul_complex`` uses — the scheme
+    only changes what a *real* GEMM costs, not the complex algebra:
+
+    ``algo="4mul"``: Cr = ArBr - AiBi, Ci = ArBi + AiBr (each of the 4
+    real matrices integerized exactly once, residue stacks reused).
+    ``algo="3mul"``: Karatsuba, one fewer residue-GEMM group at one
+    extra magnitude bit on the summed operands (covered by beta).
+    """
+    if a.dtype != jnp.complex128 or b.dtype != jnp.complex128:
+        raise TypeError(f"ozaki2_matmul_complex takes complex128 operands, "
+                        f"got {a.dtype} @ {b.dtype}")
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"complex operands must be 2-D, got "
+                         f"{a.shape} @ {b.shape}")
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"contraction mismatch: {a.shape} vs {b.shape}")
+    ar, ai = jnp.real(a), jnp.imag(a)
+    br, bi = jnp.real(b), jnp.imag(b)
+    k = a.shape[1]
+    plan = cfg.plan(k)
+    from .executors import get_executor          # lazy: executors import us
+    ex = get_executor(plan)
+    w = cfg.w
+
+    def real_mm(xs, ys, shape):
+        return ex.contract(xs, ys, w, _e_base(xs.exp, ys.exp), shape)
+
+    shape = (a.shape[0], b.shape[1])
+    if algo == "3mul":
+        s_ar = ex.split(ar, w)
+        s_ai = ex.split(ai, w)
+        s_as = ex.split(ar + ai, w)
+        s_br = ex.split(br.T, w)
+        s_bi = ex.split(bi.T, w)
+        s_bs = ex.split((br + bi).T, w)
+        p1 = real_mm(s_ar, s_br, shape)
+        p2 = real_mm(s_ai, s_bi, shape)
+        p3 = real_mm(s_as, s_bs, shape)
+        return jax.lax.complex(p1 - p2, p3 - p1 - p2)
+    if algo != "4mul":
+        raise ValueError(f"algo must be '4mul' or '3mul', got {algo!r}")
+    s_ar = ex.split(ar, w)
+    s_ai = ex.split(ai, w)
+    s_br = ex.split(br.T, w)
+    s_bi = ex.split(bi.T, w)
+    c_r = real_mm(s_ar, s_br, shape) - real_mm(s_ai, s_bi, shape)
+    c_i = real_mm(s_ar, s_bi, shape) + real_mm(s_ai, s_br, shape)
+    return jax.lax.complex(c_r, c_i)
+
+
+def ozaki2_matmul_df32(a: jax.Array, b: jax.Array,
+                       cfg: ModularConfig = ModularConfig()) -> jax.Array:
+    """f32-in/f32-out Scheme II GEMM with a df32 reconstruction target.
+
+    Every stage up to the CRT digits is exact integer arithmetic on the
+    *widened* operands (f32 -> f64 is exact), identical to
+    ``ozaki2_matmul``'s stages; the reconstruction then runs
+    ``crt_value_dw`` — the CRT sum in double-float32 — instead of the
+    FP64 sum, so past the integer stages the route needs no FP64
+    hardware. Returns ``dw_to_single`` of the DW result (f32).
+    """
+    if a.dtype != jnp.float32 or b.dtype != jnp.float32:
+        raise TypeError(f"ozaki2_matmul_df32 takes float32 operands, got "
+                        f"{a.dtype} @ {b.dtype}")
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"ozaki2_matmul_df32 expects 2-D operands, got "
+                         f"{a.shape} @ {b.shape}")
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"contraction mismatch: {a.shape} vs {b.shape}")
+    k = a.shape[1]
+    plan = cfg.plan(k)
+    from .executors import get_executor          # lazy: executors import us
+    from .xmath import dw_to_single
+    ex = get_executor(plan)
+    w = cfg.w
+    sa = ex.split(a.astype(jnp.float64), w)      # exact widening
+    sb = ex.split(b.T.astype(jnp.float64), w)
+    moduli = usable_moduli(k)[:plan.num_moduli]
+    ra = residues_from_slices(sa.slices, w, moduli)
+    rb = residues_from_slices(sb.slices, w, moduli)
+    p = ex.gemm(ra, rb)
+    digits = crt_digits(center_mod(p, moduli), moduli)
+    out = crt_value_dw(digits, moduli, plan.beta,
+                       _e_base(sa.exp, sb.exp))
+    return dw_to_single(out)

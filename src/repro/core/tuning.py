@@ -349,8 +349,11 @@ class PipelinePlan:
     deterministically as ``modular.usable_moduli(k)[:num_moduli]``).
     Scheme II constraints: f64 accumulation only (the CRT reconstruction
     is an FP64 sum), "full" pair policy (there is no pair schedule to
-    truncate — accuracy scales via beta), and fusion "none"/"stages"
-    (no residue epilogue/streaming kernels yet).
+    truncate — accuracy scales via beta), and fusion "none"/"stages"/
+    "epilogue" — "epilogue" is the fused-CRT kernel (balanced-Garner
+    reconstruction in VMEM scratch over the modulus grid axis; the int32
+    residue products never round-trip through HBM). There is no Scheme II
+    streaming kernel.
     """
 
     num_splits: int = 9
@@ -396,11 +399,11 @@ class PipelinePlan:
             if self.accum != "f64":
                 raise ValueError("ozaki2_fp64 accumulates in f64 only "
                                  f"(CRT reconstruction), got {self.accum!r}")
-            if self.fusion not in ("none", "stages"):
+            if self.fusion not in ("none", "stages", "epilogue"):
                 raise ValueError(
-                    f"ozaki2_fp64 supports fusion 'none'/'stages' only "
-                    f"(no residue epilogue/streaming kernels), "
-                    f"got {self.fusion!r}")
+                    f"ozaki2_fp64 supports fusion 'none'/'stages'/"
+                    f"'epilogue' (fused-CRT reconstruction; no residue "
+                    f"streaming kernel), got {self.fusion!r}")
             if self.pair_policy != "full":
                 raise ValueError(
                     "ozaki2_fp64 has no pair schedule to truncate "
@@ -578,6 +581,11 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
             raise ValueError(
                 "ozaki2_fp64 has no pair schedule: fast_mode/pair_policy "
                 "do not apply (set target_error or num_moduli instead)")
+        if streaming:
+            raise ValueError(
+                "ozaki2_fp64 has no streaming kernel: the residue stacks "
+                "are built by residues_from_slices (set fuse_epilogue for "
+                "the fused-CRT reconstruction instead)")
         # lazy: core.modular imports this module at top
         from .modular import modular_plan, resolve_modular
         point = resolve_modular(k, target_error=target_error,
@@ -616,6 +624,8 @@ def select_pipeline_plan(m: int, n: int, k: int, *, batch: int = 1,
                            mantissa_space=mantissa_space, mmu=mmu,
                            vmem_budget=vmem_budget)
         return modular_plan(k, point=point, backend=backend,
+                            fuse_epilogue=(fuse_epilogue and
+                                           backend == "pallas_fused"),
                             interpret=interpret, tile=tile,
                             batch_layout=layout)
     accuracy_pinned = (target_error is not None or fast_mode or
@@ -696,7 +706,9 @@ def hbm_pass_model(num_splits: int, *, fused: bool = False,
                    fuse_epilogue: bool = False,
                    fusion: Optional[str] = None,
                    batch: int = 1, batch_layout: str = "none",
-                   pair_policy: str = "full") -> dict:
+                   pair_policy: str = "full",
+                   scheme: str = "ozaki_fp64",
+                   num_moduli: int = 0) -> dict:
     """Modeled HBM round-trips per stage for one operand/output matrix.
 
     Counts *array passes* (each read or write of a full matrix-sized
@@ -750,6 +762,31 @@ def hbm_pass_model(num_splits: int, *, fused: bool = False,
     the stage-fused pipeline — that legacy state is modeled by calling
     with ``fuse_epilogue=False`` — so the kernel removes one modeled
     pass per accumulation group (3 -> 2) on the batched path.
+
+    ``scheme="ozaki2_fp64"`` prices the residue-system pipeline instead
+    (``num_moduli`` = ``ell``, the CRT modulus count). Its stages:
+
+    * split — identical to Scheme I (s residual passes unfused, one
+      input read for the one-pass kernel).
+    * slices — the (s, m, k) int8 stack is written once by split and
+      read ONCE by the residue extraction (``residues_from_slices``
+      contracts the whole slice axis per modulus in one tensordot pass),
+      so ``2 * s`` — not the per-pair re-reads Scheme I pays.
+    * residues — the (ell, m, k) int8 residue stacks: ell write passes
+      by the extraction plus ell read passes by the batched GEMM. This
+      is the line item the model previously had no vocabulary for
+      (mirroring the slice-stack fix: Scheme I plans carry
+      ``residues = 0``).
+    * accum — unfused/stage-fused: the (ell, m, n) int32 residue
+      products round-trip through HBM between the GEMM and the Garner
+      reconstruction (``2 * ell``) plus the f64 output write; the
+      fused-CRT epilogue (``fusion="epilogue"``) reconstructs in VMEM
+      scratch over the modulus grid axis, so only the output write
+      remains — strictly ``2 * ell`` passes fewer.
+
+    Scheme II at s=9, ell=15: "none" 9+18+30+31=88, "stages"
+    1+18+30+31=80, "epilogue" 1+18+30+1=50. There is no Scheme II
+    streaming mode.
     """
     if batch_layout not in BATCH_LAYOUTS:
         raise ValueError(f"unknown batch_layout {batch_layout!r}; "
@@ -767,6 +804,27 @@ def hbm_pass_model(num_splits: int, *, fused: bool = False,
     streaming = fusion == "streaming"
     fused = fused or fuse_epilogue      # epilogue fusion implies fused
     s = num_splits
+    if scheme not in PLAN_SCHEMES:
+        raise ValueError(f"unknown scheme {scheme!r}; "
+                         f"expected one of {PLAN_SCHEMES}")
+    if scheme == "ozaki2_fp64":
+        if num_moduli < 1:
+            raise ValueError("ozaki2_fp64 pass model needs num_moduli >= 1 "
+                             f"(the CRT modulus count), got {num_moduli}")
+        if streaming:
+            raise ValueError("ozaki2_fp64 has no streaming kernel")
+        if pair_policy != "full":
+            raise ValueError("ozaki2_fp64 has no pair schedule to "
+                             f"truncate, got pair_policy={pair_policy!r}")
+        ell = num_moduli
+        split_passes = (1 if fused else s) * batch
+        slices_passes = 2 * s * batch       # stack written s + read s
+        residues_passes = 2 * ell * batch   # planes written ell + read ell
+        accum_passes = (1 if fuse_epilogue else 2 * ell + 1) * batch
+        return {"split": split_passes, "slices": slices_passes,
+                "residues": residues_passes, "accum": accum_passes,
+                "total": split_passes + slices_passes + residues_passes +
+                accum_passes}
     # pair truncation drops whole accumulation groups (fuse_diagonals)
     # or individual pair products (paper-faithful schedule)
     gl = diagonal_groups(s, False,
@@ -793,7 +851,7 @@ def hbm_pass_model(num_splits: int, *, fused: bool = False,
     slices_passes *= batch
     accum_passes *= batch
     return {"split": split_passes, "slices": slices_passes,
-            "accum": accum_passes,
+            "residues": 0, "accum": accum_passes,
             "total": split_passes + slices_passes + accum_passes}
 
 
@@ -802,7 +860,9 @@ def comm_bytes_model(m: int, n: int, k: int, *, num_splits: int,
                      comm: str = "f64", schedule: str = "psum",
                      batch: int = 1, fuse_diagonals: bool = True,
                      full_pairs: bool = False,
-                     pair_policy: str = "full") -> dict:
+                     pair_policy: str = "full",
+                     scheme: str = "ozaki_fp64",
+                     num_moduli: int = 0) -> dict:
     """Modeled per-device interconnect bytes for one sharded GEMM — the
     ``hbm_pass_model`` companion for the transport layer.
 
@@ -843,8 +903,19 @@ def comm_bytes_model(m: int, n: int, k: int, *, num_splits: int,
       path moves NO operand words at all and tall-k shapes amortize the
       ``m*n`` partials against the ``(m + n) * k`` operand gather.
 
+    ``scheme="ozaki2_fp64"`` prices the residue-system transport instead
+    (``num_moduli`` = ``ell``). k-shard int8 ships the exact int32
+    residue partial stack — ``ell`` planes of ``4 * m*n`` bytes (the
+    per-modulus products are exact int32 sums over the sharded k axis,
+    so the reduction commutes with the CRT reconstruction) — plus the
+    same two exponent pmaxes. m/n-shard int8 gathers the packed
+    ``ResidueWire`` (int8 residue stack + exponents): ``ell`` bytes per
+    element of B vs f64's 8, so the gather wins exactly when
+    ``ell < 8`` — the same honesty note as Scheme I's ``s < 8``.
+
     Returns per-item bytes: ``operands`` (f64 words), ``slices`` (int8
-    stacks), ``exponents`` (int32 vectors), ``partials`` (int32 group
+    stacks — slice planes for Scheme I, residue planes for Scheme II),
+    ``exponents`` (int32 vectors), ``partials`` (int32 group / residue
     products), and ``total``.
     """
     if layout not in ("kshard", "mnshard"):
@@ -858,8 +929,36 @@ def comm_bytes_model(m: int, n: int, k: int, *, num_splits: int,
         raise ValueError(f"unknown schedule {schedule!r}")
     if world < 1:
         raise ValueError(f"world must be >= 1, got {world}")
+    if scheme not in PLAN_SCHEMES:
+        raise ValueError(f"unknown scheme {scheme!r}; "
+                         f"expected one of {PLAN_SCHEMES}")
     ring = (world - 1) / world           # per-device ring fraction
     s = num_splits
+    if scheme == "ozaki2_fp64":
+        if num_moduli < 1:
+            raise ValueError("ozaki2_fp64 comm model needs num_moduli >= 1 "
+                             f"(the CRT modulus count), got {num_moduli}")
+        ell = num_moduli
+        operands = slices = exponents = partials = 0.0
+        if layout == "kshard":
+            if comm == "f64":
+                operands = ring * 8 * (batch * m * k + k * n)
+            else:
+                exponents = 2 * ring * 4 * (batch * m + n)
+                # exact int32 residue partials: one (m, n) plane per
+                # modulus; all-reduce costs 2x a reduce-scatter
+                factor = 2 if schedule in ("psum", "overlap") else 1
+                partials = factor * ring * 4 * ell * batch * m * n
+        else:                            # mnshard: gather B's residues
+            if comm == "f64":
+                operands = ring * 8 * k * n
+            else:
+                slices = ring * ell * k * n      # packed ResidueWire
+                exponents = ring * 4 * n
+        total = operands + slices + exponents + partials
+        return {"operands": operands, "slices": slices,
+                "exponents": exponents, "partials": partials,
+                "total": total}
     gl = diagonal_groups(s, full_pairs,
                          pair_budget=parse_pair_policy(pair_policy, s,
                                                        full_pairs))

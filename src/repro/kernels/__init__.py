@@ -21,11 +21,13 @@ wrappers; ref.py holds the pure-jnp oracles.
 from . import int8_gemm, launch, ozaki_accum, ozaki_split, ref
 from .ops import (accum_scaled_dw, accum_scaled_sw, fused_split_dw,
                   int8_matmul_nt, int8_matmul_nt_batched,
+                  int8_matmul_nt_crt,
                   int8_matmul_nt_epilogue_dw, int8_matmul_nt_epilogue_sw,
                   int8_matmul_nt_streaming_dw, int8_matmul_nt_streaming_sw)
 
 __all__ = ["int8_gemm", "launch", "ozaki_accum", "ozaki_split", "ref",
            "accum_scaled_dw", "accum_scaled_sw", "fused_split_dw",
            "int8_matmul_nt", "int8_matmul_nt_batched",
+           "int8_matmul_nt_crt",
            "int8_matmul_nt_epilogue_dw", "int8_matmul_nt_epilogue_sw",
            "int8_matmul_nt_streaming_dw", "int8_matmul_nt_streaming_sw"]

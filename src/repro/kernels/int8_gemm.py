@@ -35,13 +35,15 @@ Validated on CPU in interpret mode against ``ref.int8_matmul_nt_ref``.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .launch import gemm_blocks, grid_for, pad_tail, streaming_blocks
+from .launch import (crt_blocks, gemm_blocks, grid_for, pad_tail,
+                     streaming_blocks)
 from .ozaki_accum import dw_accum_step
 from .ozaki_split import split_tile
 
@@ -378,6 +380,187 @@ def int8_matmul_nt_epilogue_dw(a_slices: jax.Array, b_slices: jax.Array,
                                   npairs=npairs, scale=scale, bm=bm, bn=bn,
                                   bk=bk, interpret=interpret)
     return o_hi, o_lo
+
+
+# ----------------------------------------------------------------------------
+# Fused-CRT variants (Ozaki Scheme II): residue GEMMs + balanced-Garner
+# reconstruction in one launch. The int32 residue products accumulate in a
+# (ell, bm, bn) VMEM scratch stack across a (modulus, k) grid walk and the
+# CRT epilogue reconstructs the f64 value in-register at the last grid
+# step — the per-modulus int32 product planes never round-trip to HBM.
+# ----------------------------------------------------------------------------
+#
+# Grid is (m/bm, n/bn, ell, k/bk) with the C block index a function of
+# (i, j) only, so for each output block the whole (modulus, k) walk
+# happens while the accumulator stack stays resident. The epilogue replays
+# ``core.modular.crt_digits``/``crt_value`` exactly: centered residues per
+# modulus, Garner's int32 recurrence with host-baked constants (every
+# intermediate bounded by ~125 + ell*125*250 < 2^21 — the centering step
+# is what makes that bound hold in here too), then the f64 sum smallest
+# radix first with the same python-float scales. Integer stages are exact
+# and the float stage runs the identical rounding sequence, so the fused
+# route is bitwise identical to the unfused XLA reference (the executor
+# applies the same final ``jnp.ldexp(out, e_base)``).
+#
+# The batch-grid variant prepends the batch as the OUTERMOST grid
+# dimension — (B, m/bm, n/bn, ell, k/bk) — like the epilogue family; the
+# residue stacks arrive as (ell, B, m, k) x (ell, B, n, k).
+
+
+def _fmod(x, m: int):
+    """Floor mod by a positive int32 constant (== jnp.mod bitwise: exact
+    integer arithmetic, spelled with lax.rem for Mosaic)."""
+    r = jax.lax.rem(x, jnp.int32(m))
+    return r + jnp.where(r < 0, jnp.int32(m), jnp.int32(0))
+
+
+def _crt_epilogue(acc_ref, moduli, qmod, inv, scales):
+    """Balanced-Garner digits + ascending-radix f64 sum of the resident
+    (ell, bm, bn) int32 residue-product stack."""
+    digits = []
+    c = None
+    for j, mj in enumerate(moduli):
+        half = (mj - 1) // 2
+        r = _fmod(acc_ref[pl.ds(j, 1)][0], mj)
+        acc = r - jnp.where(r > half, jnp.int32(mj), jnp.int32(0))
+        for i in range(j):
+            acc = acc - digits[i] * jnp.int32(qmod[i][j])
+        d = _fmod(acc, mj)
+        v = _fmod(d * jnp.int32(inv[j]), mj)
+        digits.append(v - jnp.where(v > half, jnp.int32(mj), jnp.int32(0)))
+        # mirror ``crt_value``'s FMA-proof term: the scale arrives as a
+        # Veltkamp (hi, lo) pair, so both digit products are EXACT f64
+        # (7 + 27 bits) and only the running adds round — contracting an
+        # exact mul into the add cannot move a bit, keeping the kernel
+        # sum bitwise identical to the eager reference.
+        hi, lo = scales[j]
+        vf = digits[j].astype(jnp.float64)
+        t_lo = vf * lo
+        c = t_lo if c is None else c + t_lo
+        c = c + vf * hi
+    return c
+
+
+def _crt_kernel(moduli, qmod, inv, scales, nk, a_ref, b_ref, o_ref, acc_ref):
+    jj = pl.program_id(2)
+    kk = pl.program_id(3)
+    ell = len(moduli)
+
+    @pl.when((jj == 0) & (kk == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[pl.ds(jj, 1)] += jax.lax.dot_general(
+        a_ref[0], b_ref[0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)[None]
+
+    @pl.when((jj == ell - 1) & (kk == nk - 1))
+    def _epilogue():
+        o_ref[...] = _crt_epilogue(acc_ref, moduli, qmod, inv, scales)
+
+
+def _crt_kernel_batched(moduli, qmod, inv, scales, nk, a_ref, b_ref, o_ref,
+                        acc_ref):
+    jj = pl.program_id(3)
+    kk = pl.program_id(4)
+    ell = len(moduli)
+
+    @pl.when((jj == 0) & (kk == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[pl.ds(jj, 1)] += jax.lax.dot_general(
+        a_ref[0, 0], b_ref[0, 0],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)[None]
+
+    @pl.when((jj == ell - 1) & (kk == nk - 1))
+    def _epilogue():
+        o_ref[...] = _crt_epilogue(acc_ref, moduli, qmod, inv, scales)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("moduli", "qmod", "inv",
+                                             "scales", "bm", "bn", "bk",
+                                             "interpret"))
+def int8_matmul_nt_crt(ra: jax.Array, rb: jax.Array, *, moduli, qmod, inv,
+                       scales, bm: int = 256, bn: int = 256, bk: int = 512,
+                       interpret: bool = True) -> jax.Array:
+    """Fused residue GEMMs + balanced-Garner CRT reconstruction.
+
+    ra: (ell, m, k) int8 centered residue stack of A_int; rb: (ell, n, k)
+    of B_int^T. Returns the (m, n) f64 CRT value PRE-ldexp — the caller
+    applies ``jnp.ldexp(out, e_base)``, exactly as after ``crt_value``.
+    The Garner constants come from ``core.modular.garner_constants`` as
+    hashable static tuples (moduli, Q_i-mod-m_j rows, inverses, f64
+    scales). Batch-grid form: (ell, B, m, k) x (ell, B, n, k) residue
+    stacks -> (B, m, n).
+
+    Zero-padding is exact end to end: padded k columns contribute zero
+    residue products, and all-zero accumulator planes reconstruct to 0.0
+    in the padded m/n fringe (sliced off).
+    """
+    assert ra.dtype == jnp.int8 and rb.dtype == jnp.int8
+    assert len(moduli) == ra.shape[0] == rb.shape[0], \
+        (len(moduli), ra.shape, rb.shape)
+    if ra.ndim == 4:
+        return _crt_launch_batched(ra, rb, moduli=moduli, qmod=qmod,
+                                   inv=inv, scales=scales, bm=bm, bn=bn,
+                                   bk=bk, interpret=interpret)
+    ell, m, k = ra.shape
+    _, n, k2 = rb.shape
+    assert k == k2, (ra.shape, rb.shape)
+    bm_, bn_, bk_ = crt_blocks(m, n, k, bm, bn, bk, ell=ell)
+    a_p = pad_tail(ra, (bm_, bk_))
+    b_p = pad_tail(rb, (bn_, bk_))
+    _, mp, kp = a_p.shape
+    _, np_, _ = b_p.shape
+    gm, gn, gk = grid_for((mp, np_, kp), (bm_, bn_, bk_))
+    out = pl.pallas_call(
+        functools.partial(_crt_kernel, moduli, qmod, inv, scales, gk),
+        grid=(gm, gn, ell, gk),
+        in_specs=[
+            pl.BlockSpec((1, bm_, bk_), lambda i, j, jj, kk: (jj, i, kk)),
+            pl.BlockSpec((1, bn_, bk_), lambda i, j, jj, kk: (jj, j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, jj, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float64),
+        scratch_shapes=[pltpu.VMEM((ell, bm_, bn_), jnp.int32)],
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def _crt_launch_batched(ra, rb, *, moduli, qmod, inv, scales, bm, bn, bk,
+                        interpret):
+    """Batch-grid fused-CRT launch: (ell, B, m, k) x (ell, B, n, k)
+    residue stacks, batch outermost in the grid."""
+    ell, B, m, k = ra.shape
+    _, B2, n, k2 = rb.shape
+    assert k == k2 and B == B2, (ra.shape, rb.shape)
+    bm_, bn_, bk_ = crt_blocks(m, n, k, bm, bn, bk, ell=ell)
+    a_p = pad_tail(ra, (bm_, bk_))
+    b_p = pad_tail(rb, (bn_, bk_))
+    _, _, mp, kp = a_p.shape
+    _, _, np_, _ = b_p.shape
+    gm, gn, gk = grid_for((mp, np_, kp), (bm_, bn_, bk_))
+    out = pl.pallas_call(
+        functools.partial(_crt_kernel_batched, moduli, qmod, inv, scales,
+                          gk),
+        grid=(B, gm, gn, ell, gk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm_, bk_),
+                         lambda b, i, j, jj, kk: (jj, b, i, kk)),
+            pl.BlockSpec((1, 1, bn_, bk_),
+                         lambda b, i, j, jj, kk: (jj, b, j, kk)),
+        ],
+        out_specs=pl.BlockSpec((1, bm_, bn_),
+                               lambda b, i, j, jj, kk: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, mp, np_), jnp.float64),
+        scratch_shapes=[pltpu.VMEM((ell, bm_, bn_), jnp.int32)],
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:, :m, :n]
 
 
 # ----------------------------------------------------------------------------

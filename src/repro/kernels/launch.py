@@ -100,6 +100,49 @@ def _streaming_working_set(bm: int, bn: int, bk: int, *, num_splits_a: int,
     return operands + slices + accum
 
 
+def _crt_working_set(bm: int, bn: int, bk: int, *, ell: int) -> int:
+    """VMEM bytes resident per fused-CRT GEMM grid step.
+
+    int8 operand tiles plus the persistent (ell, bm, bn) int32 residue
+    accumulator stack — the whole modulus axis must stay resident for the
+    Garner epilogue — and the f64 output tile the epilogue writes.
+    """
+    operands = bm * bk + bn * bk
+    accum = 4 * ell * bm * bn
+    out = 8 * bm * bn
+    return operands + accum + out
+
+
+def crt_blocks(m: int, n: int, k: int, bm: int, bn: int, bk: int, *,
+               ell: int, vmem_budget: int = VMEM_BYTES // 2
+               ) -> tuple[int, int, int]:
+    """Blocks for the fused-CRT residue GEMM: validated against the VMEM
+    budget including the (ell, bm, bn) int32 accumulator stack.
+
+    Starts from the standard GEMM shrink, then halves bm -> bn -> bk (to
+    their alignment floors) until the working set fits — the accumulator
+    stack scales with bm*bn, so the output tile shrinks first. Raises
+    ``ValueError`` if even the floor tile exceeds the budget: the CRT
+    epilogue needs every modulus plane resident, so there is no smaller
+    launch.
+    """
+    bm_, bn_, bk_ = gemm_blocks(m, n, k, bm, bn, bk)
+    ws = functools.partial(_crt_working_set, ell=ell)
+    while ws(bm_, bn_, bk_) > vmem_budget:
+        if bm_ > SUBLANE_I8:
+            bm_ //= 2
+        elif bn_ > LANE:
+            bn_ //= 2
+        elif bk_ > LANE:
+            bk_ //= 2
+        else:
+            raise ValueError(
+                "fused-CRT epilogue cannot fit VMEM: floor tile "
+                f"({bm_}, {bn_}, {bk_}) with {ell} modulus planes needs "
+                f"{ws(bm_, bn_, bk_)} bytes > budget {vmem_budget}")
+    return bm_, bn_, bk_
+
+
 def streaming_blocks(m: int, n: int, k: int, bm: int, bn: int, bk: int, *,
                      num_splits_a: int, num_splits_b: int, el_bytes: int,
                      vmem_budget: int = VMEM_BYTES // 2

@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 
 from .int8_gemm import (int8_matmul_nt, int8_matmul_nt_batched,
+                        int8_matmul_nt_crt,
                         int8_matmul_nt_epilogue_dw,
                         int8_matmul_nt_epilogue_sw,
                         int8_matmul_nt_streaming_dw,
@@ -19,6 +20,7 @@ from .ozaki_split import fused_split_dw
 INTERPRET = jax.default_backend() != "tpu"
 
 __all__ = ["int8_matmul_nt", "int8_matmul_nt_batched",
+           "int8_matmul_nt_crt",
            "int8_matmul_nt_epilogue_dw", "int8_matmul_nt_epilogue_sw",
            "int8_matmul_nt_streaming_dw", "int8_matmul_nt_streaming_sw",
            "fused_split_dw", "accum_scaled_dw", "accum_scaled_sw",

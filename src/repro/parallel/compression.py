@@ -1,7 +1,7 @@
-"""int8 wire formats for the mesh: the Ozaki slice transport and the
-EF-SGD gradient compressor.
+"""int8 wire formats for the mesh: the Ozaki slice/residue transports and
+the EF-SGD gradient compressor.
 
-Two distinct kinds of "int8 on the wire" live here:
+Three distinct kinds of "int8 on the wire" live here:
 
 * ``SliceWire`` — **lossless**. The Ozaki operands already *are* exact
   int8 mantissa slices + per-row power-of-two exponents, so shipping
@@ -10,6 +10,12 @@ Two distinct kinds of "int8 on the wire" live here:
   anywhere (pack/unpack are pure transposes). ``parallel.ozaki_shard``
   all-gathers ``SliceWire`` stacks for m/n-sharded layouts; the
   byte accounting feeds ``core.tuning.comm_bytes_model``.
+* ``ResidueWire`` — **lossless**, the Scheme II sibling. The residue
+  pipeline's operand representation is the centered int8 residue stack
+  (one plane per CRT modulus, ``core.modular.residues_from_slices``)
+  plus the same per-row exponents — ``ell`` bytes per element on the
+  wire. Both wires share the pack/unpack shape discipline (sharded dim
+  leading) and the ``wire_nbytes`` accounting.
 * ``compress_psum`` — **lossy** (EF-SGD). The gradient all-reduce is
   replaced by: quantize local grad to int8 against a global per-tensor
   scale (pmax), *exact* int32 psum of the quantized values (associative
@@ -67,10 +73,52 @@ def slice_wire_bytes(rows: int, k: int, num_splits: int) -> int:
     return rows * num_splits * k + 4 * rows
 
 
-def wire_nbytes(wire: SliceWire) -> int:
-    """Actual byte count of a wire's arrays (must match the model)."""
-    return int(wire.slices.size) * wire.slices.dtype.itemsize + \
-        int(wire.exp.size) * wire.exp.dtype.itemsize
+class ResidueWire(NamedTuple):
+    """The packed int8-residue transport format (lossless, gather-ready).
+
+    Scheme II stores residues as ``(ell, r, k)`` — modulus index
+    leading, the batched-GEMM layout. On the wire the SHARDED dimension
+    leads (the same discipline as ``SliceWire``), so a gather over dim 0
+    concatenates row blocks into the global residue stack:
+
+    residues: int8 ``(r, ell, k)`` — row-major centered residue stack,
+              one plane per CRT modulus (|value| <= (m_j - 1) / 2).
+    exp:      int32 ``(r,)`` — per-row shared power-of-two exponents.
+    moduli:   static tuple of the CRT moduli (shape-derived metadata,
+              identical on every device by construction — like
+              ``SliceWire.w`` it never crosses the wire as an array).
+    """
+
+    residues: jax.Array
+    exp: jax.Array
+    moduli: tuple
+
+
+def pack_residues(residues: jax.Array, exp: jax.Array,
+                  moduli) -> ResidueWire:
+    """(ell, r, k) residue stack -> wire layout. Exact: a transpose."""
+    return ResidueWire(jnp.swapaxes(residues, 0, 1), exp, tuple(moduli))
+
+
+def unpack_residues(wire: ResidueWire) -> tuple[jax.Array, jax.Array]:
+    """Wire layout -> ((ell, r, k) residues, exp). Exact inverse of
+    ``pack_residues``."""
+    return jnp.swapaxes(wire.residues, 0, 1), wire.exp
+
+
+def residue_wire_bytes(rows: int, k: int, num_moduli: int) -> int:
+    """Bytes one device contributes to a ResidueWire gather: the int8
+    residue stack plus the int32 exponent vector (``moduli`` static)."""
+    return rows * num_moduli * k + 4 * rows
+
+
+def wire_nbytes(wire) -> int:
+    """Actual byte count of a wire's arrays (must match the models) —
+    the shared protocol over both wire formats: every non-scalar array
+    field is payload, static metadata (``w`` / ``moduli``) costs
+    nothing — even when a tracer has turned it into a 0-d array."""
+    return sum(int(v.size) * v.dtype.itemsize for v in wire
+               if hasattr(v, "dtype") and getattr(v, "ndim", 0) > 0)
 
 
 class EFState(NamedTuple):

@@ -58,6 +58,19 @@ one mesh axis, the reduction over another; the batch folds into rows
 locally (row-independent, exact) and the k-shard machinery above runs
 unchanged.
 
+**Scheme II** (``distributed_ozaki2_matmul`` / ``ozaki2_matmul_mnshard``):
+the residue pipeline rides the same two layouts. k-shard: the residue
+map is per-element in k, so each device's ``(ell, m, n)`` int32 residue
+partials reduce with ONE stacked integer collective (``psum`` /
+``reduce_scatter``) and the balanced-Garner CRT runs once on the reduced
+stack — ``ell`` modulus planes cross the wire instead of Scheme I's
+``s`` anti-diagonals. m/n-shard: the packed ``ResidueWire`` (int8
+centered residues + int32 exponents, ``parallel.compression``) is
+ring-all-gathered — ``ell`` bytes per element, beating the SliceWire's
+``s`` exactly when ``ell < s``. Both are bitwise identical to the
+single-device reference (the policy spec's
+``ozaki2-fp64|shard=AXIS|comm=int8`` route).
+
 Batched GSPMD composition: ``ozaki_matmul_kshard_auto`` accepts the
 batched API's operand ranks ((B, m, k) activations with stacked or
 broadcast weights) and records the axis on the config so the
@@ -80,15 +93,20 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.executors import gemm_xla, get_executor, int32_to_dw
+from repro.core.modular import (ModularConfig, center_mod, crt_digits,
+                                crt_value, garner_constants,
+                                residues_from_slices, usable_moduli)
 from repro.core.ozaki import OzakiConfig, resolve_accuracy_config
 from repro.core.splitting import SplitResult, row_exponents, split_int
 from repro.core.xmath import DW, dw_add
 from repro.parallel.collectives import (psum_exact_int32, reduce_scatter_sum,
                                         ring_all_gather)
-from repro.parallel.compression import SliceWire, pack_slices
+from repro.parallel.compression import (ResidueWire, SliceWire, pack_residues,
+                                        pack_slices, unpack_residues)
 
 KSHARD_SCHEDULES = ("psum", "overlap", "reduce_scatter", "rs_stream")
 MNSHARD_SCHEDULES = ("allgather", "overlap")
+OZAKI2_KSHARD_SCHEDULES = ("psum", "reduce_scatter")
 
 
 def _diag_gemms(sa, sb, pairs) -> jax.Array:
@@ -352,6 +370,140 @@ def ozaki_matmul_mnshard(a: jax.Array, b: jax.Array, mesh: Mesh,
         e_base = (sa.exp[:, None].astype(jnp.int32) +
                   exp[None, :].astype(jnp.int32))
         return ex.contract(sa, sb, w, e_base, (a_blk.shape[0], n))
+
+    # check_rep=False: Pallas kernels have no shard_map replication rule
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(axis, None), P(None, axis)),
+                   out_specs=P(axis, None), check_rep=False)
+    return fn(a, b)
+
+
+def _kshard_local2(a_blk, b_blk, plan, moduli, w: int, axis: str,
+                   schedule: str):
+    """The per-device Scheme II k-shard pipeline (runs inside shard_map).
+
+    The residue map is per-element in k, so local residue partial
+    products sum EXACTLY (int32 collectives are associative) to the
+    product of the global residue operands — the reference's single
+    batched GEMM. Centering, Garner digits, and the f64 CRT sum run
+    once, on the reduced stack, replaying the reference's exact op
+    sequence: bitwise identity for any device count. int32 headroom is
+    the ``usable_moduli(k_global)`` guarantee — the global bound already
+    covers every shard-partial and every psum intermediate (each is a
+    partial sum of the same <= k_global bounded terms).
+    """
+    # 1. global shared exponents, 2. local slices against them — the
+    # Scheme I k-shard discipline, unchanged
+    ea = jax.lax.pmax(row_exponents(a_blk), axis)
+    eb = jax.lax.pmax(row_exponents(b_blk.T), axis)
+    sa = split_int(a_blk, plan.num_splits, w, exp=ea)
+    sb = split_int(b_blk.T, plan.num_splits, w, exp=eb)
+    # 3. local centered residues + ONE batched int8 GEMM over the
+    # modulus axis: only the (ell, m, n) int32 residue partials (and the
+    # int32 exponent pmaxes) ever cross a link
+    ra = residues_from_slices(sa.slices, w, moduli)
+    rb = residues_from_slices(sb.slices, w, moduli)
+    p = gemm_xla(ra, rb)
+    if schedule == "reduce_scatter":
+        # scatter over output columns: each chip keeps n/P columns of
+        # every modulus plane, exactly reduced; CRT runs on 1/P of the
+        # output per chip. eb must follow the column block.
+        p = reduce_scatter_sum(p, axis, scatter_dim=2)
+        nloc = p.shape[2]
+        idx = jax.lax.axis_index(axis)
+        eb = jax.lax.dynamic_slice_in_dim(eb, idx * nloc, nloc)
+    else:
+        p = psum_exact_int32(p, axis)
+    # 4. CRT reconstruction on the reduced products
+    digits = crt_digits(center_mod(p, moduli), moduli)
+    e_base = ea[:, None].astype(jnp.int32) + eb[None, :].astype(jnp.int32)
+    return crt_value(digits, moduli, plan.beta, e_base)
+
+
+def distributed_ozaki2_matmul(a: jax.Array, b: jax.Array, mesh: Mesh,
+                              cfg: ModularConfig = ModularConfig(),
+                              axis: str = "model",
+                              schedule: str = "psum") -> jax.Array:
+    """Scheme II C = A @ B with k sharded over ``mesh[axis]``.
+
+    The residue-system sibling of ``distributed_ozaki_matmul``: global
+    pmax exponents, local integerization, local centered residues, one
+    local batched int8 GEMM — then ONE int32 collective over the
+    stacked ``(ell, m, n)`` residue partials (``schedule="psum"``
+    replicates C; ``schedule="reduce_scatter"`` leaves C column-sharded
+    with half the link traffic). NO f64 operand crosses a link
+    (``comm="int8"`` in the policy spec; ``comm_bytes_model`` with
+    ``scheme="ozaki2_fp64"`` prices it), and the result is bitwise
+    identical to the single-device reference for any mesh shape.
+    """
+    if schedule not in OZAKI2_KSHARD_SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; expected one of "
+                         f"{OZAKI2_KSHARD_SCHEDULES}")
+    if a.dtype != jnp.float64 or b.dtype != jnp.float64:
+        raise TypeError(f"distributed_ozaki2_matmul takes f64 operands, "
+                        f"got {a.dtype} @ {b.dtype}")
+    k_global = a.shape[1]
+    plan = cfg.plan(k_global)
+    moduli = usable_moduli(k_global)[:plan.num_moduli]
+    w = cfg.w
+
+    def local(a_blk, b_blk):
+        return _kshard_local2(a_blk, b_blk, plan, moduli, w, axis, schedule)
+
+    col = axis if schedule == "reduce_scatter" else None
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(None, axis), P(axis, None)),
+                   out_specs=P(None, col), check_rep=False)
+    return fn(a, b)
+
+
+def ozaki2_matmul_mnshard(a: jax.Array, b: jax.Array, mesh: Mesh,
+                          cfg: ModularConfig = ModularConfig(),
+                          axis: str = "model") -> jax.Array:
+    """Scheme II C = A @ B with A row-sharded, B column-sharded.
+
+    Full k is local, so operands split against purely local exponents;
+    what crosses the mesh is the packed ``ResidueWire`` of B's column
+    block — ``ell`` bytes per element + an int32 exponent vector instead
+    of 8-byte f64 words (vs the SliceWire's ``s``: the residue wire wins
+    exactly when ``ell < s``, the same arbitration
+    ``comm_bytes_model(scheme="ozaki2_fp64", layout="mnshard")``
+    encodes). The gathered stack IS the residue operand the reference
+    executor computes, so every backend — including the fused-CRT
+    epilogue kernel — contracts it to the bitwise-identical result.
+    """
+    world = mesh.shape[axis]
+    k = a.shape[1]
+    plan = cfg.plan(k)
+    moduli = usable_moduli(k)[:plan.num_moduli]
+    w = cfg.w
+
+    def local(a_blk, b_blk):
+        ex = get_executor(plan)
+        sa = ex.split(a_blk, w)                     # local rows of A
+        sb_loc = ex.split(b_blk.T, w)               # local cols of B
+        rb_loc = residues_from_slices(sb_loc.slices, w, moduli)
+        wire = pack_residues(rb_loc, sb_loc.exp, moduli)  # (n_loc, ell, k)
+        gathered = ResidueWire(
+            ring_all_gather(wire.residues, axis, world),   # (n, ell, k)
+            ring_all_gather(wire.exp, axis, world),        # (n,)
+            wire.moduli)
+        rb, exp = unpack_residues(gathered)                # (ell, n, k)
+        ra = residues_from_slices(sa.slices, w, moduli)
+        e_base = (sa.exp[:, None].astype(jnp.int32) +
+                  exp[None, :].astype(jnp.int32))
+        if plan.fusion == "epilogue":
+            from repro.kernels import int8_matmul_nt_crt
+            mods, qmod, inv, scales = garner_constants(moduli, plan.beta)
+            tile = plan.tile
+            out = int8_matmul_nt_crt(ra, rb, moduli=mods, qmod=qmod,
+                                     inv=inv, scales=scales, bm=tile.bm,
+                                     bn=tile.bn, bk=tile.bk,
+                                     interpret=plan.interpret)
+            return jnp.ldexp(out, e_base)
+        p = ex.gemm(ra, rb)
+        digits = crt_digits(center_mod(p, moduli), moduli)
+        return crt_value(digits, moduli, plan.beta, e_base)
 
     # check_rep=False: Pallas kernels have no shard_map replication rule
     fn = shard_map(local, mesh=mesh,

@@ -89,6 +89,38 @@ def test_plan_cache_version_mismatch_falls_back(tmp_path):
     assert plan == select_pipeline_plan(8, 16, 32, accum="f64")
 
 
+def test_plan_cache_version_stays_3_and_scheme2_plans_degrade(tmp_path):
+    """ISSUE 9 satellite: the fused-CRT epilogue route reuses the
+    existing ``fusion`` field — no new PlanKey/PipelinePlan identity
+    field, so the cache version MUST stay 3 (a bump would orphan every
+    cached plan for no schema reason). And a FUTURE-versioned file
+    carrying a Scheme II epilogue plan still degrades to empty + the
+    analytic default rather than resurrecting a stale schema."""
+    assert PLAN_CACHE_VERSION == 3
+    path = tmp_path / "plans.json"
+    cache = PlanCache(path)
+    key = PlanKey(m=8, n=16, k=96, batch=1, dtype="float64",
+                  backend="pallas_fused", device_kind="cpu")
+    from repro.core.modular import modular_plan
+    plan2 = modular_plan(96, backend="pallas_fused", fuse_epilogue=True)
+    assert plan2.fusion == "epilogue"       # round-trips under version 3
+    cache.put(key, plan2)
+    cache.save()
+    back = PlanCache.load(path)
+    assert back.get(key) == plan2
+    data = json.loads(path.read_text())
+    data["version"] = PLAN_CACHE_VERSION + 1
+    path.write_text(json.dumps(data))
+    with pytest.warns(UserWarning, match="version"):
+        back = PlanCache.load(path)
+    assert len(back) == 0
+    plan = select_pipeline_plan(8, 16, 96, cache=back, accum="f64",
+                                scheme="ozaki2_fp64")
+    assert plan == select_pipeline_plan(8, 16, 96, accum="f64",
+                                        scheme="ozaki2_fp64")
+    assert plan.fusion == "epilogue"        # the analytic default route
+
+
 @pytest.mark.parametrize("content", ["{not json", '{"plans": 7}',
                                      '{"version": 1, "plans": '
                                      '{"x": {"plan": {"bogus": 1}}}}'])

@@ -1,5 +1,5 @@
-"""parallel.compression: the SliceWire transport (lossless) and the
-EF-SGD int8 gradient compressor (lossy, error-bounded).
+"""parallel.compression: the SliceWire/ResidueWire transports (lossless)
+and the EF-SGD int8 gradient compressor (lossy, error-bounded).
 
 Single-device properties; the mesh behaviour lives in test_distributed.
 """
@@ -59,6 +59,110 @@ def test_slice_wire_reconstructs_operand():
     rel = np.abs(np.asarray(reconstruct(sr)) - np.asarray(x))
     exp = np.asarray(sr.exp)
     assert (rel <= np.ldexp(1.0, exp - sr.w * 7 + 1)[:, None]).all()
+
+
+# ----------------------------------------------------------------------------
+# ResidueWire: the Scheme II sibling — same wire discipline, ell planes
+# ----------------------------------------------------------------------------
+
+def _residues(rows=12, k=40, s=5, ell=6):
+    from repro.core.modular import residues_from_slices, usable_moduli
+    from repro.core.splitting import split_int
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((rows, k))
+                    * np.exp(rng.integers(-10, 10, (rows, 1))))
+    sr = split_int(x, s, 7)
+    moduli = usable_moduli(k)[:ell]
+    return residues_from_slices(sr.slices, 7, moduli), sr.exp, moduli
+
+
+def test_residue_wire_round_trip_exact():
+    from repro.parallel.compression import pack_residues, unpack_residues
+    res, exp, moduli = _residues()
+    wire = pack_residues(res, exp, moduli)
+    assert wire.residues.dtype == jnp.int8
+    assert wire.residues.shape == (12, 6, 40)     # sharded dim leads
+    assert wire.moduli == tuple(moduli)           # static metadata
+    back, back_exp = unpack_residues(wire)
+    assert np.array_equal(np.asarray(back), np.asarray(res))
+    assert np.array_equal(np.asarray(back_exp), np.asarray(exp))
+
+
+def test_residue_wire_byte_model_matches_arrays():
+    from repro.parallel.compression import (pack_residues,
+                                            residue_wire_bytes,
+                                            slice_wire_bytes, wire_nbytes)
+    res, exp, moduli = _residues(rows=12, k=40, s=5, ell=6)
+    wire = pack_residues(res, exp, moduli)
+    assert wire_nbytes(wire) == residue_wire_bytes(12, 40, 6)
+    # the headline economics: ell bytes/element (+exp) vs 8 for f64
+    assert residue_wire_bytes(12, 40, 6) < 8 * 12 * 40
+    # cross-wire arbitration: the residue wire beats the slice wire
+    # exactly when ell < s (the comm_bytes_model honesty rule)
+    assert residue_wire_bytes(12, 40, 4) < slice_wire_bytes(12, 40, 5)
+    assert residue_wire_bytes(12, 40, 6) > slice_wire_bytes(12, 40, 5)
+
+
+def test_residue_wire_reconstruction_exact():
+    """Wire-round-tripped residues feed the CRT pipeline to the bitwise-
+    identical product: the transport is pure transposes, so the Garner
+    digits — and hence the f64 reconstruction — cannot move a bit."""
+    from repro.core.modular import (ModularConfig, center_mod, crt_digits,
+                                    crt_value, ozaki2_matmul,
+                                    residues_from_slices, usable_moduli)
+    from repro.core.splitting import split_int
+    from repro.parallel.compression import pack_residues, unpack_residues
+    rng = np.random.default_rng(2)
+    m, k, n = 8, 96, 10
+    a = jnp.asarray(rng.standard_normal((m, k))
+                    * np.exp(rng.integers(-8, 8, (m, 1))))
+    b = jnp.asarray(rng.standard_normal((k, n)))
+    cfg = ModularConfig()
+    plan = cfg.plan(k)
+    moduli = usable_moduli(k)[:plan.num_moduli]
+    sa = split_int(a, plan.num_splits, cfg.w)
+    sb = split_int(b.T, plan.num_splits, cfg.w)
+    ra = residues_from_slices(sa.slices, cfg.w, moduli)
+    rb = residues_from_slices(sb.slices, cfg.w, moduli)
+    rb_wire, exp = unpack_residues(pack_residues(rb, sb.exp, moduli))
+    from repro.core.executors import gemm_xla
+    p = gemm_xla(ra, rb_wire)
+    digits = crt_digits(center_mod(p, moduli), moduli)
+    e_base = (sa.exp[:, None].astype(jnp.int32) +
+              exp[None, :].astype(jnp.int32))
+    c = crt_value(digits, moduli, plan.beta, e_base)
+    assert np.array_equal(np.asarray(c),
+                          np.asarray(ozaki2_matmul(a, b, cfg)))
+
+
+def test_residue_wire_round_trip_property():
+    pytest.importorskip("hypothesis",
+                        reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+    from repro.core.modular import usable_moduli
+    from repro.parallel.compression import (pack_residues,
+                                            residue_wire_bytes,
+                                            unpack_residues, wire_nbytes)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31), rows=st.integers(1, 9),
+           k=st.integers(1, 33), ell=st.integers(1, 8))
+    def prop(seed, rows, k, ell):
+        moduli = usable_moduli(max(k, 1))[:ell]
+        rng = np.random.default_rng(seed)
+        halves = (np.asarray(moduli, np.int64)[:, None, None] - 1) // 2
+        res = jnp.asarray(
+            rng.integers(-halves, halves + 1, (len(moduli), rows, k)),
+            jnp.int8)
+        exp = jnp.asarray(rng.integers(-50, 50, (rows,)), jnp.int32)
+        wire = pack_residues(res, exp, moduli)
+        back, back_exp = unpack_residues(wire)
+        assert np.array_equal(np.asarray(back), np.asarray(res))
+        assert np.array_equal(np.asarray(back_exp), np.asarray(exp))
+        assert wire_nbytes(wire) == residue_wire_bytes(rows, k,
+                                                       len(moduli))
+
+    prop()
 
 
 # ----------------------------------------------------------------------------

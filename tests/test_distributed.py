@@ -342,6 +342,63 @@ print('OK')
     assert "OK" in out
 
 
+def test_scheme2_int8_transport_parity_matrix():
+    """Scheme II residue-wire transport: every k-shard schedule x
+    backend (fused-CRT epilogue included) and the ResidueWire mnshard
+    gather are BITWISE identical to the single-device reference, across
+    mesh shapes — and the ``ozaki2-fp64|shard=model|comm=int8`` policy
+    spec routes the facade onto the same schedules."""
+    out = run_multidevice("""
+import jax
+jax.config.update('jax_enable_x64', True)
+import numpy as np, jax.numpy as jnp
+import repro
+from repro.api import MatmulPolicy
+from repro.core.modular import ModularConfig, ozaki2_matmul
+from repro.launch.mesh import make_mesh_compat
+from repro.parallel.ozaki_shard import (distributed_ozaki2_matmul,
+                                        ozaki2_matmul_mnshard,
+                                        use_shard_mesh)
+rng = np.random.default_rng(13)
+m, k, n = 16, 256, 24
+a = jnp.asarray(rng.uniform(-0.5, 0.5, (m, k))
+                * np.exp(rng.standard_normal((m, k))))
+b = jnp.asarray(rng.uniform(-0.5, 0.5, (k, n)))
+mesh = make_mesh_compat((1, 8), ('data', 'model'))
+for cfg in (ModularConfig(),
+            ModularConfig(backend='pallas_fused', fuse_epilogue=True)):
+    ref = np.asarray(ozaki2_matmul(a, b, cfg))
+    tag = cfg.backend + ('+epi' if cfg.fuse_epilogue else '')
+    for sched in ('psum', 'reduce_scatter'):
+        got = np.asarray(distributed_ozaki2_matmul(
+            a, b, mesh, cfg, axis='model', schedule=sched))
+        assert np.array_equal(got, ref), f'kshard/{sched}/{tag}'
+    got = np.asarray(ozaki2_matmul_mnshard(a, b, mesh, cfg, axis='model'))
+    assert np.array_equal(got, ref), f'mnshard/{tag}'
+# mesh-shape elasticity: 4-way k-shard reproduces the same bits
+mesh2 = make_mesh_compat((2, 4), ('data', 'model'))
+cfg = ModularConfig()
+ref = np.asarray(ozaki2_matmul(a, b, cfg))
+got = np.asarray(distributed_ozaki2_matmul(a, b, mesh2, cfg,
+                                           axis='model'))
+assert np.array_equal(got, ref), 'kshard 4-way'
+# facade: the policy spec routes onto the explicit residue schedules
+pol = MatmulPolicy.parse('ozaki2-fp64|shard=model|comm=int8')
+ref_f = np.asarray(repro.matmul(a, b, MatmulPolicy.parse('ozaki2-fp64')))
+with use_shard_mesh(mesh):
+    got_f = np.asarray(repro.matmul(a, b, pol))
+assert np.array_equal(got_f, ref_f), 'facade ozaki2 comm=int8'
+# schedule validation refuses loudly
+try:
+    distributed_ozaki2_matmul(a, b, mesh, cfg, schedule='overlap')
+    raise SystemExit('unknown schedule must refuse')
+except ValueError as e:
+    assert 'schedule' in str(e)
+print('OK')
+""", timeout=900)
+    assert "OK" in out
+
+
 @pytest.mark.xfail(jax.__version__ == "0.4.37", strict=True,
                    reason="with_sharding_constraint on Ozaki operands "
                           "inside _scan_decoder produces wrong logits on "

@@ -504,13 +504,35 @@ def test_target_pinned_hit_accepts_other_family():
 def test_pipeline_plan_scheme2_validation():
     good = modular_plan(96)
     assert good.fusion in ("none", "stages")
+    # the fused-CRT epilogue is a first-class Scheme II fusion mode now
+    epi = dataclasses.replace(good, backend="pallas_fused",
+                              fusion="epilogue")
+    assert epi.fusion == "epilogue" and epi.num_gemms == good.num_gemms
     with pytest.raises(ValueError):
         dataclasses.replace(good, accum="df32")
     with pytest.raises(ValueError):
-        dataclasses.replace(good, fusion="epilogue")
+        dataclasses.replace(good, fusion="streaming")
     with pytest.raises(ValueError):
         dataclasses.replace(good, pair_policy="diagonal")
     with pytest.raises(ValueError):
         dataclasses.replace(good, beta=0)
     with pytest.raises(ValueError):
         PipelinePlan(scheme="nope")
+
+
+def test_modular_plan_fuse_epilogue_threading():
+    plan = modular_plan(96, backend="pallas_fused", fuse_epilogue=True)
+    assert plan.fusion == "epilogue"
+    with pytest.raises(ValueError, match="pallas_fused"):
+        modular_plan(96, backend="xla", fuse_epilogue=True)
+    # select_pipeline_plan's default (pallas_fused + fuse_epilogue=True)
+    # now lands on the fused-CRT plan; fuse_epilogue=False keeps stages
+    sel = select_pipeline_plan(8, 16, 96, accum="f64",
+                               scheme="ozaki2_fp64")
+    assert sel.fusion == "epilogue"
+    sel2 = select_pipeline_plan(8, 16, 96, accum="f64",
+                                scheme="ozaki2_fp64", fuse_epilogue=False)
+    assert sel2.fusion == "stages"
+    with pytest.raises(ValueError, match="streaming"):
+        select_pipeline_plan(8, 16, 96, accum="f64",
+                             scheme="ozaki2_fp64", streaming=True)

@@ -52,6 +52,11 @@ ROUND_TRIP_SPECS = [
     "ozaki-fp64x5@2.5e-09:fast,budget:7/pallas_fused",
     "ozaki-fp64x9|shard=model|comm=int8",
     "ozaki-fp64/pallas_fused+epilogue|shard=model|comm=int8",
+    "ozaki2-fp64",
+    "ozaki2-fp64x15",
+    "ozaki2-fp64/pallas_fused+epilogue",
+    "ozaki2-fp64|shard=model|comm=int8",
+    "ozaki2-fp64/pallas_fused+epilogue|shard=model|comm=int8",
 ]
 
 
@@ -335,6 +340,50 @@ def test_matmul_parity_complex(rng):
     got = repro.matmul(a, b, precision="ozaki-fp64x9")
     legacy = ozaki_matmul_complex(a, b, OzakiConfig(num_splits=9))
     np.testing.assert_array_equal(np.asarray(got), np.asarray(legacy))
+
+
+def test_matmul_parity_scheme2_routes(rng):
+    """ISSUE 9: the unified Scheme II facade. The fused-CRT ``+epilogue``
+    spec is bitwise-equal to the unfused XLA reference; complex128 and
+    float32 operands route to the residue decomposition drivers instead
+    of the stale rejections."""
+    from repro.core.modular import (ModularConfig, ozaki2_matmul,
+                                    ozaki2_matmul_complex,
+                                    ozaki2_matmul_df32)
+    a, b = _phi_matrix(rng, 12, 96), _phi_matrix(rng, 96, 10)
+    ref = ozaki2_matmul(a, b, ModularConfig())
+    got = repro.matmul(a, b, precision="ozaki2-fp64/pallas_fused+epilogue")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    # complex128 — 2x2 real block decomposition over residue GEMMs
+    ac = _phi_matrix(rng, 12, 48) + 1j * _phi_matrix(rng, 12, 48)
+    bc = _phi_matrix(rng, 48, 10) + 1j * _phi_matrix(rng, 48, 10)
+    gotc = repro.matmul(ac, bc, precision="ozaki2-fp64")
+    legc = ozaki2_matmul_complex(ac, bc, ModularConfig())
+    np.testing.assert_array_equal(np.asarray(gotc), np.asarray(legc))
+    # float32 — df32 reconstruction target
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    got32 = repro.matmul(a32, b32, precision="ozaki2-fp64")
+    leg32 = ozaki2_matmul_df32(a32, b32, ModularConfig())
+    assert got32.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(got32), np.asarray(leg32))
+
+
+def test_scheme2_rejection_table_is_current():
+    """ISSUE 9 satellite: the rejection table only names knobs Scheme II
+    truly lacks — the stale complex/df32 entries (and their 'no complex
+    path yet' message) are gone, and what remains points at the
+    supported alternative."""
+    from repro.api import _OZAKI2_REJECTED
+    assert set(_OZAKI2_REJECTED) == {"streaming", "fast_mode",
+                                     "pair_policy"}
+    assert not any("complex" in why for why in _OZAKI2_REJECTED.values())
+    with pytest.raises(ValueError, match="streaming.*\\+epilogue|"
+                                         "\\+epilogue.*streaming"):
+        MatmulPolicy.parse("ozaki2-fp64/pallas_fused+streaming")
+    with pytest.raises(ValueError, match="no pair schedule"):
+        MatmulPolicy.parse("ozaki2-fp64:fast")
+    with pytest.raises(ValueError, match="no pair schedule"):
+        MatmulPolicy.parse("ozaki2-fp64:diagonal")
 
 
 def test_matmul_bf16_and_int8_schemes(rng):

@@ -257,8 +257,58 @@ def test_hbm_pass_model_matrix_pinned(fusion, layout, batch):
     got = hbm_pass_model(9, batch=batch, batch_layout=layout,
                          **_FUSIONS[fusion])
     split, slices, accum, total = (batch * x for x in _PINNED_S9[fusion])
-    assert got == {"split": split, "slices": slices, "accum": accum,
+    assert got == {"split": split, "slices": slices, "residues": 0,
+                   "accum": accum,
                    "total": total}, (fusion, layout, batch, got)
+
+
+# ----------------------------------------------------------------------------
+# HBM pass model, Scheme II: the residues line item + the fused-CRT win
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,ell", [(7, 15), (9, 15), (9, 21)])
+def test_hbm_pass_model_scheme2_epilogue_strictly_fewer(s, ell):
+    """ISSUE 9 acceptance: the fused-CRT epilogue is strictly fewer
+    modeled passes than every unfused Scheme II mode — the saved traffic
+    is exactly the (ell, m, n) int32 residue products' round-trip."""
+    kw = dict(scheme="ozaki2_fp64", num_moduli=ell)
+    unfused = hbm_pass_model(s, fused=False, **kw)
+    stages = hbm_pass_model(s, fused=True, **kw)
+    epi = hbm_pass_model(s, fused=True, fuse_epilogue=True, **kw)
+    assert epi["total"] < stages["total"] < unfused["total"]
+    assert stages["accum"] - epi["accum"] == 2 * ell
+    # every mode pays the residue-plane traffic; the slice stack is read
+    # once by the extraction, never per pair
+    for got in (unfused, stages, epi):
+        assert got["residues"] == 2 * ell and got["slices"] == 2 * s
+
+
+def test_hbm_pass_model_scheme2_pinned():
+    # s=9, ell=15 columns: (split, slices, residues, accum, total)
+    pins = {"none": (9, 18, 30, 31, 88), "stages": (1, 18, 30, 31, 80),
+            "epilogue": (1, 18, 30, 1, 50)}
+    for fusion, (split, slices, residues, accum, total) in pins.items():
+        got = hbm_pass_model(9, fusion=fusion, scheme="ozaki2_fp64",
+                             num_moduli=15)
+        assert got == {"split": split, "slices": slices,
+                       "residues": residues, "accum": accum,
+                       "total": total}, (fusion, got)
+    b = hbm_pass_model(9, fusion="epilogue", scheme="ozaki2_fp64",
+                       num_moduli=15, batch=4, batch_layout="grid")
+    assert b["total"] == 4 * 50
+
+
+def test_hbm_pass_model_scheme2_validation():
+    with pytest.raises(ValueError, match="num_moduli"):
+        hbm_pass_model(9, scheme="ozaki2_fp64")
+    with pytest.raises(ValueError, match="streaming"):
+        hbm_pass_model(9, fusion="streaming", scheme="ozaki2_fp64",
+                       num_moduli=15)
+    with pytest.raises(ValueError, match="pair"):
+        hbm_pass_model(9, scheme="ozaki2_fp64", num_moduli=15,
+                       pair_policy="diagonal")
+    with pytest.raises(ValueError, match="scheme"):
+        hbm_pass_model(9, scheme="bogus")
 
 
 def test_hbm_pass_model_batched_epilogue_closes_fusion_gap():
@@ -354,6 +404,35 @@ def test_comm_bytes_model_structure():
         comm_bytes_model(8, 8, 8, num_splits=9, world=2, schedule="bogus")
     with pytest.raises(ValueError, match="world"):
         comm_bytes_model(8, 8, 8, num_splits=9, world=0)
+
+
+def test_comm_bytes_model_scheme2():
+    """Scheme II transport: k-shard int8 ships ell int32 residue planes
+    (no f64 operand word ever crosses); m/n-shard gathers the packed
+    ResidueWire at ell bytes/element vs f64's 8."""
+    from repro.core.tuning import comm_bytes_model
+    kw = dict(num_splits=9, world=8, scheme="ozaki2_fp64", num_moduli=15)
+    f64 = comm_bytes_model(256, 256, 8192, layout="kshard", comm="f64",
+                           **kw)
+    i8 = comm_bytes_model(256, 256, 8192, layout="kshard", comm="int8",
+                          **kw)
+    assert i8["operands"] == 0 and i8["partials"] > 0
+    assert f64["total"] > i8["total"]      # tall k amortizes the planes
+    rs = comm_bytes_model(256, 256, 8192, layout="kshard", comm="int8",
+                          schedule="reduce_scatter", **kw)
+    assert rs["partials"] * 2 == i8["partials"]
+    # mnshard honesty: ell=15 > 8 loses, ell=5 < 8 wins
+    for ell, wins in ((5, True), (15, False)):
+        g64 = comm_bytes_model(256, 256, 4096, num_splits=9, world=8,
+                               layout="mnshard", comm="f64",
+                               scheme="ozaki2_fp64", num_moduli=ell)
+        gi8 = comm_bytes_model(256, 256, 4096, num_splits=9, world=8,
+                               layout="mnshard", comm="int8",
+                               scheme="ozaki2_fp64", num_moduli=ell)
+        assert (gi8["total"] < g64["total"]) == wins, (ell, gi8, g64)
+    with pytest.raises(ValueError, match="num_moduli"):
+        comm_bytes_model(8, 8, 8, num_splits=9, world=2,
+                         scheme="ozaki2_fp64")
 
 
 # ----------------------------------------------------------------------------
